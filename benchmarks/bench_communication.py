@@ -1,0 +1,35 @@
+"""Paper Remark 1: communication-cost reduction of linearly increasing
+sample sequences. Rounds (= model exchanges) needed for K gradient
+computations: linear s_i = 10*i vs constant s = 10 — T ~ sqrt(2K/a) vs
+T ~ K/10 — plus measured bytes on the real LSTM training path."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, stock_datasets, timed
+from repro.core.schedules import (ConstantSchedule, SampleSchedule,
+                                  communication_rounds_constant)
+from repro.training.loop import train_rnn_local_sgd
+
+
+def main() -> None:
+    lin = SampleSchedule(a=10)
+    for k in (10_000, 100_000, 288_375):   # paper K = 288375
+        t_lin = lin.rounds_for_budget(k)
+        t_const = communication_rounds_constant(k, 10)
+        row(f"communication/rounds/K{k}", 0.0,
+            f"linear={t_lin};constant={t_const};"
+            f"reduction={t_const/t_lin:.1f}x")
+
+    train_ds, test_ds = stock_datasets("AAPL")
+    for name, sched in (("linear", SampleSchedule(a=10)),
+                        ("constant", ConstantSchedule(size=10))):
+        res, us = timed(train_rnn_local_sgd, train_ds, test_ds,
+                        n_workers=2, iterations=1000, batch=32,
+                        schedule=sched, repeat=1)
+        row(f"communication/train2w/{name}", us,
+            f"comms={res.communications};bytes={res.comm_bytes};"
+            f"mse={res.test_mse:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: Pallas (interpret mode on CPU — correctness
+path) vs the pure-jnp reference, at paper-relevant shapes. On-CPU wall
+time is NOT a TPU performance claim; the derived column carries the
+allclose max-error vs the oracle, which is the meaningful number here."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timed
+
+RNG = np.random.default_rng(0)
+
+
+def main() -> None:
+    # LSTM cell at the paper's model size
+    B, I, H = 32, 5, 64
+    x = jnp.asarray(RNG.standard_normal((B, I)).astype(np.float32))
+    h = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+    c = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+    wx = jnp.asarray(0.1 * RNG.standard_normal((I, 4 * H)), jnp.float32)
+    wh = jnp.asarray(0.1 * RNG.standard_normal((H, 4 * H)), jnp.float32)
+    b = jnp.asarray(0.1 * RNG.standard_normal(4 * H), jnp.float32)
+    from repro.kernels.lstm.ops import lstm_cell_fused
+    from repro.kernels.lstm.ref import lstm_cell_ref
+    (hn, _), us = timed(lambda: jax.block_until_ready(
+        lstm_cell_fused(x, h, c, wx, wh, b)))
+    hr, _ = lstm_cell_ref(x, h, c, wx, wh, b)
+    err = float(jnp.max(jnp.abs(hn - hr)))
+    row("kernels/lstm_cell_32x64", us, f"max_err={err:.2e}")
+
+    # EVL at epoch size
+    n = 16384
+    u = jnp.asarray(RNG.uniform(0.01, 0.99, n).astype(np.float32))
+    v = jnp.asarray((RNG.uniform(size=n) < 0.05).astype(np.float32))
+    from repro.kernels.evl.ops import evl_loss_fused
+    from repro.kernels.evl.ref import evl_loss_ref
+    got, us = timed(lambda: jax.block_until_ready(
+        evl_loss_fused(u, v, 0.95, 0.05, 2.0, reduce="none")))
+    err = float(jnp.max(jnp.abs(got - evl_loss_ref(u, v, 0.95, 0.05, 2.0))))
+    row("kernels/evl_16k", us, f"max_err={err:.2e}")
+
+    # flash attention, prefill-like tile
+    Bq, S, Hq, Hkv, D = 1, 512, 8, 2, 64
+    q = jnp.asarray(RNG.standard_normal((Bq, S, Hq, D)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((Bq, S, Hkv, D)).astype(np.float32))
+    vv = jnp.asarray(RNG.standard_normal((Bq, S, Hkv, D)).astype(np.float32))
+    from repro.kernels.attention.ops import flash_attention
+    from repro.kernels.attention.ref import attention_ref
+    got, us = timed(lambda: jax.block_until_ready(
+        flash_attention(q, k, vv, causal=True)))
+    err = float(jnp.max(jnp.abs(got - attention_ref(q, k, vv, causal=True))))
+    row("kernels/flash_attn_512", us, f"max_err={err:.2e}")
+
+    # SSD chunk scan, mamba2-370m-like head
+    B2, L, H2, P, N = 2, 256, 4, 64, 32
+    xd = jnp.asarray(0.1 * RNG.standard_normal((B2, L, H2, P)), jnp.float32)
+    a = -jnp.asarray(RNG.uniform(0.01, 0.5, (B2, L, H2)), jnp.float32)
+    B_ = jnp.asarray(0.3 * RNG.standard_normal((B2, L, N)), jnp.float32)
+    C_ = jnp.asarray(0.3 * RNG.standard_normal((B2, L, N)), jnp.float32)
+    from repro.kernels.ssd.ops import ssd_scan_fused
+    from repro.models.ssm import ssd_chunked
+    (y1, _), us = timed(lambda: jax.block_until_ready(
+        ssd_scan_fused(xd, a, B_, C_, chunk=64)))
+    y2, _ = ssd_chunked(xd, a, B_, C_, chunk=64)
+    err = float(jnp.max(jnp.abs(y1 - y2)))
+    row("kernels/ssd_256", us, f"max_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

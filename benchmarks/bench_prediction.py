@@ -1,0 +1,32 @@
+"""Paper Figs. 5-10: prediction accuracy of the distributed framework vs
+the single-node baseline, for n in {1, 2, 5, 10} compute nodes, on two
+tickers (AAPL, AMZN) — test MSE as the accuracy metric (the paper reports
+prediction curves; same level of accuracy is the claim)."""
+
+from __future__ import annotations
+
+from benchmarks.common import row, stock_datasets, timed
+from repro.training.loop import train_rnn_local_sgd, train_rnn_serial
+
+ITERS = 1500
+BATCH = 32
+
+
+def main() -> None:
+    for ticker in ("AAPL", "AMZN"):
+        train_ds, test_ds = stock_datasets(ticker)
+        res, us = timed(train_rnn_serial, train_ds, test_ds,
+                        iterations=ITERS, batch=BATCH, repeat=1)
+        base = res.test_mse
+        row(f"prediction/{ticker}/serial_n1", us, f"mse={base:.5f}")
+        for n in (2, 5, 10):
+            res, us = timed(train_rnn_local_sgd, train_ds, test_ds,
+                            n_workers=n, iterations=ITERS, batch=BATCH,
+                            repeat=1)
+            row(f"prediction/{ticker}/async_n{n}", us,
+                f"mse={res.test_mse:.5f};rel={res.test_mse/base:.2f};"
+                f"comms={res.communications}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Roofline report: reads the dry-run JSONL (results/dryrun_*.jsonl,
+produced by ``python -m repro.launch.dryrun --out ...``) and prints the
+per-(arch x shape x mesh) roofline terms. The dry-run itself is too heavy
+to run inside the benchmark harness (80 x multi-minute XLA compiles); run
+it via the module CLI and this bench formats/validates the results."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS_GLOB = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun*.jsonl")
+
+
+def load_records() -> list[dict]:
+    recs: dict[tuple, dict] = {}
+    for path in sorted(glob.glob(RESULTS_GLOB)):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                recs[(r["arch"], r["shape"], r["mesh"])] = r  # last wins
+    return list(recs.values())
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        row("roofline/missing", 0.0,
+            "run: PYTHONPATH=src python -m repro.launch.dryrun --out "
+            "results/dryrun.jsonl")
+        return
+    ok = skip = fail = 0
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skip":
+            skip += 1
+            row(name, 0.0, "skip=" + r.get("skip_reason", "?")[:60])
+            continue
+        if r["status"] != "ok":
+            fail += 1
+            row(name, 0.0, "FAIL=" + r.get("error", "?")[:80])
+            continue
+        ok += 1
+        rf = r["roofline"]
+        m = r["memory"]
+        row(name, float(r.get("compile_s", 0)) * 1e6,
+            f"dominant={rf['dominant']};compute_ms={rf['compute_s']*1e3:.2f};"
+            f"memory_ms={rf['memory_s']*1e3:.2f};"
+            f"collective_ms={rf['collective_s']*1e3:.2f};"
+            f"useful={rf['useful_ratio']:.2f};"
+            f"peak_GiB={m['peak_bytes']/2**30:.2f}")
+    row("roofline/summary", 0.0, f"ok={ok};skip={skip};fail={fail}")
+
+
+if __name__ == "__main__":
+    main()

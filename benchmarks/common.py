@@ -1,0 +1,31 @@
+"""Shared benchmark utilities. Output format: ``name,us_per_call,derived``
+CSV rows (one per measurement), where ``derived`` carries the
+benchmark-specific figure of merit (MSE, speedup, rounds, ...)."""
+
+from __future__ import annotations
+
+import time
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """Return (result, us_per_call) — best of ``repeat``."""
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def stock_datasets(ticker: str = "AAPL", n_days: int = 1430):
+    from repro.data import load_stock, make_windows, train_test_split
+    ohlcv = load_stock(ticker, n_days=n_days)
+    tr, te = train_test_split(ohlcv)
+    return make_windows(tr), make_windows(te)

@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
+Prints ``name,us_per_call,derived`` CSV. Select with ``--only <substr>``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (bench_communication, bench_extreme, bench_kernels,
+                        bench_prediction, bench_roofline, bench_speedup)
+
+ALL = [
+    ("prediction", bench_prediction),    # paper Figs. 5-10
+    ("speedup", bench_speedup),          # paper Table II
+    ("communication", bench_communication),  # paper Remark 1
+    ("extreme", bench_extreme),          # paper §IV.C sensitivity study
+    ("kernels", bench_kernels),          # Pallas kernels vs oracles
+    ("roofline", bench_roofline),        # dry-run roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, mod in ALL:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main()
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures += 1
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

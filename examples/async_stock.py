@@ -1,0 +1,66 @@
+"""The paper's experiment, end to end: n in {1, 2, 5, 10} asynchronous
+compute nodes with heterogeneous speeds training the LSTM stock predictor
+through the central server (event-driven simulator), reproducing the
+speedup table (Table II) and the same-accuracy claim (Figs. 5-10).
+
+    PYTHONPATH=src python examples/async_stock.py [--iterations 2000]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.simulator import AsyncSimulator, SimConfig
+from repro.data import load_stock, make_windows, train_test_split
+from repro.data.sharding import client_splits
+from repro.models.rnn import RNNConfig, init_rnn
+from repro.optim.optimizers import sgd
+from repro.training.loop import evaluate, make_loss_fn
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--iterations", type=int, default=2000)
+ap.add_argument("--ticker", default="AAPL")
+args = ap.parse_args()
+
+ohlcv = load_stock(args.ticker)
+tr, te = train_test_split(ohlcv)
+train_ds, test_ds = make_windows(tr), make_windows(te)
+cfg = RNNConfig()
+loss_fn = make_loss_fn(cfg)
+params = init_rnn(jax.random.PRNGKey(0), cfg)
+
+print(f"{args.ticker}: K={args.iterations} gradient computations, "
+      f"linear schedule s_i=10i, eta_i = 0.01/(1+0.01*sqrt(t))")
+print(f"{'n':>3} {'speedup':>8} {'comms':>6} {'max_stale':>9} "
+      f"{'test MSE':>9}")
+
+base_mse = None
+for n in (1, 2, 5, 10):
+    splits = client_splits(len(train_ds), n, "iid")
+
+    def mk(idx):
+        def gen(rng, h, batch):
+            out = []
+            for _ in range(h):
+                b = rng.choice(idx, size=batch)
+                out.append((train_ds.x[b], train_ds.y[b],
+                            train_ds.v.astype(np.float32)[b],
+                            np.ones(batch, np.float32)))
+            return tuple(np.stack([o[i] for o in out]) for i in range(4))
+        return gen
+
+    sim = AsyncSimulator(
+        loss_fn, sgd(), params, [mk(s) for s in splits],
+        SimConfig(n_clients=n, total_iterations=args.iterations,
+                  batch_size=32, server_cost=0.02,
+                  net_delay=(0.005, 0.02)),
+        eval_fn=lambda p: evaluate(p, cfg, test_ds)[0])
+    s = sim.run()
+    mse = s["eval_log"][-1][1]
+    base_mse = base_mse or mse
+    print(f"{n:>3} {s['speedup']:>8.2f} {s['communications']:>6} "
+          f"{s['max_staleness']:>9} {mse:>9.5f}")
+
+print("\npaper Table II reference: n=2 ~1.5x, n=5 ~4.2x, n=10 ~8.3x "
+      "(saturation from server aggregation)")

@@ -1,0 +1,86 @@
+"""End-to-end driver: train a ~100M-parameter dense transformer for a few
+hundred steps on CPU using the full framework path — the zoo model
+definition, Adam, gradient clipping, the paper's local-SGD rounds with
+the linear schedule, and checkpointing.
+
+    PYTHONPATH=src python examples/e2e_train.py --steps 200
+(defaults are sized to finish in a few minutes on CPU; pass --steps 300
+--batch 8 --seq 256 for the full run)
+"""
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import ARCHS
+from repro.core.async_local_sgd import AsyncLocalSGD, LocalSGDConfig
+from repro.core.schedules import SampleSchedule, StepSizeSchedule
+from repro.data.tokens import synthetic_token_batch
+from repro.models import transformer as tfm
+from repro.optim.optimizers import adam
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--workers", type=int, default=2)
+ap.add_argument("--ckpt", default="/tmp/repro_e2e.npz")
+args = ap.parse_args()
+
+# ~100M params: a scaled-down qwen1.5 family member built through the
+# same config system as the full zoo entries.
+cfg = dataclasses.replace(
+    ARCHS["qwen1.5-4b"], name="qwen1.5-100m", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=12, head_dim=64, d_ff=2048, vocab=8192,
+    dtype="float32", remat=False)
+params = tfm.init_lm(cfg, jax.random.PRNGKey(0))
+n_params = sum(p.size for p in jax.tree_util.tree_leaves(params))
+print(f"{cfg.name}: {n_params / 1e6:.1f}M params, "
+      f"{args.workers} local-SGD workers, target {args.steps} steps")
+
+
+def loss_fn(p, batch):
+    return tfm.lm_loss(cfg, p, batch)
+
+
+trainer = AsyncLocalSGD(
+    loss_fn, adam(clip_norm=1.0),
+    LocalSGDConfig(n_workers=args.workers,
+                   schedule=SampleSchedule(a=4.0),
+                   stepsize=StepSizeSchedule(eta0=3e-4, beta=0.01)))
+stacked, opt_state = trainer.init(params)
+
+t0 = time.time()
+round_i = 0
+while trainer.iterations_done < args.steps:
+    round_i += 1
+    h = trainer.local_steps_for_round(round_i)
+    toks = np.stack([
+        np.stack([synthetic_token_batch(args.batch, args.seq, cfg.vocab,
+                                        seed=round_i * 1000 + w * 100 + i)
+                  for i in range(h)])
+        for w in range(args.workers)])
+    stacked, opt_state, loss = trainer.run_round(stacked, opt_state,
+                                                 jnp.asarray(toks))
+    print(f"round {round_i:3d} (H={h:2d}, iters {trainer.iterations_done:4d},"
+          f" lr {trainer.lr_for_round():.2e}): loss {loss:.4f}", flush=True)
+
+dt = time.time() - t0
+final = jax.tree.map(lambda a: a[0], stacked)
+save_checkpoint(args.ckpt, final,
+                metadata={"rounds": trainer.rounds_done,
+                          "iterations": trainer.iterations_done})
+loaded, meta = load_checkpoint(args.ckpt, like=final)
+assert meta["rounds"] == trainer.rounds_done
+print(f"\n{trainer.iterations_done} iterations in {dt:.0f}s with "
+      f"{trainer.communications} model exchanges "
+      f"(vs {trainer.iterations_done} for per-step sync); "
+      f"loss {trainer.loss_history[0]:.3f} -> {trainer.loss_history[-1]:.3f}")
+print(f"checkpoint round-trip OK: {args.ckpt}")
+assert trainer.loss_history[-1] < trainer.loss_history[0]

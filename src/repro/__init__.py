@@ -1,0 +1,10 @@
+"""repro — production-grade JAX framework reproducing *Distributed Learning
+and its Application for Time-Series Prediction* (Nguyen & Legitime, 2021).
+
+Core technique: asynchronous local SGD (Hogwild!-style bounded delay) with
+linearly increasing sample sequences and model-exchange aggregation,
+integrated as a first-class distributed-training feature, plus extreme-event
+modeling (EVL) for time-series prediction.
+"""
+
+__version__ = "0.1.0"

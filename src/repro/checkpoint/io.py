@@ -1,0 +1,96 @@
+"""Checkpointing: npz tensor store + msgpack metadata (no orbax offline).
+
+Pytrees are flattened with '/'-joined key paths; arbitrary (non-array)
+metadata rides along in a msgpack blob. Atomic via tmp-file + rename.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+_META_KEY = "__repro_meta__"
+_DTYPES_KEY = "__dtypes__"
+
+# numpy's savez cannot serialize ml_dtypes (bfloat16 etc.); store them as
+# a same-width unsigned view and record the true dtype in the metadata.
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _flatten(tree: PyTree) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    dtypes: dict[str, str] = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in _VIEW_AS:
+            dtypes[key] = arr.dtype.name
+            arr = arr.view(_VIEW_AS[arr.dtype.name])
+        out[key] = arr
+    return out, dtypes
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    if hasattr(entry, "name"):
+        return str(entry.name)
+    return str(entry)
+
+
+def save_checkpoint(path: str, tree: PyTree,
+                    metadata: dict | None = None) -> None:
+    flat, dtypes = _flatten(tree)
+    blob = {_DTYPES_KEY: dtypes}
+    if metadata is not None:
+        blob["user"] = metadata
+    flat[_META_KEY] = np.frombuffer(
+        msgpack.packb(blob, use_bin_type=True), dtype=np.uint8)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    # np.savez appends .npz to the filename it is given
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_checkpoint(path: str, like: PyTree | None = None
+                    ) -> tuple[PyTree | dict[str, np.ndarray], dict | None]:
+    """Load a checkpoint. With ``like`` (a pytree of the target structure)
+    the arrays are re-assembled into that structure; otherwise the flat
+    {path: array} dict is returned. Returns (tree_or_flat, metadata)."""
+    import ml_dtypes
+
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    meta = None
+    dtypes: dict[str, str] = {}
+    if _META_KEY in flat:
+        blob = msgpack.unpackb(flat.pop(_META_KEY).tobytes(), raw=False)
+        dtypes = blob.get(_DTYPES_KEY, {})
+        meta = blob.get("user")
+    for key, name in dtypes.items():
+        if key in flat:
+            flat[key] = flat[key].view(np.dtype(getattr(ml_dtypes, name)))
+    if like is None:
+        return flat, meta
+    paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in paths_and_leaves:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint {path!r} missing key {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"expected {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta

@@ -1,0 +1,32 @@
+"""Whisper-medium — encoder-decoder ASR [arXiv:2212.04356].
+
+24+24 layers, d_model=1024, 16 MHA heads, GELU, LayerNorm, learned
+positions. The mel-spectrogram + conv frontend is a STUB per the
+assignment: ``input_specs`` provides precomputed frame embeddings
+[batch, 1500, 1024]. Decode = text decoder with self-attn KV cache and
+cross-attention to the encoder output.
+
+long_500k is SKIPPED for this arch (enc-dec ASR decoder; 500k-token
+autoregressive decode is not meaningful — DESIGN.md §4).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=51865,
+    encoder_layers=24,
+    n_frames=1500,
+    qkv_bias=True,
+    activation="gelu",
+    gated_mlp=False,
+    norm="layernorm",
+    source="arXiv:2212.04356",
+))

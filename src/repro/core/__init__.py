@@ -1,0 +1,43 @@
+"""The paper's primary contribution: asynchronous local SGD with linearly
+increasing sample sequences and model-exchange aggregation.
+
+Public API:
+- ``SampleSchedule`` / ``ConstantSchedule`` / ``StepSizeSchedule`` — Table I.
+- ``ConstantDelay`` / ``SqrtLogDelay`` / ``NetworkDelay`` — tau(t) models.
+- ``AsyncLocalSGD`` (shard_map SPMD rounds) — production path.
+- ``AsyncSimulator`` — event-driven faithful simulation of n async clients.
+- ``sync_step`` — synchronous minibatch SGD baseline.
+"""
+
+from repro.core.schedules import (
+    ConstantSchedule,
+    SampleSchedule,
+    StepSizeSchedule,
+    communication_rounds_constant,
+    round_step_sizes,
+)
+from repro.core.delay import ConstantDelay, NetworkDelay, SqrtLogDelay
+from repro.core.async_local_sgd import (
+    AsyncLocalSGD,
+    LocalSGDConfig,
+    local_sgd_round,
+    sync_step,
+)
+from repro.core.simulator import AsyncSimulator, SimConfig
+
+__all__ = [
+    "AsyncLocalSGD",
+    "AsyncSimulator",
+    "ConstantDelay",
+    "ConstantSchedule",
+    "LocalSGDConfig",
+    "NetworkDelay",
+    "SampleSchedule",
+    "SimConfig",
+    "SqrtLogDelay",
+    "StepSizeSchedule",
+    "communication_rounds_constant",
+    "local_sgd_round",
+    "round_step_sizes",
+    "sync_step",
+]

@@ -1,0 +1,26 @@
+"""Data pipeline: synthetic heavy-tailed OHLCV stock data (S&P500-like),
+sliding-window datasets, per-client splits (iid / heterogeneous), and
+synthetic token/embedding streams for the LM architecture zoo.
+
+The container is offline, so ``sp500.load_stock`` synthesizes a
+deterministic, calibrated heavy-tailed series unless a real CSV is found
+(DESIGN.md §7 — repro<=2 data gate, simulated).
+"""
+
+from repro.data.synthetic import SyntheticStockConfig, generate_ohlcv
+from repro.data.sp500 import load_stock, train_test_split
+from repro.data.windows import WindowDataset, make_windows, normalize_windows
+from repro.data.sharding import client_splits
+from repro.data.tokens import synthetic_token_batch
+
+__all__ = [
+    "SyntheticStockConfig",
+    "WindowDataset",
+    "client_splits",
+    "generate_ohlcv",
+    "load_stock",
+    "make_windows",
+    "normalize_windows",
+    "synthetic_token_batch",
+    "train_test_split",
+]

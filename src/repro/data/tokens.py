@@ -1,0 +1,28 @@
+"""Synthetic token / embedding streams for the LM architecture zoo.
+
+Used by smoke tests and the e2e transformer example: deterministic
+pseudo-random token ids with a Zipfian marginal (realistic softmax load)
+and, for the audio/VLM frontends (stubbed per spec), precomputed frame or
+patch embeddings of the right shape.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def synthetic_token_batch(batch: int, seq_len: int, vocab: int,
+                          seed: int = 0) -> np.ndarray:
+    """int32 [batch, seq_len] Zipf-distributed token ids in [0, vocab)."""
+    rng = np.random.default_rng(seed)
+    # Zipf via inverse-CDF on ranks; alpha ~ 1.1 typical of text
+    ranks = rng.zipf(1.3, size=(batch, seq_len)).astype(np.int64)
+    return np.asarray(np.minimum(ranks - 1, vocab - 1), np.int32)
+
+
+def synthetic_embedding_batch(batch: int, n_frames: int, dim: int,
+                              seed: int = 0) -> np.ndarray:
+    """float32 [batch, n_frames, dim] unit-variance embeddings — stands in
+    for the (stubbed) audio conv frontend or VLM vision encoder output."""
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((batch, n_frames, dim)).astype(np.float32)

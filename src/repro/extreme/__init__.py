@@ -1,0 +1,34 @@
+"""Extreme-event modeling (paper §II.A, eqs. 1-6).
+
+- ``indicators`` — auxiliary indicator sequence v_t (eq. 1).
+- ``evt`` — Generalized Extreme Value distribution and tail modeling
+  (eqs. 3-4).
+- ``evl`` — Extreme Value Loss (eq. 6).
+- ``resampling`` — imbalanced-data handling strategies compared in the
+  paper's sensitivity study (plain sliding window, extreme oversampling,
+  EVL loss weighting).
+"""
+
+from repro.extreme.indicators import extreme_fractions, indicator_sequence
+from repro.extreme.evt import gev_cdf, gev_log_cdf, tail_probability
+from repro.extreme.evl import evl_loss, evl_weights
+from repro.extreme.resampling import (
+    RESAMPLERS,
+    evl_sample_weights,
+    oversample_extreme_windows,
+    plain_windows,
+)
+
+__all__ = [
+    "RESAMPLERS",
+    "evl_loss",
+    "evl_sample_weights",
+    "evl_weights",
+    "extreme_fractions",
+    "gev_cdf",
+    "gev_log_cdf",
+    "indicator_sequence",
+    "oversample_extreme_windows",
+    "plain_windows",
+    "tail_probability",
+]

@@ -1,0 +1,61 @@
+"""Extreme Value Theory — paper eqs. (2)-(4).
+
+Generalized Extreme Value distribution (eq. 3):
+
+    G(y) = exp(-(1 - y/gamma)^gamma)   gamma != 0, 1 - y/gamma > 0
+    G(y) = exp(-exp(-y))               gamma == 0   (Gumbel)
+
+Tail modeling (eq. 4):
+
+    1 - F(y) ~ (1 - F(xi)) * [1 - log G((y - xi) / f(xi))],  y > xi
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gev_log_cdf(y, gamma: float):
+    """log G(y) for the GEV parameterization of eq. (3)."""
+    y = jnp.asarray(y, jnp.float32)
+    if gamma == 0.0:
+        return -jnp.exp(-y)
+    base = 1.0 - y / gamma
+    # outside the support (base <= 0) the cdf saturates; clamp for safety.
+    base = jnp.maximum(base, 1e-12)
+    return -(base ** gamma)
+
+
+def gev_cdf(y, gamma: float):
+    return jnp.exp(gev_log_cdf(y, gamma))
+
+
+def tail_probability(y, xi: float, scale: float, tail_at_xi: float,
+                     gamma: float):
+    """eq. (4): P(Y > y) for y > xi, using the GEV tail approximation.
+
+    Args:
+        y: query points (> xi for the approximation to be meaningful).
+        xi: sufficiently large threshold.
+        scale: the positive scale function value f(xi).
+        tail_at_xi: empirical 1 - F(xi).
+        gamma: extreme value index.
+    """
+    z = (jnp.asarray(y, jnp.float32) - xi) / scale
+    return tail_at_xi * (1.0 - gev_log_cdf(z, gamma))
+
+
+def fit_tail(y, q: float = 0.95) -> dict[str, float]:
+    """Moment-style tail fit: pick xi at the q-quantile, scale as the mean
+    excess over xi (exponential/Pareto-style estimator). Returns the
+    parameters consumed by ``tail_probability``."""
+    y = jnp.asarray(y, jnp.float32)
+    xi = jnp.quantile(y, q)
+    excess = jnp.where(y > xi, y - xi, 0.0)
+    n_tail = jnp.maximum(jnp.sum(y > xi), 1)
+    scale = jnp.sum(excess) / n_tail
+    return {
+        "xi": float(xi),
+        "scale": float(jnp.maximum(scale, 1e-8)),
+        "tail_at_xi": float(n_tail / y.size),
+    }

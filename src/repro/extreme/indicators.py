@@ -1,0 +1,41 @@
+"""Auxiliary indicator sequence — paper eq. (1).
+
+    v_t =  1   if y_t >  eps1          (right extreme event)
+    v_t =  0   if y_t in [-eps2, eps1] (normal event)
+    v_t = -1   if y_t < -eps2          (left extreme event)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def indicator_sequence(y, eps1: float, eps2: float):
+    """v_t per eq. (1). Thresholds must be positive."""
+    if eps1 <= 0 or eps2 <= 0:
+        raise ValueError("thresholds eps1, eps2 must be > 0")
+    y = jnp.asarray(y)
+    return jnp.where(y > eps1, 1, jnp.where(y < -eps2, -1, 0)).astype(jnp.int32)
+
+
+def extreme_fractions(v) -> dict[str, float]:
+    """beta_0 = P(v=0) (normal), P(v=1) (right), P(v=-1) (left) — the
+    event-class proportions that weight the EVL (eq. 6)."""
+    v = jnp.asarray(v)
+    n = v.size
+    return {
+        "normal": float(jnp.sum(v == 0) / n),
+        "right": float(jnp.sum(v == 1) / n),
+        "left": float(jnp.sum(v == -1) / n),
+    }
+
+
+def quantile_thresholds(y, q: float = 0.95) -> tuple[float, float]:
+    """Pick (eps1, eps2) from empirical tail quantiles — how the paper's
+    reference [2] sets thresholds in practice."""
+    y = jnp.asarray(y)
+    eps1 = float(jnp.quantile(y, q))
+    eps2 = float(-jnp.quantile(y, 1.0 - q))
+    # Guard: thresholds must be positive (eq. 1 requires large positive
+    # constants); degenerate data falls back to a small epsilon.
+    return max(eps1, 1e-6), max(eps2, 1e-6)

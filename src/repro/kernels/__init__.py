@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the workload's compute hot spots (DESIGN.md §6).
+
+Each kernel package ships:
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py    — jit'd public wrapper (interpret=True fallback on CPU)
+    ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels:
+    evl       — fused Extreme Value Loss (paper eq. 6)
+    lstm      — fused LSTM cell (paper's 2-layer LSTM hot loop)
+    attention — flash-style blocked attention w/ causal + sliding window
+    ssd       — Mamba2 SSD chunk kernel (intra-chunk dual form)
+"""

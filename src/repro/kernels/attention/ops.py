@@ -1,0 +1,37 @@
+"""Public wrapper: [B, S, H, D] GQA flash attention with padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.kernel import flash_attention_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "q_offset"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    q_offset: int = 0):
+    """q [B, Sq, Hq, D]; k, v [B, Skv, Hkv, D] -> [B, Sq, Hq, D]."""
+    B, Sq, Hq, D = q.shape
+    Hkv, Skv = k.shape[2], k.shape[1]
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    qf = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    # fold to [B*H, S, D]
+    qf = qf.transpose(0, 2, 1, 3).reshape(B * Hq, Sq + pad_q, D)
+    kf = kf.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, D)
+    vf = vf.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv + pad_k, D)
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, q_offset=q_offset, kv_valid=Skv,
+        interpret=not _ON_TPU)
+    out = out.reshape(B, Hq, Sq + pad_q, D).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

@@ -1,0 +1,3 @@
+from repro.kernels.evl.ops import evl_loss_fused
+
+__all__ = ["evl_loss_fused"]

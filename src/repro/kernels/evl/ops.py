@@ -1,0 +1,40 @@
+"""Public wrapper: arbitrary-shape EVL via the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.evl.kernel import LANES, evl_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("beta0", "beta1", "gamma",
+                                             "reduce"))
+def evl_loss_fused(u, v, beta0: float, beta1: float, gamma: float = 2.0,
+                   reduce: str = "mean"):
+    """Drop-in fused version of ``repro.extreme.evl.evl_loss``."""
+    shape = u.shape
+    n = u.size
+    rows = -(-n // LANES)                      # ceil
+    pad_rows = (-rows) % 8
+    total = (rows + pad_rows) * LANES
+    u2 = jnp.zeros((total,), jnp.float32).at[:n].set(
+        u.reshape(-1).astype(jnp.float32)).reshape(-1, LANES)
+    # pad u with 0.5 so log() terms stay finite in the dead lanes
+    u2 = u2.at[:].set(jnp.where(
+        (jnp.arange(total) < n).reshape(-1, LANES), u2, 0.5))
+    v2 = jnp.zeros((total,), jnp.float32).at[:n].set(
+        v.reshape(-1).astype(jnp.float32)).reshape(-1, LANES)
+    out = evl_pallas(u2, v2, beta0=beta0, beta1=beta1, gamma=gamma,
+                     interpret=not _ON_TPU)
+    flat = out.reshape(-1)[:n]
+    mask = jnp.ones((n,), jnp.float32)
+    if reduce == "mean":
+        return jnp.sum(flat * mask) / n
+    if reduce == "sum":
+        return jnp.sum(flat * mask)
+    return flat.reshape(shape)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused EVL kernel — paper eq. (6)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def evl_loss_ref(u, v, beta0: float, beta1: float, gamma: float = 2.0,
+                 eps: float = 1e-7):
+    """Elementwise EVL (no reduction). u, v: same shape, float32."""
+    u = jnp.clip(u.astype(jnp.float32), eps, 1.0 - eps)
+    v = v.astype(jnp.float32)
+    w_pos = beta0 * jnp.power(jnp.maximum(1.0 - u / gamma, 1e-12), gamma)
+    w_neg = beta1 * jnp.power(jnp.maximum(1.0 - (1.0 - u) / gamma, 1e-12),
+                              gamma)
+    return -w_pos * v * jnp.log(u) - w_neg * (1.0 - v) * jnp.log(1.0 - u)

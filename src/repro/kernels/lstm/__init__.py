@@ -1,0 +1,3 @@
+from repro.kernels.lstm.ops import lstm_cell_fused
+
+__all__ = ["lstm_cell_fused"]

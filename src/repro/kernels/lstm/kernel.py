@@ -1,0 +1,63 @@
+"""Fused LSTM cell kernel.
+
+The paper's model is a 2-layer LSTM; per time step a naive implementation
+issues two matmuls plus ~8 elementwise HBM round trips for the gate math.
+This kernel keeps the [block_b, 4H] gate tile resident in VMEM: both gate
+matmuls hit the MXU back-to-back and all gate nonlinearities + state
+update fuse before a single store of (h', c').
+
+Tiling: grid over batch blocks; weights [I, 4H] / [H, 4H] are loaded whole
+per block (paper-scale H=64 → 4H=256 lanes, well inside VMEM; the wrapper
+pads I and B to sublane multiples).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref,
+                 h_out_ref, c_out_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = (jnp.dot(x, wx_ref[...], preferred_element_type=jnp.float32)
+             + jnp.dot(h, wh_ref[...], preferred_element_type=jnp.float32)
+             + b_ref[...])
+    H = h.shape[-1]
+    i = jax.nn.sigmoid(gates[:, :H])
+    f = jax.nn.sigmoid(gates[:, H:2 * H])
+    g = jnp.tanh(gates[:, 2 * H:3 * H])
+    o = jax.nn.sigmoid(gates[:, 3 * H:])
+    c_new = f * c + i * g
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def lstm_cell_pallas(x, h, c, wx, wh, b2d, *, block_b: int = 8,
+                     interpret: bool = True):
+    """x [B, I]; h, c [B, H]; wx [I, 4H]; wh [H, 4H]; b2d [1, 4H].
+    B % block_b == 0. Returns (h', c')."""
+    B, I = x.shape
+    H = h.shape[-1]
+    assert B % block_b == 0
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        _lstm_kernel,
+        out_shape=(jax.ShapeDtypeStruct((B, H), h.dtype),
+                   jax.ShapeDtypeStruct((B, H), c.dtype)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, I), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, H), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, H), lambda i: (i, 0)),
+            pl.BlockSpec((I, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((H, 4 * H), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4 * H), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((block_b, H), lambda i: (i, 0)),
+                   pl.BlockSpec((block_b, H), lambda i: (i, 0))),
+        interpret=interpret,
+    )(x, h, c, wx, wh, b2d)

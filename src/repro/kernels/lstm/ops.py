@@ -1,0 +1,33 @@
+"""Public wrapper: padding + jit around the fused LSTM cell kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lstm.kernel import lstm_cell_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@jax.jit
+def lstm_cell_fused(x, h, c, wx, wh, b):
+    """Drop-in fused version of ``repro.models.rnn.lstm_cell`` signature:
+    (params dict unpacked) -> (h', c'). Pads batch to a sublane multiple
+    and the input feature dim to 8."""
+    B, I = x.shape
+    H = h.shape[-1]
+    block_b = 8
+    pad_b = (-B) % block_b
+    pad_i = (-I) % 8
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+        h = jnp.pad(h, ((0, pad_b), (0, 0)))
+        c = jnp.pad(c, ((0, pad_b), (0, 0)))
+    if pad_i:
+        x = jnp.pad(x, ((0, 0), (0, pad_i)))
+        wx = jnp.pad(wx, ((0, pad_i), (0, 0)))
+    h_new, c_new = lstm_cell_pallas(x, h, c, wx, wh, b[None, :],
+                                    block_b=block_b,
+                                    interpret=not _ON_TPU)
+    return h_new[:B], c_new[:B]

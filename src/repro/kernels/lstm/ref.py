@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused LSTM cell — identical math to
+``repro.models.rnn.lstm_cell`` (gates packed [i, f, g, o])."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    gates = x @ wx + h @ wh + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

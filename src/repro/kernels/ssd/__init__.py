@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd_chunk_fused, ssd_scan_fused
+
+__all__ = ["ssd_chunk_fused", "ssd_scan_fused"]

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the SSD chunk kernel: one chunk of the Mamba2
+state-space-duality recurrence (same math as repro.models.ssm)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xd, a, B_, C_, state):
+    """One chunk, single (batch, head) slice.
+
+    xd [K, P] (dt-scaled inputs); a [K] (dt*A, negative); B_, C_ [K, N];
+    state [P, N]. Returns (y [K, P], new_state [P, N]). All float32.
+    """
+    K = xd.shape[0]
+    cum = jnp.cumsum(a)                                 # [K]
+    d = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((K, K), bool))
+    L = jnp.where(mask, jnp.exp(d), 0.0)                # [K, K]
+
+    scores = C_ @ B_.T                                  # [K, K]
+    y = (scores * L) @ xd                               # intra-chunk
+    y = y + (C_ @ state.T) * jnp.exp(cum)[:, None]      # carried state
+
+    total = cum[-1]
+    decay_k = jnp.exp(total - cum)                      # [K]
+    new_state = state * jnp.exp(total) + xd.T @ (B_ * decay_k[:, None])
+    return y, new_state

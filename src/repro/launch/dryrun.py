@@ -1,0 +1,278 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
+the production mesh and report memory / cost / collective analysis.
+
+MUST be run as a module main (the XLA_FLAGS line above executes before any
+jax import): ``PYTHONPATH=src python -m repro.launch.dryrun --arch
+mixtral-8x7b --shape train_4k --mesh single``.
+
+Flags:
+    --arch       arch id or "all"
+    --shape      shape id or "all"
+    --mesh       single | multi | both
+    --technique  also lower the paper's local-SGD round (multi-pod; H
+                 local steps + cross-pod model exchange) with this H
+    --out        append JSON-lines results to this path
+"""
+
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import (make_production_mesh, mesh_axis_sizes,
+                               n_chips)
+from repro.launch.roofline import roofline_terms
+from repro.launch.shardings import as_shardings, batch_axes
+from repro.models.pshard import sharding_context
+from jax.sharding import PartitionSpec as P
+
+
+def skip_reason(cfg, shape) -> str | None:
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return ("enc-dec ASR decoder: 500k-token autoregressive decode "
+                    "not meaningful (DESIGN.md §4)")
+    return None
+
+
+def _analyses(lowered, compiled, pod_boundary=None, donated=False) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    # XLA's cost_analysis counts while bodies ONCE (verified); analyze_hlo
+    # re-walks the partitioned HLO with trip-count multiplication.
+    from repro.launch.hlo_analysis import HloCostModel
+    hlo = HloCostModel(compiled.as_text(), pod_boundary=pod_boundary).totals()
+    return {
+        "flops_per_chip": float(hlo["flops"]),
+        "bytes_per_chip": float(hlo["bytes"]),
+        "collectives": hlo["collectives"],
+        "collective_bytes_per_chip": float(sum(hlo["collectives"].values())),
+        "cross_pod_collectives": hlo.get("cross_pod", {}),
+        "cross_pod_bytes_per_chip": float(sum(hlo.get("cross_pod",
+                                                      {}).values())),
+        "xla_cost_analysis_raw": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory": _memory_record(mem, donated),
+    }
+
+
+def _memory_record(mem, donated: bool) -> dict:
+    """Live-bytes peak estimate. Without donation, arguments, temps and
+    outputs coexist at step end; with donation the outputs alias the
+    donated arguments AND XLA books them under temp, so adding args+temp
+    would double-count (verified: temp grows by exactly output_bytes when
+    donate_argnums is set)."""
+    args = int(getattr(mem, "argument_size_in_bytes", 0))
+    out = int(getattr(mem, "output_size_in_bytes", 0))
+    temp = int(getattr(mem, "temp_size_in_bytes", 0))
+    peak = (temp + max(args - out, 0)) if donated else (args + temp + out)
+    return {"argument_bytes": args, "output_bytes": out,
+            "temp_bytes": temp, "donated": donated, "peak_bytes": peak}
+
+
+def dryrun_pair(arch: str, shape_name: str, mesh, *, technique_steps: int = 0,
+                microbatches: int = 0, top: int = 0,
+                verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ms = mesh_axis_sizes(mesh)
+    chips = n_chips(mesh)
+    reason = skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "kind": shape.kind, "status": "skip" if reason else "pending"}
+    if reason:
+        rec["skip_reason"] = reason
+        return rec
+
+    t0 = time.time()
+    ishapes = S.input_specs(cfg, shape)
+    b_axes = batch_axes(ms, shape.global_batch)
+
+    if shape.kind == "train" and technique_steps:
+        W = ms.get("pod", 1)
+        if W < 2:
+            rec.update(status="skip",
+                       skip_reason="technique round needs the pod axis")
+            return rec
+        round_fn, opt = S.make_local_round(cfg, W, technique_steps)
+        sh = S.build_shardings(cfg, shape, mesh, stacked_workers=W)
+        opt_shape = jax.eval_shape(
+            lambda ps: jax.vmap(opt.init)(ps), sh["params_shape"])
+        opt_spec = S.shd.opt_state_specs(sh["params"], opt_shape,
+                                         sh["params_shape"])
+        B, Sq = shape.global_batch, shape.seq_len
+        bspec = {"tokens": jax.ShapeDtypeStruct(
+            (W, technique_steps, B // W, Sq), jnp.int32)}
+        bshard = {"tokens": P("pod", None, "data", None)}
+        if cfg.family == "audio":
+            bspec["frames"] = jax.ShapeDtypeStruct(
+                (W, technique_steps, B // W, cfg.n_frames, cfg.d_model),
+                jnp.bfloat16)
+            bshard["frames"] = P("pod", None, "data", None, None)
+        jitted = jax.jit(
+            round_fn,
+            in_shardings=as_shardings(mesh, (sh["params"], opt_spec, bshard)),
+            out_shardings=as_shardings(mesh, (sh["params"], opt_spec, P())),
+            donate_argnums=(0, 1))
+        largs = (sh["params_shape"], opt_shape, bspec)
+
+    elif shape.kind == "train":
+        # per-arch gradient accumulation depth (ArchConfig.train_microbatches)
+        mb = microbatches or cfg.train_microbatches
+        step, opt = S.make_train_step(cfg, microbatches=mb)
+        sh = S.build_shardings(cfg, shape, mesh)
+        opt_shape = jax.eval_shape(opt.init, sh["params_shape"])
+        opt_spec = S.shd.opt_state_specs(sh["params"], opt_shape,
+                                         sh["params_shape"])
+        in_sh = [sh["params"], opt_spec, sh["tokens"]]
+        args = [sh["params_shape"], opt_shape, ishapes["tokens"]]
+        if cfg.family == "audio":
+            in_sh.append(sh["frames"])
+            args.append(ishapes["frames"])
+        jitted = jax.jit(
+            step, in_shardings=as_shardings(mesh, tuple(in_sh)),
+            out_shardings=as_shardings(
+                mesh, (sh["params"], opt_spec, P())),
+            donate_argnums=(0, 1))
+        largs = tuple(args)
+
+    elif shape.kind == "prefill":
+        step = S.make_prefill_step(cfg)
+        sh = S.build_shardings(cfg, shape, mesh)
+        # prefill output cache shardings: same rules as decode cache
+        if cfg.family == "audio":
+            cache_shape = jax.eval_shape(
+                lambda p, tok, fr: step(p, tok, fr)[1],
+                sh["params_shape"], ishapes["tokens"], ishapes["frames"])
+        else:
+            cache_shape = jax.eval_shape(
+                lambda p, tok: step(p, tok)[1],
+                sh["params_shape"], ishapes["tokens"])
+        cache_spec = S.shd.cache_specs(cfg, cache_shape, ms,
+                                       shape.global_batch)
+        in_sh = [sh["params"], sh["tokens"]]
+        args = [sh["params_shape"], ishapes["tokens"]]
+        if cfg.family == "audio":
+            in_sh.append(sh["frames"])
+            args.append(ishapes["frames"])
+        jitted = jax.jit(
+            step, in_shardings=as_shardings(mesh, tuple(in_sh)),
+            out_shardings=as_shardings(mesh, (sh["logits"], cache_spec)))
+        largs = tuple(args)
+
+    else:  # decode
+        step = S.make_decode_step(cfg)
+        sh = S.build_shardings(cfg, shape, mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=as_shardings(
+                mesh, (sh["params"], sh["token1"], sh["cache"])),
+            out_shardings=as_shardings(mesh, (sh["logits"], sh["cache"])),
+            donate_argnums=(2,))
+        largs = (sh["params_shape"], ishapes["token"], ishapes["cache"])
+
+    if shape.kind == "train" and technique_steps:
+        b_axes = "data"   # worker batches shard within their own pod
+    with sharding_context(mesh, b_axes):
+        lowered = jitted.lower(*largs)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    pod_boundary = 256 if "pod" in ms else None
+    donated = shape.kind in ("train", "decode")
+    rec.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               **_analyses(lowered, compiled, pod_boundary, donated))
+    rec["roofline"] = roofline_terms(
+        flops_per_chip=rec["flops_per_chip"],
+        bytes_per_chip=rec["bytes_per_chip"],
+        collective_bytes_per_chip=rec["collective_bytes_per_chip"],
+        chips=chips, cfg=cfg, shape=shape)
+    if top:
+        from repro.launch.hlo_analysis import HloCostModel
+        model = HloCostModel(compiled.as_text())
+        for metric in ("bytes", "flops"):
+            print(f"  -- top {metric} contributors (per chip, trip-scaled):")
+            for val, name in model.top_contributors(metric, n=top):
+                unit = val / 1e9
+                print(f"     {unit:10.2f} G{'B' if metric=='bytes' else 'F'}"
+                      f"  {name}")
+    if verbose:
+        m = rec["memory"]
+        r = rec["roofline"]
+        print(f"  mem/chip: args {m['argument_bytes']/2**30:.2f} GiB + "
+              f"temp {m['temp_bytes']/2**30:.2f} GiB; "
+              f"compute {r['compute_s']*1e3:.2f} ms, "
+              f"memory {r['memory_s']*1e3:.2f} ms, "
+              f"collective {r['collective_s']*1e3:.2f} ms "
+              f"-> {r['dominant']}-bound; useful {r['useful_ratio']:.2f}",
+              flush=True)
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--technique", type=int, default=0,
+                    help="H local steps for the paper's round (multi mesh)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="override gradient-accumulation microbatches "
+                         "(0 = per-arch ArchConfig.train_microbatches)")
+    ap.add_argument("--top", type=int, default=0,
+                    help="print top-N byte/flop contributor ops (profile)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                tag = f"{arch} x {shape} x {'multi' if multi else 'single'}"
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    rec = dryrun_pair(arch, shape, mesh,
+                                      technique_steps=args.technique,
+                                      microbatches=args.microbatches,
+                                      top=args.top)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if multi else "single",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if rec["status"] == "skip":
+                    print(f"  SKIP: {rec.get('skip_reason')}", flush=True)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+TPU v5e target: one pod = 16 x 16 = 256 chips, axes (data, model);
+multi-pod = 2 pods = 512 chips, axes (pod, data, model). The paper's
+local-SGD workers map onto the ``pod`` axis (DESIGN.md §2): no cross-pod
+collective during a round, one cross-pod model all-reduce per round.
+
+Functions, not module constants — importing this module never touches
+jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants (per chip) used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+HBM_BYTES = 16 * 1024**3        # 16 GiB
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (CPU smoke / examples)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh) -> int:
+    return int(mesh.devices.size)

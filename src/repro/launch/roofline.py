@@ -1,0 +1,90 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_global / (chips * PEAK_FLOPS)
+    memory term     = HLO_bytes_global / (chips * HBM_BW)
+    collective term = collective_bytes_per_chip / ICI_BW
+
+cost_analysis() reports per-program (= per-device, post-SPMD-partition)
+numbers, so global = per_device * chips. Collective bytes are parsed from
+the optimized HLO (result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, start ops only once) —
+a per-chip traffic proxy; ring-algorithm constant factors (2(n-1)/n etc.)
+are absorbed into the term's interpretation. MODEL_FLOPS = 6*N*D with N
+the (active) parameter count.
+"""
+
+from __future__ import annotations
+
+import re
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(typestr):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        typestr, kind, _start = m.groups()
+        # skip -done ops (matched only via -start suffix group); "-done"
+        # never matches because the regex requires the base name.
+        out[kind] += _shape_bytes(typestr)
+    return out
+
+
+def roofline_terms(*, flops_per_chip: float, bytes_per_chip: float,
+                   collective_bytes_per_chip: float, chips: int,
+                   cfg: ArchConfig, shape: InputShape) -> dict:
+    compute_s = flops_per_chip / PEAK_FLOPS_BF16
+    memory_s = bytes_per_chip / HBM_BW
+    collective_s = collective_bytes_per_chip / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6 * N_active * D_tokens for train; 2 * N_active * D for
+    # a forward-only step (prefill/decode).
+    n_active = cfg.active_param_count()
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill") else shape.global_batch)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    hlo_global = flops_per_chip * chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": model_flops / hlo_global if hlo_global else 0.0,
+        "chips": chips,
+    }

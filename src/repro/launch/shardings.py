@@ -1,0 +1,204 @@
+"""Sharding rules: ArchConfig + mesh -> PartitionSpec trees for params,
+optimizer state, inputs and caches (DESIGN.md §5).
+
+2-D "ZeRO-ish" param sharding: with layers stacked [L, ...], the
+contracting/output feature dims shard on ``model`` and d_model rows shard
+on ``data`` — params *and* Adam moments are fully sharded, which is what
+lets qwen3-moe-235b (2.35 TB with fp32 moments) fit 256 x 16 GiB.
+
+Every rule guards on divisibility (``_div``): a dim that does not divide
+the axis stays unsharded rather than failing at compile (e.g. mixtral's
+8 experts on a 16-way model axis fall back to sharding d_ff instead —
+GSPMD would otherwise pad; we prefer the explicit fallback).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+PyTree = Any
+
+
+def _axis(mesh_sizes: dict, name: str):
+    return name if name in mesh_sizes else None
+
+
+def _div(mesh_sizes: dict, dim: int, axis: str):
+    """axis name if it exists and divides dim, else None."""
+    size = mesh_sizes.get(axis)
+    return axis if size and dim % size == 0 and dim >= size else None
+
+
+def batch_axes(mesh_sizes: dict, batch: int):
+    """Largest prefix of ('pod','data') whose product divides batch."""
+    axes = []
+    prod = 1
+    for name in ("pod", "data"):
+        size = mesh_sizes.get(name)
+        if size and batch % (prod * size) == 0:
+            axes.append(name)
+            prod *= size
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+# --------------------------------------------------------------------------
+# Param specs — walk the param pytree by key path
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, params_shape: PyTree,
+                mesh_sizes: dict) -> PyTree:
+    """PartitionSpec tree matching ``jax.eval_shape(init_lm)`` output."""
+
+    def spec_of(path, leaf) -> P:
+        keys = [_k(p) for p in path]
+        name = keys[-1]
+        stacked = any(k in ("layers", "enc_layers") for k in keys)
+        shape = leaf.shape
+        dims = shape[1:] if stacked else shape
+        lead = (None,) if stacked else ()
+
+        def d(i, axis):  # shard dims[i] on axis if divisible
+            return _div(mesh_sizes, dims[i], axis)
+
+        if name == "embed":
+            return P(d(0, "model"), d(1, "data"))
+        if name == "lm_head":
+            return P(d(0, "data"), d(1, "model"))
+        if name == "enc_pos":
+            return P(None, d(1, "data"))
+        if name in ("wq", "wk", "wv"):
+            return P(*lead, d(0, "data"), d(1, "model"))
+        if name == "wo":
+            return P(*lead, d(0, "model"), d(1, "data"))
+        if name in ("bq", "bk", "bv"):
+            return P(*lead, d(0, "model"))
+        if name == "router":
+            return P(*lead, d(0, "data"), d(1, "model"))
+        if name in ("w1", "w3") and len(dims) == 3:      # MoE [E, D, F]
+            e = d(0, "model")
+            return P(*lead, e, d(1, "data"),
+                     None if e else d(2, "model"))
+        if name == "w2" and len(dims) == 3:              # MoE [E, F, D]
+            e = d(0, "model")
+            return P(*lead, e, None if e else d(1, "model"), d(2, "data"))
+        if name in ("w1", "w3"):                         # MLP [D, F]
+            return P(*lead, d(0, "data"), d(1, "model"))
+        if name == "w2":                                 # MLP [F, D]
+            return P(*lead, d(0, "model"), d(1, "data"))
+        if name in ("b1",):
+            return P(*lead, d(0, "model"))
+        if name in ("b2",):
+            return P(*lead, None)
+        if name == "in_proj":                            # SSM [D, X]
+            return P(*lead, d(0, "data"), d(1, "model"))
+        if name == "out_proj":                           # SSM [d_inner, D]
+            return P(*lead, d(0, "model"), d(1, "data"))
+        if name == "conv_w":
+            return P(*lead, d(0, "model"), None)
+        if name in ("conv_b", "norm_w"):
+            return P(*lead, d(0, "model"))
+        # norms, scalars, biases, A_log, D, dt_bias: replicate
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def _k(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+def opt_state_specs(param_spec_tree: PyTree, opt_state_shape: PyTree,
+                    params_shape: PyTree | None = None) -> PyTree:
+    """Adam moments mirror param sharding (matched by leaf shape —
+    AdamState.mu/nu are isomorphic to params); scalars and small
+    bookkeeping leaves (e.g. the per-worker step counter) replicate."""
+    is_p = lambda x: isinstance(x, P)
+    specs = jax.tree_util.tree_leaves(param_spec_tree, is_leaf=is_p)
+    if params_shape is not None:
+        shapes = [tuple(l.shape)
+                  for l in jax.tree_util.tree_leaves(params_shape)]
+    else:
+        shapes = [None] * len(specs)
+    by_shape: dict = {}
+    for shp, sp in zip(shapes, specs):
+        if shp is not None:
+            by_shape.setdefault(shp, sp)
+
+    leaves, treedef = jax.tree_util.tree_flatten(opt_state_shape)
+    out = []
+    pi = 0
+    for leaf in leaves:
+        shp = tuple(leaf.shape)
+        if shp in by_shape:
+            out.append(by_shape[shp])
+        elif leaf.ndim == 0:
+            out.append(P())
+        elif params_shape is None and pi < len(specs) and leaf.ndim > 0:
+            # legacy positional fallback (moments traverse like params)
+            out.append(specs[pi % len(specs)])
+        else:
+            out.append(P(*([None] * leaf.ndim)))
+        pi += 1
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# Input / cache specs
+# --------------------------------------------------------------------------
+
+def token_spec(mesh_sizes: dict, batch: int) -> P:
+    return P(batch_axes(mesh_sizes, batch), None)
+
+
+def frames_spec(mesh_sizes: dict, batch: int) -> P:
+    return P(batch_axes(mesh_sizes, batch), None, None)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: PyTree,
+                mesh_sizes: dict, batch: int) -> PyTree:
+    """KV/state cache sharding: batch on data axes; kv-heads on model when
+    divisible, else the cache *sequence* dim on model (granite kv=1 etc.)."""
+    b_ax = batch_axes(mesh_sizes, batch)
+
+    def spec_of(path, leaf) -> P:
+        name = _k(path[-1])
+        if name in ("len", "flushed"):
+            return P()
+        if name in ("kr", "vr"):
+            # replicated decode write buffer (small): batch-sharded only
+            return P(None, b_ax, None, None, None)
+        if name in ("k", "v", "xk", "xv"):
+            # main cache [Lc, B, S, Hkv, hd] — READ-ONLY in a decode step
+            # (writes go through kr/vr + flush_recent), so it can shard
+            # on kv-heads when divisible, else on the sequence dim.
+            _, _, S, Hkv, _ = leaf.shape
+            h_ax = _div(mesh_sizes, Hkv, "model")
+            s_ax = None if h_ax else _div(mesh_sizes, S, "model")
+            return P(None, b_ax, s_ax, h_ax, None)
+        if name == "conv":
+            # [L, B, K-1, conv_dim]
+            return P(None, b_ax, None, _div(mesh_sizes, leaf.shape[-1],
+                                            "model"))
+        if name == "ssm":
+            # [L, B, H, P, N]
+            return P(None, b_ax, _div(mesh_sizes, leaf.shape[2], "model"),
+                     None, None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_shape)
+
+
+def as_shardings(mesh, spec_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

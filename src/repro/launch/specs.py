@@ -1,0 +1,188 @@
+"""Input specs (ShapeDtypeStruct stand-ins — no device allocation) and the
+step functions lowered by the dry-run for every (arch x shape) pair.
+
+Step kinds:
+    train   — one optimizer step (Adam, remat scan over layers). This is
+              also one *local* step of the paper's framework; the
+              technique's round structure is lowered separately by
+              ``local_round`` (multi-pod, H local steps + model exchange).
+    prefill — prompt forward building the decode cache.
+    decode  — ONE new token against a seq_len KV cache (serve_step).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import INPUT_SHAPES, InputShape
+from repro.core.async_local_sgd import (broadcast_to_workers,
+                                        local_sgd_round, worker_mean)
+from repro.launch import shardings as shd
+from repro.launch.mesh import mesh_axis_sizes
+from repro.models import transformer as tfm
+from repro.optim.optimizers import adam, apply_updates
+
+PyTree = Any
+
+
+def params_shape(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(functools.partial(tfm.init_lm, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape | str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape."""
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        spec = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.family == "audio":
+            spec["frames"] = sds((B, cfg.n_frames, cfg.d_model),
+                                 jnp.bfloat16)
+        return spec
+    # decode: one token + a full cache
+    cache = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+    return {"token": sds((B,), jnp.int32), "cache": cache}
+
+
+# --------------------------------------------------------------------------
+# Step functions
+# --------------------------------------------------------------------------
+
+def make_optimizer(cfg: ArchConfig | None = None):
+    mdt = jnp.float32
+    if cfg is not None and cfg.adam_moment_dtype == "bfloat16":
+        mdt = jnp.bfloat16
+    return adam(clip_norm=1.0, moment_dtype=mdt)
+
+
+def make_train_step(cfg: ArchConfig, lr: float = 1e-4,
+                    microbatches: int = 1):
+    """One optimizer step. With ``microbatches`` > 1 the global batch is
+    split and gradients accumulate in f32 over a scan — activation peak
+    (the remat-saved per-layer stacks) divides by the microbatch count,
+    which is what keeps the 16 GiB/chip budget at batch 256 x 4k."""
+    opt = make_optimizer(cfg)
+    # f32 accumulation by default; archs running in the low-precision
+    # optimizer mode (adam_moment_dtype=bfloat16, i.e. qwen3-moe-235b)
+    # also accumulate in bf16 — the last ~1.9 GiB/chip that brings the
+    # 235B model under 16 GiB on one pod (§Perf HC2; precision tradeoff
+    # documented there).
+    acc_dtype = (jnp.bfloat16 if cfg.adam_moment_dtype == "bfloat16"
+                 else jnp.float32)
+
+    def grad_fn(params, tokens, frames):
+        return jax.value_and_grad(tfm.lm_loss, argnums=1)(
+            cfg, params, tokens, frames)
+
+    def train_step(params, opt_state, tokens, frames=None):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, tokens, frames)
+        else:
+            B = tokens.shape[0]
+            mb = tokens.reshape((microbatches, B // microbatches)
+                                + tokens.shape[1:])
+            fb = (None if frames is None else
+                  frames.reshape((microbatches, B // microbatches)
+                                 + frames.shape[1:]))
+
+            def acc(carry, xs):
+                loss_acc, g_acc = carry
+                t = xs if fb is None else xs[0]
+                f = None if fb is None else xs[1]
+                loss, g = grad_fn(params, t, f)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            xs = mb if fb is None else (mb, fb)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), xs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss
+
+    return train_step, opt
+
+
+def make_local_round(cfg: ArchConfig, n_workers: int, local_steps: int,
+                     lr: float = 1e-4, tau: int = 0):
+    """The paper's technique as one jittable round: every worker (pod)
+    runs ``local_steps`` SGD-family steps with NO cross-worker collective,
+    then models are averaged (one cross-pod all-reduce). With tau=1 the
+    averaging consumes the previous round's dispatch (stale averaging) —
+    the collective result is needed one call later, so on hardware it
+    overlaps the whole next round of local compute."""
+    opt = make_optimizer(cfg)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        frames = batch.get("frames")
+        return tfm.lm_loss(cfg, params, tokens, frames)
+
+    def round_fn(stacked_params, stacked_opt, batches):
+        p, o, losses = local_sgd_round(loss_fn, opt, stacked_params,
+                                       stacked_opt, batches, lr)
+        avg = worker_mean(p)           # <- the model exchange (all-reduce)
+        p = broadcast_to_workers(avg, p)
+        return p, o, jnp.mean(losses)
+
+    return round_fn, opt
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, tokens, frames=None):
+        return tfm.lm_prefill(cfg, params, tokens, frames)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode_step(params, token, cache):
+        return tfm.lm_decode_step(cfg, params, token, cache)
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# Shardings for a (cfg, shape, mesh) triple
+# --------------------------------------------------------------------------
+
+def build_shardings(cfg: ArchConfig, shape: InputShape, mesh,
+                    opt_shape: PyTree | None = None,
+                    stacked_workers: int = 0) -> dict:
+    ms = mesh_axis_sizes(mesh)
+    pshape = params_shape(cfg)
+    pspec = shd.param_specs(cfg, pshape, ms)
+    if stacked_workers:
+        pshape = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((stacked_workers,) + s.shape,
+                                           s.dtype), pshape)
+        pspec = jax.tree.map(
+            lambda p: jax.sharding.PartitionSpec("pod", *p), pspec,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    out = {"params_shape": pshape, "params": pspec, "mesh_sizes": ms}
+    if opt_shape is not None:
+        out["opt"] = shd.opt_state_specs(pspec, opt_shape)
+    B, S = shape.global_batch, shape.seq_len
+    out["tokens"] = shd.token_spec(ms, B)
+    out["frames"] = shd.frames_spec(ms, B)
+    if shape.kind == "decode":
+        cache_shape = jax.eval_shape(lambda: tfm.init_cache(cfg, B, S))
+        out["cache_shape"] = cache_shape
+        out["cache"] = shd.cache_specs(cfg, cache_shape, ms, B)
+        out["token1"] = jax.sharding.PartitionSpec(
+            shd.batch_axes(ms, B))
+    logits_v = shd._div(ms, cfg.padded_vocab, "model")
+    out["logits"] = jax.sharding.PartitionSpec(
+        shd.batch_axes(ms, B), logits_v)
+    return out

@@ -1,0 +1,10 @@
+"""Model zoo: the paper's LSTM predictor plus the assigned transformer
+architectures (dense GQA, MoE, Mamba2 SSM, hybrid, enc-dec, early-fusion
+VLM), all functional (params as pytrees) and scan-over-layers for
+compile-time control.
+"""
+
+from repro.models.rnn import RNNConfig, init_rnn, rnn_apply
+from repro.models.model_zoo import build_model
+
+__all__ = ["RNNConfig", "build_model", "init_rnn", "rnn_apply"]

@@ -1,0 +1,112 @@
+"""Shared building blocks: norms, rotary embeddings, activations, inits."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# -------------------------------------------------------------------------
+# Initializers (truncated-normal-free, deterministic, split-by-path)
+# -------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """LeCun-normal-ish init: std = scale / sqrt(fan_in)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (scale if scale is not None else 1.0) / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype, std: float = 0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+# -------------------------------------------------------------------------
+# Norms
+# -------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * weight.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p.get("b"))
+
+
+def norm_param(kind: str, dim: int, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((dim,), dtype)}
+    return {"w": jnp.ones((dim,), dtype), "b": jnp.zeros((dim,), dtype)}
+
+
+# -------------------------------------------------------------------------
+# Activations
+# -------------------------------------------------------------------------
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def relu2(x):
+    """Squared ReLU (nemotron-4)."""
+    r = jnp.maximum(x, 0.0)
+    return r * r
+
+
+ACTIVATIONS = {
+    "silu": silu,
+    "gelu": jax.nn.gelu,
+    "relu2": relu2,
+}
+
+
+# -------------------------------------------------------------------------
+# Rotary position embeddings
+# -------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 1e4):
+    """[head_dim // 2] inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32.
+
+    Rotates pairs (x[2i], x[2i+1]) — the interleaved convention.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad vocab to a shardable multiple (standard practice; logits over
+    padding ids are masked at the loss)."""
+    return ((vocab + multiple - 1) // multiple) * multiple

@@ -1,0 +1,34 @@
+"""build_model(cfg): uniform functional handle over every architecture."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tfm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable            # (key) -> params
+    forward: Callable         # (params, tokens, frames=None) -> (logits, aux)
+    loss: Callable            # (params, tokens, frames=None) -> scalar
+    prefill: Callable         # (params, tokens, frames=None) -> (logits, cache)
+    decode_step: Callable     # (params, token, cache) -> (logits, cache)
+    init_cache: Callable      # (batch, max_len) -> cache
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=lambda key: tfm.init_lm(cfg, key),
+        forward=lambda p, t, frames=None: tfm.lm_forward(cfg, p, t, frames),
+        loss=lambda p, t, frames=None: tfm.lm_loss(cfg, p, t, frames),
+        prefill=lambda p, t, frames=None: tfm.lm_prefill(cfg, p, t, frames),
+        decode_step=lambda p, tok, cache: tfm.lm_decode_step(cfg, p, tok, cache),
+        init_cache=lambda batch, max_len: tfm.init_cache(cfg, batch, max_len),
+    )

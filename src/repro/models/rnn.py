@@ -1,0 +1,111 @@
+"""The paper's model: Input -> 2 x LSTM -> 3 x FC (Table I footnote ¶),
+sliding window 20, for stock prediction, plus an extreme-event indicator
+head (sigmoid) for the EVL experiments.
+
+Functional LSTM built on ``jax.lax.scan``; the fused cell also exists as a
+Pallas kernel (``repro.kernels.lstm``) validated against ``lstm_cell``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class RNNConfig:
+    input_dim: int = 5          # OHLCV
+    hidden: int = 64
+    num_layers: int = 2         # paper: 2 LSTM layers
+    fc_dims: tuple = (32, 16)   # paper: 3 FC layers (2 hidden + output)
+    window: int = 20            # paper Table I
+    evl_head: bool = True       # extreme-event indicator head
+    dtype: Any = jnp.float32
+
+
+def init_lstm_layer(key, in_dim: int, hidden: int, dtype):
+    k1, k2 = jax.random.split(key)
+    # gates packed [i, f, g, o] along the last dim
+    return {
+        "wx": dense_init(k1, (in_dim, 4 * hidden), dtype),
+        "wh": dense_init(k2, (hidden, 4 * hidden), dtype),
+        # forget-gate bias 1.0 (standard trick for gradient flow)
+        "b": jnp.concatenate([
+            jnp.zeros((hidden,), dtype), jnp.ones((hidden,), dtype),
+            jnp.zeros((2 * hidden,), dtype)]),
+    }
+
+
+def lstm_cell(p, x_t, h, c):
+    """Fused LSTM cell: x_t [B, I]; h, c [B, H] -> (h', c')."""
+    gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i = jax.nn.sigmoid(i)
+    f = jax.nn.sigmoid(f)
+    g = jnp.tanh(g)
+    o = jax.nn.sigmoid(o)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def lstm_layer_apply(p, xs):
+    """xs [B, T, I] -> hs [B, T, H] via scan over time."""
+    B = xs.shape[0]
+    H = p["wh"].shape[0]
+    h0 = jnp.zeros((B, H), xs.dtype)
+    c0 = jnp.zeros((B, H), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = lstm_cell(p, x_t, h, c)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), xs.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def init_rnn(key, cfg: RNNConfig) -> PyTree:
+    keys = jax.random.split(key, cfg.num_layers + len(cfg.fc_dims) + 2)
+    params: dict = {"lstm": [], "fc": []}
+    in_dim = cfg.input_dim
+    for i in range(cfg.num_layers):
+        params["lstm"].append(init_lstm_layer(keys[i], in_dim, cfg.hidden,
+                                              cfg.dtype))
+        in_dim = cfg.hidden
+    dims = (cfg.hidden,) + tuple(cfg.fc_dims)
+    for j in range(len(cfg.fc_dims)):
+        k = keys[cfg.num_layers + j]
+        params["fc"].append({
+            "w": dense_init(k, (dims[j], dims[j + 1]), cfg.dtype),
+            "b": jnp.zeros((dims[j + 1],), cfg.dtype)})
+    k_out = keys[-2]
+    params["out"] = {"w": dense_init(k_out, (dims[-1], 1), cfg.dtype),
+                     "b": jnp.zeros((1,), cfg.dtype)}
+    if cfg.evl_head:
+        k_evl = keys[-1]
+        params["evl"] = {"w": dense_init(k_evl, (dims[-1], 1), cfg.dtype),
+                         "b": jnp.zeros((1,), cfg.dtype)}
+    return params
+
+
+def rnn_apply(params: PyTree, x, cfg: RNNConfig):
+    """x [B, window, input_dim] -> (y_pred [B], u_extreme [B] or None)."""
+    h = x
+    for lp in params["lstm"]:
+        h = lstm_layer_apply(lp, h)
+    h = h[:, -1, :]                      # last time step
+    for fp in params["fc"]:
+        h = jnp.tanh(h @ fp["w"] + fp["b"])
+    y = (h @ params["out"]["w"] + params["out"]["b"])[:, 0]
+    u = None
+    if cfg.evl_head and "evl" in params:
+        u = jax.nn.sigmoid((h @ params["evl"]["w"] + params["evl"]["b"]))[:, 0]
+    return y, u

@@ -1,0 +1,25 @@
+"""Optimizers as pure pytree transforms (no optax in this container).
+
+Each optimizer is a pair of pure functions:
+    init(params) -> opt_state
+    update(grads, opt_state, params, lr) -> (updates, opt_state)
+apply with ``apply_updates(params, updates)`` (updates are *subtracted*).
+"""
+
+from repro.optim.optimizers import (
+    Optimizer,
+    adam,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "apply_updates",
+    "clip_by_global_norm",
+    "global_norm",
+    "sgd",
+]

@@ -1,0 +1,11 @@
+from repro.training.loop import TrainResult, train_rnn_serial, train_rnn_local_sgd
+from repro.training.metrics import extreme_event_metrics, mse, rmse
+
+__all__ = [
+    "TrainResult",
+    "extreme_event_metrics",
+    "mse",
+    "rmse",
+    "train_rnn_local_sgd",
+    "train_rnn_serial",
+]

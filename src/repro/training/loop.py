@@ -1,0 +1,184 @@
+"""Training loops for the paper's stock-prediction experiments.
+
+- ``train_rnn_serial``: single-node baseline (paper's reference point).
+- ``train_rnn_local_sgd``: the proposed framework (n workers, linearly
+  increasing rounds, model exchange, optional staleness) via
+  ``repro.core.AsyncLocalSGD``.
+
+Both share the same loss construction: MSE on the next-step prediction,
+optionally + EVL on the extreme-indicator head, optionally per-sample
+weights (the "evl" resampling strategy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_local_sgd import AsyncLocalSGD, LocalSGDConfig
+from repro.core.schedules import SampleSchedule, StepSizeSchedule
+from repro.data.sharding import client_splits
+from repro.data.windows import WindowDataset
+from repro.extreme.evl import evl_loss
+from repro.extreme.indicators import extreme_fractions
+from repro.models.rnn import RNNConfig, init_rnn, rnn_apply
+from repro.optim.optimizers import Optimizer, apply_updates, sgd
+from repro.training.metrics import extreme_event_metrics, mse
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: PyTree
+    loss_history: list
+    test_mse: float
+    test_extreme: dict
+    communications: int
+    iterations: int
+    comm_bytes: int = 0
+
+
+def make_loss_fn(cfg: RNNConfig, evl_weight: float = 0.0,
+                 beta0: float = 0.95, beta1: float = 0.05,
+                 gamma: float = 2.0, l2: float = 0.0):
+    """batch = (x, y, v, w): windows, targets, indicators, sample weights."""
+
+    def loss_fn(params, batch):
+        x, y, v, w = batch
+        pred, u = rnn_apply(params, x, cfg)
+        per = jnp.square(pred - y)
+        loss = jnp.mean(per * w)
+        if evl_weight > 0.0 and u is not None:
+            vbin = (jnp.abs(v) > 0).astype(jnp.float32)
+            loss = loss + evl_weight * evl_loss(u, vbin, beta0, beta1, gamma)
+        if l2 > 0.0:
+            sq = sum(jnp.sum(jnp.square(p))
+                     for p in jax.tree_util.tree_leaves(params))
+            loss = loss + 0.5 * l2 * sq
+        return loss
+
+    return loss_fn
+
+
+def _batch_arrays(ds: WindowDataset, idx: np.ndarray, weights=None):
+    w = (weights[idx] if weights is not None
+         else np.ones(len(idx), np.float32))
+    return (ds.x[idx], ds.y[idx], ds.v.astype(np.float32)[idx], w)
+
+
+def _stack_batches(ds, order, pos, n, batch, weights=None):
+    """n consecutive batches starting at cursor pos (wrapping)."""
+    out = []
+    for i in range(n):
+        start = (pos + i * batch) % max(len(order) - batch, 1)
+        out.append(_batch_arrays(ds, order[start:start + batch], weights))
+    return tuple(np.stack([b[i] for b in out]) for i in range(4))
+
+
+def evaluate(params, cfg: RNNConfig, ds: WindowDataset) -> tuple[float, dict]:
+    pred, u = rnn_apply(params, jnp.asarray(ds.x), cfg)
+    test_mse = mse(pred, ds.y)
+    ext = (extreme_event_metrics(np.asarray(u), ds.v)
+           if u is not None else {})
+    return test_mse, ext
+
+
+def train_rnn_serial(train_ds: WindowDataset, test_ds: WindowDataset,
+                     cfg: RNNConfig | None = None, iterations: int = 2000,
+                     batch: int = 32, optimizer: Optimizer | None = None,
+                     stepsize: StepSizeSchedule | None = None,
+                     evl_weight: float = 0.0, weights=None,
+                     seed: int = 0) -> TrainResult:
+    """Single-compute-node baseline: plain SGD with the paper's
+    diminishing step size."""
+    cfg = cfg or RNNConfig()
+    stepsize = stepsize or StepSizeSchedule()
+    fr = extreme_fractions(train_ds.v)
+    loss_fn = make_loss_fn(cfg, evl_weight, beta0=fr["normal"],
+                           beta1=max(fr["right"] + fr["left"], 1e-3))
+    opt = optimizer or sgd(momentum=0.0)
+    params = init_rnn(jax.random.PRNGKey(seed), cfg)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, opt_state, batch_data, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_data)
+        upd, opt_state = opt.update(grads, opt_state, params, lr)
+        return apply_updates(params, upd), opt_state, loss
+
+    rng = np.random.default_rng(seed)
+    order = np.arange(len(train_ds))
+    rng.shuffle(order)
+    losses = []
+    pos = 0
+    for t in range(iterations):
+        if pos + batch > len(order):
+            rng.shuffle(order)
+            pos = 0
+        b = _batch_arrays(train_ds, order[pos:pos + batch], weights)
+        pos += batch
+        params, opt_state, loss = step(params, opt_state, b,
+                                       float(stepsize(t)))
+        losses.append(float(loss))
+
+    test_mse, ext = evaluate(params, cfg, test_ds)
+    return TrainResult(params=params, loss_history=losses, test_mse=test_mse,
+                       test_extreme=ext, communications=0,
+                       iterations=iterations)
+
+
+def train_rnn_local_sgd(train_ds: WindowDataset, test_ds: WindowDataset,
+                        n_workers: int = 2, cfg: RNNConfig | None = None,
+                        iterations: int = 2000, batch: int = 32,
+                        schedule: SampleSchedule | None = None,
+                        stepsize: StepSizeSchedule | None = None,
+                        optimizer: Optimizer | None = None,
+                        tau: int = 0, split: str = "iid",
+                        evl_weight: float = 0.0, seed: int = 0) -> TrainResult:
+    """The paper's framework on the stacked-worker SPMD path."""
+    cfg = cfg or RNNConfig()
+    fr = extreme_fractions(train_ds.v)
+    loss_fn = make_loss_fn(cfg, evl_weight, beta0=fr["normal"],
+                           beta1=max(fr["right"] + fr["left"], 1e-3))
+    opt = optimizer or sgd(momentum=0.0)
+    lcfg = LocalSGDConfig(
+        n_workers=n_workers, tau=tau,
+        schedule=schedule or SampleSchedule(),
+        stepsize=stepsize or StepSizeSchedule())
+    trainer = AsyncLocalSGD(loss_fn, opt, lcfg)
+    params = init_rnn(jax.random.PRNGKey(seed), cfg)
+    stacked, opt_state = trainer.init(params)
+
+    splits = client_splits(len(train_ds), n_workers, mode=split, seed=seed)
+    rng = np.random.default_rng(seed)
+    orders = [s.copy() for s in splits]
+    for o in orders:
+        rng.shuffle(o)
+    cursors = [0] * n_workers
+
+    round_i = 0
+    while trainer.iterations_done < iterations:
+        round_i += 1
+        h = trainer.local_steps_for_round(round_i)
+        per_worker = []
+        for wkr in range(n_workers):
+            bw = _stack_batches(train_ds, orders[wkr], cursors[wkr], h, batch)
+            cursors[wkr] = (cursors[wkr] + h * batch) % max(
+                len(orders[wkr]) - batch, 1)
+            per_worker.append(bw)
+        batches = tuple(np.stack([pw[i] for pw in per_worker])
+                        for i in range(4))
+        stacked, opt_state, _ = trainer.run_round(stacked, opt_state, batches)
+
+    final = jax.tree.map(lambda a: a[0], stacked)
+    test_mse, ext = evaluate(final, cfg, test_ds)
+    return TrainResult(params=final, loss_history=trainer.loss_history,
+                       test_mse=test_mse, test_extreme=ext,
+                       communications=trainer.communications,
+                       iterations=trainer.iterations_done,
+                       comm_bytes=trainer.communication_bytes(stacked))

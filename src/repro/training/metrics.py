@@ -1,0 +1,29 @@
+"""Prediction metrics for the paper's experiments."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mse(pred, target):
+    return float(jnp.mean(jnp.square(jnp.asarray(pred) - jnp.asarray(target))))
+
+
+def rmse(pred, target):
+    return float(np.sqrt(mse(pred, target)))
+
+
+def extreme_event_metrics(u_pred, v_true, threshold: float = 0.5) -> dict:
+    """Precision / recall / F1 for the (right-)extreme-event indicator head.
+    v_true in {-1, 0, 1} is binarized to |v| (any extreme)."""
+    u = np.asarray(u_pred) >= threshold
+    v = np.abs(np.asarray(v_true)) > 0
+    tp = int(np.sum(u & v))
+    fp = int(np.sum(u & ~v))
+    fn = int(np.sum(~u & v))
+    precision = tp / max(tp + fp, 1)
+    recall = tp / max(tp + fn, 1)
+    f1 = 2 * precision * recall / max(precision + recall, 1e-12)
+    return {"precision": precision, "recall": recall, "f1": f1,
+            "tp": tp, "fp": fp, "fn": fn, "n_extreme": int(np.sum(v))}

@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests
+and benches must see the real single CPU device; only dryrun.py forces
+512 placeholder devices (and only in its own process)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def stock_windows():
+    from repro.data import load_stock, make_windows, train_test_split
+    ohlcv = load_stock("AAPL", n_days=600)
+    tr, te = train_test_split(ohlcv)
+    return make_windows(tr), make_windows(te)

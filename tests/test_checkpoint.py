@@ -1,0 +1,43 @@
+"""Checkpoint roundtrip."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step": jnp.asarray(7, jnp.int32)}
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, tree, metadata={"round": 3, "note": "hi"})
+    like = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), tree)
+    loaded, meta = load_checkpoint(path, like=like)
+    assert meta == {"round": 3, "note": "hi"}
+    np.testing.assert_allclose(np.asarray(loaded["layers"]["w"]),
+                               np.asarray(tree["layers"]["w"]))
+    assert loaded["step"] == 7
+
+
+def test_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, like={"w": np.zeros((3, 3))})
+
+
+def test_missing_key_raises(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        load_checkpoint(path, like={"w2": np.zeros((2,))})
+
+
+def test_flat_load(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"a": {"b": jnp.ones((2,))}})
+    flat, meta = load_checkpoint(path)
+    assert "a/b" in flat and meta is None

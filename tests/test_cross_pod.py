@@ -1,0 +1,33 @@
+"""Cross-pod collective classification (used by §Perf HC3 to measure the
+paper's communication-reduction claim on the multi-pod mesh)."""
+
+from repro.launch.hlo_analysis import _is_cross_pod
+
+
+def test_explicit_groups():
+    within = "all-reduce(%x), replica_groups={{0,1},{2,3}}, to_apply=%a"
+    cross = "all-reduce(%x), replica_groups={{0,256},{1,257}}, to_apply=%a"
+    assert not _is_cross_pod(within, 256)
+    assert _is_cross_pod(cross, 256)
+
+
+def test_iota_groups_within_pod():
+    # 32 groups of 16 devices: data-axis groups on the (2,16,16) mesh,
+    # device ids iota over [512] — consecutive 16-blocks stay in-pod
+    line = "all-gather(%x), replica_groups=[32,16]<=[512], dimensions={0}"
+    assert not _is_cross_pod(line, 256)
+
+
+def test_iota_groups_cross_pod():
+    # 256 groups of 2: {i, i+256} pairs — the cross-pod model exchange
+    line = ("all-reduce(%x), replica_groups=[256,2]<=[2,256]T(1,0), "
+            "to_apply=%add")
+    assert _is_cross_pod(line, 256)
+
+
+def test_collective_permute_pairs():
+    assert _is_cross_pod(
+        "collective-permute(%x), source_target_pairs={{0,256},{256,0}}",
+        256)
+    assert not _is_cross_pod(
+        "collective-permute(%x), source_target_pairs={{0,1},{1,0}}", 256)

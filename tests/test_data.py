@@ -1,0 +1,101 @@
+"""Data pipeline: synthetic generator stylized facts, windows, splits."""
+
+import numpy as np
+import pytest
+
+from repro.data.sharding import client_splits
+from repro.data.synthetic import SyntheticStockConfig, generate_ohlcv, log_returns
+from repro.data.tokens import synthetic_embedding_batch, synthetic_token_batch
+from repro.data.windows import make_windows, normalize_windows
+from repro.data.sp500 import load_stock, train_test_split
+
+
+def test_synthetic_deterministic_and_distinct():
+    a1 = generate_ohlcv("AAPL")
+    a2 = generate_ohlcv("AAPL")
+    b = generate_ohlcv("AMZN")
+    np.testing.assert_array_equal(a1, a2)
+    assert not np.array_equal(a1, b)
+
+
+def test_synthetic_ohlc_invariants():
+    x = generate_ohlcv("TEST", SyntheticStockConfig(n_days=500))
+    o, h, l, c, v = x.T
+    assert np.all(h >= np.maximum(o, c) - 1e-4)
+    assert np.all(l <= np.minimum(o, c) + 1e-4)
+    assert np.all(l > 0) and np.all(v > 0)
+
+
+def test_synthetic_heavy_tails():
+    """The generator must produce heavy-tailed returns (excess kurtosis
+    well above gaussian) — the premise of the paper's extreme-event
+    study."""
+    r = log_returns(generate_ohlcv("AAPL", SyntheticStockConfig(
+        n_days=1430))[:, 3])
+    z = (r - r.mean()) / r.std()
+    kurtosis = float(np.mean(z ** 4))
+    assert kurtosis > 4.0  # gaussian = 3
+
+
+def test_make_windows_shapes():
+    x = generate_ohlcv("AAPL", SyntheticStockConfig(n_days=300))
+    ds = make_windows(x, window=20)
+    assert ds.x.shape == (280, 20, 5)
+    assert ds.y.shape == (280,)
+    assert ds.v.shape == (280,)
+    assert ds.eps1 > 0 and ds.eps2 > 0
+    assert set(np.unique(ds.v)).issubset({-1, 0, 1})
+
+
+def test_normalize_windows_base_zero():
+    w = np.abs(np.random.default_rng(0).normal(
+        10, 1, (4, 20, 5))).astype(np.float32)
+    n = normalize_windows(w)
+    np.testing.assert_allclose(n[:, 0, :], 0.0, atol=1e-6)
+
+
+def test_window_too_short_raises():
+    x = generate_ohlcv("AAPL", SyntheticStockConfig(n_days=10))
+    with pytest.raises(ValueError):
+        make_windows(x, window=20)
+
+
+def test_train_test_split_chronological():
+    x = np.arange(100, dtype=np.float32).reshape(-1, 1).repeat(5, 1)
+    tr, te = train_test_split(x, 0.6)
+    assert len(tr) == 60 and len(te) == 40
+    assert tr[-1, 0] < te[0, 0]
+
+
+def test_client_splits_modes():
+    for mode in ("iid", "contiguous"):
+        parts = client_splits(100, 3, mode)
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.arange(100))
+    shared = client_splits(100, 3, "shared")
+    assert all(len(p) == 100 for p in shared)
+    with pytest.raises(ValueError):
+        client_splits(10, 2, "bogus")
+
+
+def test_token_batches():
+    t = synthetic_token_batch(4, 64, 1000, seed=1)
+    assert t.shape == (4, 64) and t.dtype == np.int32
+    assert t.min() >= 0 and t.max() < 1000
+    e = synthetic_embedding_batch(2, 10, 16)
+    assert e.shape == (2, 10, 16)
+
+
+def test_load_stock_fallback_synthetic(tmp_path):
+    x = load_stock("NOSUCH", data_dir=str(tmp_path), n_days=100)
+    assert x.shape == (100, 5)
+
+
+def test_load_stock_reads_csv(tmp_path):
+    p = tmp_path / "FOO.csv"
+    p.write_text("Date,Open,High,Low,Close,Volume\n"
+                 "2012-01-01,1,2,0.5,1.5,100\n"
+                 "2012-01-02,1.5,2.5,1.0,2.0,200\n")
+    x = load_stock("FOO", data_dir=str(tmp_path))
+    assert x.shape == (2, 5)
+    np.testing.assert_allclose(x[0], [1, 2, 0.5, 1.5, 100])

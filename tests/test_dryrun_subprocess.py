@@ -1,0 +1,30 @@
+"""One real 512-device lower+compile smoke via the dryrun CLI (separate
+process because XLA_FLAGS must be set before jax initializes). The full
+40-pair matrix runs in benchmarks/EXPERIMENTS.md; here we verify one
+cheap pair end-to-end so regressions in the launch layer fail CI."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_pair(tmp_path):
+    out = tmp_path / "dr.jsonl"
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "mamba2-370m", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(out)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["status"] == "ok"
+    assert rec["memory"]["peak_bytes"] < 16 * 2**30
+    assert rec["roofline"]["dominant"] in ("compute", "memory",
+                                           "collective")

@@ -1,0 +1,96 @@
+"""Extreme-event modeling — paper eqs. (1)-(6)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.extreme.evl import bce_loss, evl_loss, evl_weights
+from repro.extreme.evt import fit_tail, gev_cdf, tail_probability
+from repro.extreme.indicators import (extreme_fractions, indicator_sequence,
+                                      quantile_thresholds)
+
+
+def test_indicator_partition():
+    y = np.array([-5.0, -0.1, 0.0, 0.1, 5.0])
+    v = np.asarray(indicator_sequence(y, eps1=1.0, eps2=1.0))
+    assert v.tolist() == [-1, 0, 0, 0, 1]
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=1, max_size=64),
+       st.floats(0.1, 5.0), st.floats(0.1, 5.0))
+@settings(max_examples=50, deadline=None)
+def test_indicator_total_partition(ys, e1, e2):
+    v = np.asarray(indicator_sequence(np.array(ys, np.float32), e1, e2))
+    assert set(np.unique(v)).issubset({-1, 0, 1})
+    fr = extreme_fractions(v)
+    assert abs(fr["normal"] + fr["right"] + fr["left"] - 1.0) < 1e-6
+
+
+def test_indicator_rejects_bad_thresholds():
+    with pytest.raises(ValueError):
+        indicator_sequence(np.zeros(3), eps1=-1.0, eps2=1.0)
+
+
+def test_gev_cdf_monotone_and_bounded():
+    y = jnp.linspace(-3, 3, 50)
+    for gamma in (0.0, 2.0, 5.0):
+        c = np.asarray(gev_cdf(y, gamma))
+        assert np.all(c >= 0) and np.all(c <= 1)
+        assert np.all(np.diff(c) >= -1e-6)
+
+
+def test_tail_probability_decreasing():
+    # gamma=0 (Gumbel) has unbounded support; gamma!=0 clips at y/gamma=1
+    p = fit_tail(np.random.default_rng(0).standard_t(3, 5000), q=0.95)
+    ys = np.linspace(p["xi"], p["xi"] + 5 * p["scale"], 20)
+    t = np.asarray(tail_probability(ys, p["xi"], p["scale"],
+                                    p["tail_at_xi"], gamma=0.0))
+    assert np.all(np.diff(t) <= 1e-9)
+    # eq. (4) at y=xi gives (1 - log G(0)) = 2x the empirical tail mass
+    assert t[0] <= 2 * p["tail_at_xi"] + 1e-6
+
+
+@given(st.floats(0.01, 0.99), st.integers(0, 1))
+@settings(max_examples=100, deadline=None)
+def test_evl_nonnegative(u, v):
+    loss = float(evl_loss(jnp.array([u]), jnp.array([v]),
+                          beta0=0.9, beta1=0.1, gamma=2.0))
+    assert loss >= 0.0
+    assert np.isfinite(loss)
+
+
+def test_evl_penalizes_missed_extremes_more():
+    """beta0 (large, normal fraction) weights the extreme-class term: a
+    missed extreme (v=1, u small) must cost more than a false alarm
+    (v=0, u large) under imbalance."""
+    missed = float(evl_loss(jnp.array([0.1]), jnp.array([1.0]),
+                            beta0=0.95, beta1=0.05))
+    false_alarm = float(evl_loss(jnp.array([0.9]), jnp.array([0.0]),
+                                 beta0=0.95, beta1=0.05))
+    assert missed > false_alarm
+
+
+def test_evl_weight_structure():
+    u = jnp.array([0.1, 0.5, 0.9])
+    w_pos, w_neg = evl_weights(u, None, beta0=0.9, beta1=0.1, gamma=2.0)
+    # low-confidence extreme detection penalized harder (w_pos decreasing)
+    assert np.all(np.diff(np.asarray(w_pos)) < 0)
+    assert np.all(np.diff(np.asarray(w_neg)) > 0)
+
+
+def test_evl_reduces_to_weighted_bce_at_large_gamma():
+    """As gamma -> inf, (1 - u/gamma)^gamma -> exp(-u): smooth weights;
+    sanity: EVL with beta0=beta1=1, gamma huge ~ e^{-u}-weighted BCE."""
+    u = jnp.array([0.3, 0.7])
+    v = jnp.array([1.0, 0.0])
+    evl = np.asarray(evl_loss(u, v, 1.0, 1.0, gamma=1e6, reduce="none"))
+    bce = np.asarray(bce_loss(u, v, reduce="none"))
+    w = np.exp(-np.array([0.3, 1 - 0.7]))
+    np.testing.assert_allclose(evl, w * bce, rtol=5e-3)
+
+
+def test_quantile_thresholds_positive():
+    y = np.random.default_rng(1).normal(size=1000)
+    e1, e2 = quantile_thresholds(y, 0.95)
+    assert e1 > 0 and e2 > 0

@@ -1,0 +1,72 @@
+"""The HLO cost analyzer must multiply while bodies by trip count (the
+reason it exists: XLA's own cost_analysis counts loop bodies once)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    M, K, N, L = 128, 256, 256, 10
+
+    def f(x, w):
+        def body(x, _):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, None, length=L)
+        return x
+
+    c = _compile(f, jax.ShapeDtypeStruct((M, K), jnp.float32),
+                 jax.ShapeDtypeStruct((K, N), jnp.float32))
+    got = analyze_hlo(c.as_text())["flops"]
+    want = 2 * M * K * N * L
+    assert 0.9 * want < got < 1.3 * want, (got, want)
+
+
+def test_single_dot_flops():
+    def f(a, b):
+        return a @ b
+    c = _compile(f, jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 32), jnp.float32))
+    got = analyze_hlo(c.as_text())["flops"]
+    want = 2 * 64 * 128 * 32
+    assert 0.9 * want < got < 1.2 * want
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ w, None
+            x, _ = jax.lax.scan(inner, x, None, length=4)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=3)
+        return x
+
+    c = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    got = analyze_hlo(c.as_text())["flops"]
+    want = 2 * 32 * 64 * 64 * 12
+    assert 0.8 * want < got < 1.4 * want
+
+
+def test_collectives_counted():
+    import os
+    # this test runs in the default single-device process: simulate via
+    # a jit with psum under shard_map only if >1 device; otherwise just
+    # check the parser on a synthetic HLO snippet.
+    hlo = """
+HloModule test
+
+ENTRY %main (p: f32[16,1024]) -> f32[16,1024] {
+  %p = f32[16,1024]{1,0} parameter(0)
+  ROOT %all-reduce.1 = f32[16,1024]{1,0} all-reduce(%p), replica_groups={}, to_apply=%add
+}
+"""
+    out = analyze_hlo(hlo)
+    assert out["collectives"]["all-reduce"] == 16 * 1024 * 4

@@ -1,0 +1,156 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps in
+interpret mode (CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+from repro.kernels.evl.ops import evl_loss_fused
+from repro.kernels.evl.ref import evl_loss_ref
+from repro.kernels.lstm.ops import lstm_cell_fused
+from repro.kernels.lstm.ref import lstm_cell_ref
+from repro.kernels.ssd.ops import ssd_scan_fused
+from repro.models.ssm import ssd_chunked, ssd_reference
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------- EVL ----
+
+@pytest.mark.parametrize("n", [1, 127, 128, 1000, 4096])
+@pytest.mark.parametrize("beta0,beta1,gamma", [(0.9, 0.1, 2.0),
+                                               (0.99, 0.01, 1.5)])
+def test_evl_kernel_matches_ref(n, beta0, beta1, gamma):
+    u = jnp.asarray(RNG.uniform(0.01, 0.99, n).astype(np.float32))
+    v = jnp.asarray((RNG.uniform(size=n) < 0.2).astype(np.float32))
+    got = evl_loss_fused(u, v, beta0, beta1, gamma, reduce="none")
+    want = evl_loss_ref(u, v, beta0, beta1, gamma)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+def test_evl_kernel_reductions():
+    u = jnp.asarray(RNG.uniform(0.01, 0.99, 300).astype(np.float32))
+    v = jnp.zeros(300)
+    m = float(evl_loss_fused(u, v, 0.9, 0.1, 2.0, reduce="mean"))
+    s = float(evl_loss_fused(u, v, 0.9, 0.1, 2.0, reduce="sum"))
+    np.testing.assert_allclose(s / 300, m, rtol=1e-6)
+
+
+# --------------------------------------------------------------- LSTM ----
+
+@pytest.mark.parametrize("batch,in_dim,hidden", [
+    (1, 5, 64), (13, 5, 64), (32, 7, 32), (8, 16, 128)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_lstm_kernel_matches_ref(batch, in_dim, hidden, dtype):
+    x = jnp.asarray(RNG.standard_normal((batch, in_dim)).astype(dtype))
+    h = jnp.asarray(RNG.standard_normal((batch, hidden)).astype(dtype))
+    c = jnp.asarray(RNG.standard_normal((batch, hidden)).astype(dtype))
+    wx = jnp.asarray((0.1 * RNG.standard_normal(
+        (in_dim, 4 * hidden))).astype(dtype))
+    wh = jnp.asarray((0.1 * RNG.standard_normal(
+        (hidden, 4 * hidden))).astype(dtype))
+    b = jnp.asarray((0.1 * RNG.standard_normal(4 * hidden)).astype(dtype))
+    hn, cn = lstm_cell_fused(x, h, c, wx, wh, b)
+    hr, cr = lstm_cell_ref(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(hn, hr, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(cn, cr, rtol=1e-5, atol=1e-6)
+
+
+def test_lstm_kernel_in_model():
+    """The fused cell is a drop-in for the model's lstm_cell."""
+    from repro.models.rnn import lstm_cell
+    p = {"wx": jnp.asarray(0.1 * RNG.standard_normal((5, 256)),
+                           jnp.float32),
+         "wh": jnp.asarray(0.1 * RNG.standard_normal((64, 256)),
+                           jnp.float32),
+         "b": jnp.asarray(0.1 * RNG.standard_normal(256), jnp.float32)}
+    x = jnp.asarray(RNG.standard_normal((3, 5)), jnp.float32)
+    h = jnp.zeros((3, 64)); c = jnp.zeros((3, 64))
+    h1, c1 = lstm_cell(p, x, h, c)
+    h2, c2 = lstm_cell_fused(x, h, c, p["wx"], p["wh"], p["b"])
+    np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------- flash attention ----
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D", [
+    (1, 128, 4, 4, 64),     # MHA, aligned
+    (2, 200, 4, 2, 64),     # GQA, ragged seq
+    (1, 300, 8, 1, 32),     # MQA
+    (2, 64, 6, 2, 128),     # tiny seq < block
+])
+@pytest.mark.parametrize("kwargs", [
+    dict(causal=True), dict(causal=False), dict(causal=True, window=37)])
+def test_flash_attention_matches_ref(B, S, Hq, Hkv, D, kwargs):
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    got = flash_attention(q, k, v, **kwargs)
+    want = attention_ref(q, k, v, **kwargs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    B, S, H, D = 1, 128, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((B, S, H, D)), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True).astype(np.float32)
+    want = attention_ref(q, k, v, causal=True).astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=0.08, atol=0.08)
+
+
+def test_blocked_attention_model_twin():
+    """models.attention.blocked_attention (the pure-JAX twin used inside
+    the transformer) agrees with the Pallas kernel."""
+    from repro.models.attention import blocked_attention
+    B, S, Hq, Hkv, D = 2, 160, 4, 2, 64
+    q = jnp.asarray(RNG.standard_normal((B, S, Hq, D)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((B, S, Hkv, D)).astype(np.float32))
+    a = blocked_attention(q, k, v, causal=True, q_block=64, kv_block=64)
+    b = flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------------------------------------- SSD -------
+
+@pytest.mark.parametrize("B,L,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 96, 3, 16, 8, 32),
+    (1, 100, 1, 32, 16, 32),   # ragged: L % chunk != 0
+    (2, 128, 4, 64, 32, 128),  # full-size chunk
+])
+def test_ssd_kernel_matches_refs(B, L, H, P, N, chunk):
+    xd = jnp.asarray((0.1 * RNG.standard_normal((B, L, H, P))).astype(np.float32))
+    a = -jnp.asarray(RNG.uniform(0.01, 0.5, (B, L, H)).astype(np.float32))
+    B_ = jnp.asarray((0.3 * RNG.standard_normal((B, L, N))).astype(np.float32))
+    C_ = jnp.asarray((0.3 * RNG.standard_normal((B, L, N))).astype(np.float32))
+    y1, s1 = ssd_scan_fused(xd, a, B_, C_, chunk=chunk)
+    y2, s2 = ssd_chunked(xd, a, B_, C_, chunk=chunk)
+    y3, s3 = ssd_reference(xd, a, B_, C_)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y1, y3, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(s1, s3, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_decode_matches_scan_tail():
+    """Sequential decode steps reproduce the chunked scan's output."""
+    from repro.models.ssm import ssd_decode_step
+    B, L, H, P, N = 1, 32, 2, 8, 4
+    xd = jnp.asarray((0.1 * RNG.standard_normal((B, L, H, P))).astype(np.float32))
+    a = -jnp.asarray(RNG.uniform(0.01, 0.5, (B, L, H)).astype(np.float32))
+    B_ = jnp.asarray((0.3 * RNG.standard_normal((B, L, N))).astype(np.float32))
+    C_ = jnp.asarray((0.3 * RNG.standard_normal((B, L, N))).astype(np.float32))
+    y_scan, _ = ssd_chunked(xd, a, B_, C_, chunk=8)
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(L):
+        y, state = ssd_decode_step(state, xd[:, t], a[:, t], B_[:, t],
+                                   C_[:, t])
+        ys.append(y)
+    y_seq = jnp.stack(ys, 1)
+    np.testing.assert_allclose(y_seq, y_scan, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,137 @@
+"""Core invariants of the paper's technique (async local SGD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_local_sgd import (AsyncLocalSGD, LocalSGDConfig,
+                                        broadcast_to_workers,
+                                        local_sgd_round, sync_step,
+                                        worker_mean)
+from repro.core.schedules import SampleSchedule, StepSizeSchedule
+from repro.optim.optimizers import apply_updates, sgd
+
+
+def quad_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, 3)).astype(np.float32)
+    w_true = np.array([1.0, -2.0, 0.5], np.float32)
+    y = x @ w_true + 0.1
+    return x, y.astype(np.float32)
+
+
+def _params():
+    return {"w": jnp.zeros((3,)), "b": jnp.zeros(())}
+
+
+def test_single_worker_single_step_equals_serial_sgd():
+    """W=1, H=1 local SGD == one plain SGD step, exactly."""
+    opt = sgd()
+    x, y = _data(8)
+    p = _params()
+    stacked = jax.tree.map(lambda a: a[None], p)
+    opt_state = jax.vmap(opt.init)(stacked)
+    batches = (x[None, None], y[None, None])  # [W=1, H=1, ...]
+    newp, _, losses = local_sgd_round(quad_loss, opt, stacked, opt_state,
+                                      batches, 0.1)
+    # serial
+    g = jax.grad(quad_loss)(p, (x, y))
+    upd, _ = opt.update(g, opt.init(p), p, 0.1)
+    want = apply_updates(p, upd)
+    got = jax.tree.map(lambda a: a[0], newp)
+    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-6)
+    np.testing.assert_allclose(got["b"], want["b"], rtol=1e-6)
+
+
+def test_model_vs_gradient_exchange_equal_for_plain_sgd():
+    """At H=1 with plain SGD, averaging models == averaging gradients
+    (linearity) — the regime where the paper's two exchange modes agree."""
+    opt = sgd()
+    x, y = _data(16)
+    p = _params()
+    W = 4
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a[None],
+                                                      (W,) + a.shape), p)
+    opt_state = jax.vmap(opt.init)(stacked)
+    xb = x.reshape(W, 4, 3)
+    yb = y.reshape(W, 4)
+    p_m, _, _ = sync_step(quad_loss, opt, stacked, opt_state, (xb, yb),
+                          0.1, exchange="model")
+    p_g, _, _ = sync_step(quad_loss, opt, stacked, opt_state, (xb, yb),
+                          0.1, exchange="gradient")
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.map(lambda a: a[0], p_m)["w"]),
+        np.asarray(jax.tree.map(lambda a: a[0], p_g)["w"]), rtol=1e-5)
+
+
+def test_identical_workers_identical_data_stay_identical():
+    opt = sgd()
+    x, y = _data(8)
+    p = _params()
+    W, H = 3, 2
+    stacked = jax.tree.map(lambda a: jnp.broadcast_to(a[None],
+                                                      (W,) + a.shape), p)
+    opt_state = jax.vmap(opt.init)(stacked)
+    xb = np.broadcast_to(x[None, None], (W, H, 8, 3))
+    yb = np.broadcast_to(y[None, None], (W, H, 8))
+    newp, _, _ = local_sgd_round(quad_loss, opt, stacked, opt_state,
+                                 (jnp.asarray(xb), jnp.asarray(yb)), 0.05)
+    for leaf in jax.tree_util.tree_leaves(newp):
+        for w in range(1, W):
+            np.testing.assert_allclose(leaf[0], leaf[w], rtol=1e-6)
+
+
+def test_worker_mean_and_broadcast_roundtrip():
+    t = {"w": jnp.arange(6.0).reshape(3, 2)}
+    avg = worker_mean(t)
+    np.testing.assert_allclose(avg["w"], t["w"].mean(0))
+    back = broadcast_to_workers(avg, t)
+    assert back["w"].shape == t["w"].shape
+
+
+def test_trainer_accounting_and_convergence():
+    x, y = _data(512)
+    cfg = LocalSGDConfig(n_workers=2, schedule=SampleSchedule(a=4),
+                         stepsize=StepSizeSchedule(eta0=0.05, beta=0.0))
+    trainer = AsyncLocalSGD(quad_loss, sgd(), cfg)
+    stacked, opt_state = trainer.init(_params())
+    rng = np.random.default_rng(0)
+    for r in range(1, 13):
+        h = trainer.local_steps_for_round(r)
+        idx = rng.integers(0, 512, size=(2, h, 32))
+        batches = (x[idx], y[idx])
+        stacked, opt_state, loss = trainer.run_round(stacked, opt_state,
+                                                     batches)
+    assert trainer.rounds_done == 12
+    assert trainer.communications == 12
+    # linear schedule: iterations >> rounds
+    assert trainer.iterations_done > 5 * trainer.rounds_done
+    assert trainer.loss_history[-1] < trainer.loss_history[0] * 0.2
+    assert trainer.communication_bytes(stacked) == \
+        12 * 2 * 2 * trainer.model_bytes(stacked)
+
+
+def test_stale_averaging_satisfies_definition_1():
+    """tau=1: the model applied at round r contains the global average of
+    round r-1 — never older (Definition 1 with constant tau)."""
+    x, y = _data(64)
+    cfg = LocalSGDConfig(n_workers=2, tau=1,
+                         schedule=SampleSchedule(a=2),
+                         stepsize=StepSizeSchedule(eta0=0.05, beta=0.0))
+    trainer = AsyncLocalSGD(quad_loss, sgd(), cfg)
+    stacked, opt_state = trainer.init(_params())
+    rng = np.random.default_rng(1)
+    for r in range(1, 6):
+        h = trainer.local_steps_for_round(r)
+        idx = rng.integers(0, 64, size=(2, h, 16))
+        stacked, opt_state, _ = trainer.run_round(stacked, opt_state,
+                                                  (x[idx], y[idx]))
+        assert len(trainer._avg_queue) <= cfg.tau
+    # still converges despite staleness
+    assert trainer.loss_history[-1] < trainer.loss_history[0]

@@ -1,0 +1,51 @@
+"""Logical-axis sharding constraints: no-op without context; correct
+specs with one."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.pshard import clear_context, constrain, sharding_context
+
+
+def test_noop_without_context():
+    x = jnp.ones((4, 8))
+    y = constrain(x, "batch", None)
+    np.testing.assert_array_equal(x, y)
+
+
+def test_rank_mismatch_raises():
+    mesh = jax.make_mesh((1,), ("data",))
+    with sharding_context(mesh, "data"):
+        with pytest.raises(ValueError):
+            constrain(jnp.ones((2, 2)), "batch")
+
+
+def test_context_applies_and_clears():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with sharding_context(mesh, "data"):
+        y = constrain(jnp.ones((2, 4)), "batch", "model")
+        assert y.shape == (2, 4)
+    # cleared: back to no-op
+    y2 = constrain(jnp.ones((3,)), "batch")
+    assert y2.shape == (3,)
+
+
+def test_unknown_axis_dropped():
+    mesh = jax.make_mesh((1,), ("data",))
+    with sharding_context(mesh, "data"):
+        # 'model' axis not in this mesh: silently unsharded
+        y = constrain(jnp.ones((2, 4)), "batch", "model")
+        assert y.shape == (2, 4)
+    clear_context()
+
+
+def test_cache_mode_selection():
+    from repro.configs import ARCHS
+    from repro.models.transformer import _attn_cache_mode
+    mixtral = ARCHS["mixtral-8x7b"]
+    assert _attn_cache_mode(mixtral, 32768) == ("ring", 4096)
+    dense = ARCHS["qwen2.5-32b"]
+    assert _attn_cache_mode(dense, 32768) == ("full", 32768)
+    assert _attn_cache_mode(dense, 524288) == ("ring", 4096)  # long variant

@@ -1,0 +1,66 @@
+"""Schedule properties — paper Table I / Remark 1."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedules import (ConstantSchedule, SampleSchedule,
+                                  StepSizeSchedule,
+                                  communication_rounds_constant,
+                                  round_step_sizes)
+
+
+def test_paper_schedule_values():
+    s = SampleSchedule(a=10, p=1, b=0)      # paper Table I
+    assert [s.round_size(i) for i in (1, 2, 3)] == [10, 20, 30]
+    assert s.cumulative(3) == 60
+
+
+def test_rounds_scale_sqrt_k():
+    """Remark 1: T ~ sqrt(2K/a) for linear s_i, vs T ~ K/s constant."""
+    s = SampleSchedule(a=10, p=1, b=0)
+    for k in (1_000, 10_000, 100_000):
+        t = s.rounds_for_budget(k)
+        assert abs(t - math.sqrt(2 * k / 10)) <= 2
+        t_const = communication_rounds_constant(k, 10)
+        assert t_const == math.ceil(k / 10)
+        assert t < t_const / 3  # dramatic communication reduction
+
+
+def test_sizes_for_budget_covers_exactly():
+    s = SampleSchedule()
+    sizes = s.sizes_for_budget(537)
+    assert sum(sizes) == 537
+    assert all(x >= 1 for x in sizes)
+
+
+def test_constant_schedule():
+    c = ConstantSchedule(size=7)
+    assert c.round_size(1) == c.round_size(100) == 7
+
+
+@given(st.integers(min_value=0, max_value=10**7))
+@settings(max_examples=50, deadline=None)
+def test_stepsize_positive_and_decreasing(t):
+    eta = StepSizeSchedule(eta0=0.01, beta=0.01)   # paper Table I
+    assert 0 < eta(t) <= 0.01
+    assert eta(t + 1) <= eta(t)
+
+
+@given(st.floats(min_value=0.5, max_value=100),
+       st.floats(min_value=0.5, max_value=2.0),
+       st.integers(min_value=1, max_value=200))
+@settings(max_examples=50, deadline=None)
+def test_schedule_monotone(a, p, i):
+    s = SampleSchedule(a=a, p=p, b=0.0)
+    assert s.round_size(i + 1) >= s.round_size(i) >= 1
+
+
+def test_round_step_sizes_uses_cumulative_t():
+    s = SampleSchedule(a=10)
+    eta = StepSizeSchedule(eta0=0.01, beta=0.01)
+    pairs = list(round_step_sizes(s, eta, 3))
+    assert pairs[0] == (10, eta(0))
+    assert pairs[1] == (20, eta(10))
+    assert pairs[2] == (30, eta(30))

@@ -1,0 +1,71 @@
+"""Event-driven async simulator — determinism, bounded staleness,
+speedup structure (paper Table II)."""
+
+import jax
+import numpy as np
+
+from repro.core.simulator import AsyncSimulator, SimConfig
+from repro.core.schedules import SampleSchedule
+from repro.optim.optimizers import sgd
+
+
+def quad_loss(params, batch):
+    x, y = batch
+    import jax.numpy as jnp
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _setup(n_clients, k=300, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((512, 3)).astype(np.float32)
+    y = (x @ np.array([1.0, -2.0, 0.5]) + 0.1).astype(np.float32)
+    import jax.numpy as jnp
+    params = {"w": jnp.zeros((3,)), "b": jnp.zeros(())}
+
+    def gen(r, h, b):
+        idx = r.integers(0, 512, size=(h, b))
+        return (x[idx], y[idx])
+
+    cfg = SimConfig(n_clients=n_clients, total_iterations=k,
+                    batch_size=16, seed=seed, **kw)
+    sim = AsyncSimulator(quad_loss, sgd(), params,
+                         [gen] * n_clients, cfg,
+                         eval_fn=lambda p: quad_loss(p, (x, y)))
+    return sim
+
+
+def test_simulator_deterministic():
+    s1 = _setup(3).run()
+    s2 = _setup(3).run()
+    assert s1["makespan"] == s2["makespan"]
+    assert s1["communications"] == s2["communications"]
+    assert s1["eval_log"] == s2["eval_log"]
+
+
+def test_staleness_bounded():
+    s = _setup(5, max_ahead=2).run()
+    assert s["max_staleness"] <= 2 + 1  # bound + the in-flight round
+
+
+def test_speedup_increases_with_clients():
+    """Paper Table II structure: more nodes -> more speedup, with
+    saturation below ideal (server aggregation cost)."""
+    speedups = {n: _setup(n, k=400).run()["speedup"] for n in (1, 2, 5)}
+    assert speedups[2] > speedups[1]
+    assert speedups[5] > speedups[2]
+    assert speedups[5] < 5.0  # saturation
+
+
+def test_simulator_converges():
+    s = _setup(2, k=600).run()
+    first = s["eval_log"][0][1]
+    last = s["eval_log"][-1][1]
+    assert last < first * 0.5
+
+
+def test_linear_schedule_fewer_communications():
+    lin = _setup(2, k=400, schedule=SampleSchedule(a=10)).run()
+    const = _setup(2, k=400, schedule=SampleSchedule(a=10, p=0.0)).run()
+    # p=0: s_i = 10 constant -> ~40 rounds; linear: ~sqrt scaling
+    assert lin["communications"] < const["communications"]

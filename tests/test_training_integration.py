@@ -1,0 +1,93 @@
+"""End-to-end behaviour: the paper's claims on the stock task.
+
+These are the integration versions of EXPERIMENTS.md — small budgets so
+CI stays fast; the benchmarks run the full-size versions."""
+
+import numpy as np
+import pytest
+
+from repro.core.schedules import ConstantSchedule, SampleSchedule
+from repro.extreme.resampling import (evl_sample_weights,
+                                      oversample_extreme_windows)
+from repro.training.loop import train_rnn_local_sgd, train_rnn_serial
+
+
+@pytest.fixture(scope="module")
+def results(stock_windows):
+    train_ds, test_ds = stock_windows
+    serial = train_rnn_serial(train_ds, test_ds, iterations=400, batch=16)
+    dist2 = train_rnn_local_sgd(train_ds, test_ds, n_workers=2,
+                                iterations=400, batch=16)
+    return train_ds, test_ds, serial, dist2
+
+
+def test_serial_baseline_learns(results):
+    _, _, serial, _ = results
+    assert np.mean(serial.loss_history[-20:]) < serial.loss_history[0] * 0.7
+    assert serial.test_mse < 0.05
+
+
+def test_distributed_matches_baseline_accuracy(results):
+    """Paper Figs. 5-10: same level of prediction accuracy as the
+    single-node baseline."""
+    _, _, serial, dist2 = results
+    assert dist2.test_mse < max(serial.test_mse * 3.0, 0.01)
+
+
+def test_distributed_communicates_less_than_iterations(results):
+    """Paper Remark 1: rounds ~ sqrt(K) — communication is a tiny
+    fraction of gradient computations."""
+    _, _, _, dist2 = results
+    assert dist2.communications < dist2.iterations / 10
+
+
+def test_linear_beats_constant_schedule_on_comm(stock_windows):
+    train_ds, test_ds = stock_windows
+    lin = train_rnn_local_sgd(train_ds, test_ds, n_workers=2,
+                              iterations=300, batch=16,
+                              schedule=SampleSchedule(a=10))
+    const = train_rnn_local_sgd(train_ds, test_ds, n_workers=2,
+                                iterations=300, batch=16,
+                                schedule=ConstantSchedule(size=10))
+    assert lin.communications < const.communications
+    assert lin.test_mse < max(3.0 * const.test_mse, 0.02)
+
+
+def test_stale_averaging_still_converges(stock_windows):
+    train_ds, test_ds = stock_windows
+    res = train_rnn_local_sgd(train_ds, test_ds, n_workers=2, tau=1,
+                              iterations=300, batch=16)
+    assert res.test_mse < 0.05
+
+
+def test_heterogeneous_split_converges(stock_windows):
+    train_ds, test_ds = stock_windows
+    res = train_rnn_local_sgd(train_ds, test_ds, n_workers=2,
+                              iterations=300, batch=16, split="contiguous")
+    assert res.test_mse < 0.08
+
+
+def test_evl_training_improves_extreme_recall(stock_windows):
+    """Sensitivity study direction: adding the EVL head objective should
+    not hurt MSE badly and should produce a usable extreme detector."""
+    train_ds, test_ds = stock_windows
+    plain = train_rnn_serial(train_ds, test_ds, iterations=400, batch=16,
+                             evl_weight=0.0)
+    evl = train_rnn_serial(train_ds, test_ds, iterations=400, batch=16,
+                           evl_weight=0.5)
+    assert evl.test_mse < max(3.0 * plain.test_mse, 0.02)
+    if evl.test_extreme.get("n_extreme", 0) > 0:
+        assert evl.test_extreme["recall"] >= 0.0  # detector produced
+
+
+def test_oversampling_changes_epoch_composition(stock_windows):
+    train_ds, _ = stock_windows
+    idx = oversample_extreme_windows(train_ds.returns, train_ds.eps1,
+                                     train_ds.eps2, target_fraction=0.3)
+    v = np.asarray(train_ds.v)
+    frac = np.mean(v[idx] != 0)
+    base = np.mean(v != 0)
+    assert frac > base  # extremes over-represented
+    w = evl_sample_weights(train_ds.returns, train_ds.eps1, train_ds.eps2)
+    assert w.shape == (len(train_ds),)
+    assert w[v != 0].mean() > w[v == 0].mean()

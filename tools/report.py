@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
+JSONL results.
+
+    PYTHONPATH=src python tools/report.py results/dryrun_*.jsonl
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def load(paths):
+    recs = {}
+    for p in paths:
+        with open(p) as f:
+            for line in f:
+                r = json.loads(line)
+                recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def true_peak(rec) -> int:
+    """Live-bytes peak (see launch.dryrun._memory_record): without
+    donation args+temp+outputs coexist; with donation the outputs alias
+    donated args and XLA books them under temp."""
+    m = rec["memory"]
+    a, o, t = m["argument_bytes"], m["output_bytes"], m["temp_bytes"]
+    if m.get("donated"):
+        return t + max(a - o, 0)
+    return a + t + o
+
+
+def main(paths):
+    recs = load(paths)
+    meshes = sorted({k[2] for k in recs})
+    print("## Dry-run matrix (status / peak GiB per chip)\n")
+    archs = sorted({k[0] for k in recs})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for mesh in meshes:
+        print(f"### mesh {mesh}\n")
+        print("| arch | " + " | ".join(shapes) + " |")
+        print("|---|" + "---|" * len(shapes))
+        for a in archs:
+            cells = []
+            for s in shapes:
+                r = recs.get((a, s, mesh))
+                if r is None:
+                    cells.append("—")
+                elif r["status"] == "skip":
+                    cells.append("skip")
+                elif r["status"] != "ok":
+                    cells.append("**FAIL**")
+                else:
+                    cells.append("ok " + fmt_bytes(true_peak(r)))
+            print(f"| {a} | " + " | ".join(cells) + " |")
+        print()
+
+    print("## Roofline (single pod, 256 chips; seconds per step)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant "
+          "| useful | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    single = [m for m in meshes if m.count("x") == 1]
+    for a in archs:
+        for s in shapes:
+            r = recs.get((a, s, single[0] if single else meshes[0]))
+            if not r or r["status"] != "ok":
+                continue
+            rf = r["roofline"]
+            print(f"| {a} | {s} | {rf['compute_s']:.3f} | "
+                  f"{rf['memory_s']:.3f} | {rf['collective_s']:.3f} | "
+                  f"{rf['dominant']} | {rf['useful_ratio']:.2f} | "
+                  f"{fmt_bytes(true_peak(r))} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
