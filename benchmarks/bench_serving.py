@@ -1,0 +1,73 @@
+"""Serving throughput/latency across micro-batcher settings (ISSUE 1
+acceptance: the dynamic batcher must sustain >= 5x the throughput of
+batch-size-1 serving on the reduced paper LSTM config).
+
+Rows: ``serve/<config>,us_per_request,rps=..;p95_ms=..;occ=..`` plus a
+final ``serve/speedup_vs_batch1`` row with the headline multiple.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.models.rnn import RNNConfig
+
+
+def _configs(window: int):
+    from repro.serving import BatcherConfig
+    buckets = (window,)          # exact-length bucket: no padding waste
+    return [
+        ("batch1", BatcherConfig(max_batch=1, max_wait_ms=0.0,
+                                 length_buckets=buckets)),
+        ("micro8_w2ms", BatcherConfig(max_batch=8, max_wait_ms=2.0,
+                                      length_buckets=buckets)),
+        ("micro32_w2ms", BatcherConfig(max_batch=32, max_wait_ms=2.0,
+                                       length_buckets=buckets)),
+        ("micro64_w5ms", BatcherConfig(max_batch=64, max_wait_ms=5.0,
+                                       length_buckets=buckets)),
+    ]
+
+
+def main(n_requests: int = 512) -> None:
+    import jax
+
+    from repro.models.rnn import init_rnn
+    from repro.serving import (LSTMForecaster, ModelRegistry, ServingEngine,
+                               Telemetry)
+
+    # reduced paper config: same topology (2 LSTM + 3 FC, window 20),
+    # smaller widths so the bench isolates serving overhead
+    cfg = RNNConfig(input_dim=5, hidden=32, num_layers=2, fc_dims=(16, 8),
+                    window=20, evl_head=True)
+    fc = LSTMForecaster(cfg=cfg, params=init_rnn(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    fc.calibrate(rng.standard_normal((64, cfg.window, 5)).astype(np.float32)
+                 * 0.02)
+    reg = ModelRegistry()
+    reg.register("m", fc)
+
+    windows = rng.standard_normal(
+        (n_requests, cfg.window, 5)).astype(np.float32) * 0.02
+    rps = {}
+    for name, bcfg in _configs(cfg.window):
+        with ServingEngine(reg, bcfg, telemetry=Telemetry()) as eng:
+            eng.warmup("m", lengths=(cfg.window,))
+            eng.telemetry.reset_clock()
+            futures = [eng.submit("m", w) for w in windows]
+            for f in futures:
+                f.result(timeout=120.0)
+            snap = eng.telemetry.snapshot()
+        rps[name] = snap["throughput_rps"]
+        row(f"serve/{name}", 1e6 / max(snap["throughput_rps"], 1e-9),
+            f"rps={snap['throughput_rps']:.0f};p95_ms={snap['p95_ms']:.2f};"
+            f"occ={snap['batch_occupancy']:.2f}")
+
+    best = max(v for k, v in rps.items() if k != "batch1")
+    speedup = best / max(rps["batch1"], 1e-9)
+    row("serve/speedup_vs_batch1", 0.0,
+        f"{speedup:.1f}x{' (>=5x OK)' if speedup >= 5.0 else ' (BELOW 5x)'}")
+
+
+if __name__ == "__main__":
+    main()

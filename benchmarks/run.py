@@ -9,7 +9,8 @@ import sys
 import traceback
 
 from benchmarks import (bench_communication, bench_extreme, bench_kernels,
-                        bench_prediction, bench_roofline, bench_speedup)
+                        bench_prediction, bench_roofline, bench_serving,
+                        bench_speedup)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -18,6 +19,7 @@ ALL = [
     ("extreme", bench_extreme),          # paper §IV.C sensitivity study
     ("kernels", bench_kernels),          # Pallas kernels vs oracles
     ("roofline", bench_roofline),        # dry-run roofline table
+    ("serving", bench_serving),          # ISSUE 1 micro-batcher throughput
 ]
 
 

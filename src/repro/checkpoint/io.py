@@ -82,6 +82,13 @@ def load_checkpoint(path: str, like: PyTree | None = None
             flat[key] = flat[key].view(np.dtype(getattr(ml_dtypes, name)))
     if like is None:
         return flat, meta
+    return assemble(flat, like), meta
+
+
+def assemble(flat: dict[str, np.ndarray], like: PyTree) -> PyTree:
+    """Re-assemble a flat {path: array} dict (as returned by
+    ``load_checkpoint`` without ``like``) into the structure of ``like`` —
+    lets one file read serve both metadata inspection and tree loading."""
     paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in paths_and_leaves:
@@ -93,4 +100,4 @@ def load_checkpoint(path: str, like: PyTree | None = None
             raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
                              f"expected {np.shape(leaf)}")
         leaves.append(arr.astype(np.asarray(leaf).dtype))
-    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,8 @@
+"""Pallas API compatibility: jax renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams`` (jax >= 0.5); resolve whichever this jax has so
+the kernels run on both sides of the rename."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

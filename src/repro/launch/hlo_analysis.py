@@ -170,7 +170,8 @@ class HloCostModel:
                 direction = re.search(r"direction=(\w+)", op.line)
                 if not m or not direction:
                     continue
-                args = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+                args = [self._operand_name(a.strip())
+                        for a in m.group(1).split(",")]
                 for a in args:
                     if a in consts:
                         c = consts[a]
@@ -189,18 +190,15 @@ class HloCostModel:
         for d in out:
             out_elems *= d
         # contraction size from lhs shape and contracting dims
-        m = re.search(r"\(([^)]*)\)", op.line[op.line.index(op.opcode):])
+        operands = self._operands_raw(op)
         cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
         k = 1
-        if m and cdims and cdims.group(1):
-            lhs = m.group(1).split(",")[0].strip().lstrip("%")
-            lhs_t = symbols.get(lhs)
-            if lhs_t:
-                dims = _shape_dims(lhs_t)
-                for ci in cdims.group(1).split(","):
-                    ci = int(ci)
-                    if ci < len(dims):
-                        k *= dims[ci]
+        if operands and cdims and cdims.group(1):
+            dims = self._operand_shape(operands[0], symbols)
+            for ci in cdims.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
         return 2.0 * out_elems * k
 
     def _conv_flops(self, op: _Op, symbols: dict[str, str]) -> float:
@@ -208,18 +206,17 @@ class HloCostModel:
         out_elems = 1
         for d in out:
             out_elems *= d
-        m = re.search(r"convolution\(([^)]*)\)", op.line)
+        operands = self._operands_raw(op)
         k = 1
-        if m:
-            rhs = m.group(1).split(",")[1].strip().lstrip("%")
-            rhs_t = symbols.get(rhs)
-            if rhs_t:
-                dims = _shape_dims(rhs_t)
-                for d in dims[:-1]:
-                    k *= d
+        if len(operands) > 1:
+            dims = self._operand_shape(operands[1], symbols)
+            for d in dims[:-1]:
+                k *= d
         return 2.0 * out_elems * k
 
-    def _operand_names(self, op: _Op) -> list[str]:
+    def _operands_raw(self, op: _Op) -> list[str]:
+        """Raw operand strings — either ``%name`` or, in newer HLO text,
+        ``f32[128,256]{1,0} %name`` (operand types printed inline)."""
         idx = op.line.find(op.opcode + "(")
         if idx < 0:
             return []
@@ -228,9 +225,9 @@ class HloCostModel:
         out = []
         cur = ""
         for ch in args:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
+            elif ch in ")]}":
                 depth -= 1
                 if depth == 0:
                     break
@@ -241,7 +238,26 @@ class HloCostModel:
                 cur += ch
         if cur.strip():
             out.append(cur.strip())
-        return [a.lstrip("%") for a in out if a and not a[0].isdigit()]
+        return [a for a in out if a]
+
+    @staticmethod
+    def _operand_name(raw: str) -> str:
+        tok = raw.split()[-1] if raw.split() else raw
+        return tok.lstrip("%")
+
+    def _operand_names(self, op: _Op) -> list[str]:
+        names = []
+        for raw in self._operands_raw(op):
+            tok = self._operand_name(raw)
+            if tok and not tok[0].isdigit():
+                names.append(tok)
+        return names
+
+    def _operand_shape(self, raw: str, symbols: dict[str, str]) -> list[int]:
+        """Shape of an operand: from the symbol table when the operand is a
+        bare name, else from the type printed inline with the operand."""
+        t = symbols.get(self._operand_name(raw))
+        return _shape_dims(t if t else raw)
 
     # -- computation cost ---------------------------------------------------
     def computation_cost(self, name: str) -> dict:
@@ -349,16 +365,18 @@ class HloCostModel:
             upd = symbols.get(ops_[1]) if len(ops_) > 1 else None
             return 2.0 * _numel_bytes(upd or op.typestr)
         total = _numel_bytes(op.typestr)
-        for operand in self._operand_names(op):
-            t = symbols.get(operand)
-            if t:
-                total += _numel_bytes(t)
+        for raw in self._operands_raw(op):
+            name = self._operand_name(raw)
+            if name and name[0].isdigit():
+                continue  # literal operand
+            t = symbols.get(name)
+            total += _numel_bytes(t if t else raw)
         return float(total)
 
     def _fusion_io_bytes(self, op: _Op, symbols: dict[str, str],
                          called: list[str]) -> float:
         total = float(_numel_bytes(op.typestr))
-        operands = self._operand_names(op)
+        operands = self._operands_raw(op)
         # map fused-computation parameter index -> effective read bytes
         slice_reads: dict[int, float] = {}
         for c in called:
@@ -386,13 +404,12 @@ class HloCostModel:
                             if u.opcode == "dynamic-update-slice"
                             else u.typestr)
                         for u in us)
-        for i, operand in enumerate(operands):
+        for i, raw in enumerate(operands):
             if i in slice_reads:
                 total += slice_reads[i]
                 continue
-            t = symbols.get(operand)
-            if t:
-                total += _numel_bytes(t)
+            t = symbols.get(self._operand_name(raw))
+            total += _numel_bytes(t if t else raw)
         return total
 
     @staticmethod

@@ -1,8 +1,14 @@
-"""Serving launcher: batched prefill + decode for any zoo arch (reduced
-configs run on host CPU; full configs are exercised via dryrun.py).
+"""Serving launcher: thin CLI over ``repro.serving`` — hosts the paper
+LSTM and/or zoo archs behind the dynamic micro-batching engine and
+replays a simulated many-client traffic trace against it.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b \
-        --reduced --batch 4 --prompt-len 32 --gen 16
+    # stream stock windows from 64 synthetic clients at the paper model
+    PYTHONPATH=src python -m repro.launch.serve --model paper-lstm \
+        --clients 64 --requests 512 --max-batch 32 --max-wait-ms 2
+
+    # host a zoo arch (reduced, CPU) serving next-token forecasts
+    PYTHONPATH=src python -m repro.launch.serve --model qwen1.5-4b \
+        --requests 128 --prompt-len 32
 """
 
 from __future__ import annotations
@@ -10,80 +16,100 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
-def main() -> None:
+def _traffic_windows(n_clients: int, window: int, seed: int):
+    """Per-client normalized window streams from the synthetic S&P500
+    generator (distinct ticker per client)."""
+    from repro.data import load_stock, make_windows
+
+    streams = []
+    for c in range(n_clients):
+        ohlcv = load_stock(f"CLIENT{c}", n_days=window + 64)
+        ds = make_windows(ohlcv, window=window)
+        streams.append(ds.x)
+    return streams
+
+
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen1.5-4b")
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--model", default="paper-lstm",
+                    help="'paper-lstm' or any zoo arch name")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="serve the reduced (CPU smoke) zoo config; "
+                    "--no-reduced hosts the full config")
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sessions", action="store_true",
+                    help="also demo O(1) per-step session serving")
+    ap.add_argument("--alert-threshold", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    from repro.configs import get_config
-    from repro.configs.base import reduced
-    from repro.data.tokens import (synthetic_embedding_batch,
-                                   synthetic_token_batch)
-    from repro.models.model_zoo import build_model
+    from repro.serving import (BatcherConfig, ModelRegistry,
+                               RecurrentSessionRunner, ServingEngine,
+                               SessionCache, build_lstm_forecaster,
+                               build_zoo_forecaster)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduced(cfg)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
+    registry = ModelRegistry()
+    if args.model == "paper-lstm":
+        fc = build_lstm_forecaster(seed=args.seed)
+        windows = _traffic_windows(args.clients, fc.window, args.seed)
+        payloads = [windows[i % args.clients][i % len(windows[i % args.clients])]
+                    for i in range(args.requests)]
+    else:
+        from repro.data.tokens import synthetic_token_batch
+        fc = build_zoo_forecaster(args.model, seed=args.seed,
+                                  reduced=args.reduced)
+        toks = synthetic_token_batch(args.requests, args.prompt_len,
+                                     fc.cfg.vocab, seed=args.seed)
+        payloads = list(toks)
+    registry.register(args.model, fc)
 
-    toks = jnp.asarray(synthetic_token_batch(args.batch, args.prompt_len,
-                                             cfg.vocab, seed=args.seed))
-    frames = None
-    if cfg.family == "audio":
-        frames = jnp.asarray(synthetic_embedding_batch(
-            args.batch, cfg.n_frames, cfg.d_model, seed=args.seed))
+    # bucket exactly the lengths this trace contains: no padding waste
+    cfg = BatcherConfig(max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms,
+                        length_buckets=tuple(sorted(
+                            {p.shape[0] for p in payloads})))
+    with ServingEngine(registry, cfg) as engine:
+        engine.warmup(args.model,
+                      lengths=tuple({p.shape[0] for p in payloads}))
+        engine.telemetry.reset_clock()
+        t0 = time.time()
+        futures = [engine.submit(args.model, p) for p in payloads]
+        results = [f.result(timeout=60.0) for f in futures]
+        wall = time.time() - t0
+        snap = engine.telemetry.snapshot()
 
-    from repro.models.transformer import flush_recent
+    alerts = [(i, y, p) for i, (y, p) in enumerate(results)
+              if p >= args.alert_threshold]
+    print(f"{args.model}: {len(results)} requests in {wall*1e3:.1f} ms")
+    print(engine.telemetry.format(snap))
+    print(f"extreme alerts (p >= {args.alert_threshold}): {len(alerts)}"
+          + (f", first: req {alerts[0][0]} forecast {alerts[0][1]:+.4f} "
+                 f"p {alerts[0][2]:.3f}" if alerts else ""))
 
-    max_len = args.prompt_len + args.gen
-    t0 = time.time()
-    logits, cache = jax.jit(model.prefill)(params, toks, frames)
-    # re-home the prefill cache into a max_len buffer for decoding
-    full = model.init_cache(args.batch, max_len)
-
-    def _place(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        if dst.ndim == src.ndim and dst.shape[2] != src.shape[2]:
-            return dst.at[:, :, :src.shape[2]].set(src)
-        return src
-    cache = jax.tree.map(_place, full, cache)
-    cache["len"] = jnp.asarray(args.prompt_len, jnp.int32)
-    t_prefill = time.time() - t0
-
-    decode = jax.jit(model.decode_step)
-    flush = jax.jit(lambda c: flush_recent(cfg, c))
-    out_tokens = []
-    tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
-    t0 = time.time()
-    for _ in range(args.gen):
-        out_tokens.append(np.asarray(tok))
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
-        if "kr" in cache and int(cache["len"] - cache["flushed"]) >= \
-                cfg.decode_buffer:
-            cache = flush(cache)
-    jax.block_until_ready(logits)
-    t_decode = time.time() - t0
-
-    gen = np.stack(out_tokens, 1)
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
-    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} in "
-          f"{t_prefill*1e3:.1f} ms; {args.gen} decode steps in "
-          f"{t_decode*1e3:.1f} ms "
-          f"({args.batch*args.gen/max(t_decode,1e-9):.1f} tok/s)")
-    print("sample generations:", gen[:2, :8].tolist())
+    if args.sessions and args.model == "paper-lstm":
+        runner = RecurrentSessionRunner(
+            fc, SessionCache(max_sessions=args.clients,
+                             telemetry=engine.telemetry))
+        streams = _traffic_windows(min(args.clients, 8), fc.window,
+                                   args.seed + 1)
+        t0 = time.time()
+        n_steps = 0
+        for step in range(fc.window):
+            for c, stream in enumerate(streams):
+                runner.step(f"client-{c}", stream[0][step])
+                n_steps += 1
+        wall = time.time() - t0
+        print(f"sessions: {n_steps} O(1) steps in {wall*1e3:.1f} ms "
+              f"({n_steps/max(wall,1e-9):.0f} steps/s); "
+              f"cache {runner.cache.stats()}")
 
 
 if __name__ == "__main__":

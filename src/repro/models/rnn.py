@@ -96,12 +96,16 @@ def init_rnn(key, cfg: RNNConfig) -> PyTree:
     return params
 
 
-def rnn_apply(params: PyTree, x, cfg: RNNConfig):
-    """x [B, window, input_dim] -> (y_pred [B], u_extreme [B] or None)."""
+def rnn_features(params: PyTree, x):
+    """x [B, T, input_dim] -> last-layer hidden sequence [B, T, H]."""
     h = x
     for lp in params["lstm"]:
         h = lstm_layer_apply(lp, h)
-    h = h[:, -1, :]                      # last time step
+    return h
+
+
+def rnn_head(params: PyTree, h, cfg: RNNConfig):
+    """FC stack + output/EVL heads on a hidden state h [B, H]."""
     for fp in params["fc"]:
         h = jnp.tanh(h @ fp["w"] + fp["b"])
     y = (h @ params["out"]["w"] + params["out"]["b"])[:, 0]
@@ -109,3 +113,50 @@ def rnn_apply(params: PyTree, x, cfg: RNNConfig):
     if cfg.evl_head and "evl" in params:
         u = jax.nn.sigmoid((h @ params["evl"]["w"] + params["evl"]["b"]))[:, 0]
     return y, u
+
+
+def rnn_apply(params: PyTree, x, cfg: RNNConfig):
+    """x [B, window, input_dim] -> (y_pred [B], u_extreme [B] or None)."""
+    h = rnn_features(params, x)[:, -1, :]     # last time step
+    return rnn_head(params, h, cfg)
+
+
+def rnn_apply_padded(params: PyTree, x, lengths, cfg: RNNConfig):
+    """Length-bucketed apply: x [B, T, input_dim] right-padded to a bucket
+    length T, lengths [B] int32 giving each example's true length.
+
+    The LSTM stack is causal, so the hidden state at position len-1 depends
+    only on x[:len] — gathering there yields exactly the unpadded result,
+    which is what lets the serving batcher mix lengths in one bucket.
+    """
+    hs = rnn_features(params, x)
+    idx = (jnp.asarray(lengths, jnp.int32) - 1)[:, None, None]
+    h = jnp.take_along_axis(hs, jnp.broadcast_to(
+        idx, (hs.shape[0], 1, hs.shape[2])), axis=1)[:, 0, :]
+    return rnn_head(params, h, cfg)
+
+
+def init_rnn_carry(params: PyTree, batch: int, dtype=jnp.float32):
+    """Zero (h, c) carries for each LSTM layer — the per-session state
+    kept resident by the serving session cache."""
+    return tuple(
+        (jnp.zeros((batch, lp["wh"].shape[0]), dtype),
+         jnp.zeros((batch, lp["wh"].shape[0]), dtype))
+        for lp in params["lstm"])
+
+
+def rnn_step(params: PyTree, x_t, carries, cfg: RNNConfig):
+    """One time step: x_t [B, input_dim], carries from ``init_rnn_carry``.
+
+    Returns (y [B], u [B] or None, new_carries). Feeding a window one step
+    at a time from zero carries reproduces ``rnn_apply`` on that window —
+    O(1) per step for streaming clients instead of O(window) recompute.
+    """
+    new_carries = []
+    h = x_t
+    for lp, (hc, cc) in zip(params["lstm"], carries):
+        hc, cc = lstm_cell(lp, h, hc, cc)
+        new_carries.append((hc, cc))
+        h = hc
+    y, u = rnn_head(params, h, cfg)
+    return y, u, tuple(new_carries)

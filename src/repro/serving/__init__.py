@@ -1,0 +1,38 @@
+"""Streaming forecast serving: dynamic micro-batching, recurrent session
+cache, multi-model registry, and extreme-event alerting.
+
+Layout (DESIGN: one concern per module):
+
+- ``engine.py``     request queue + dynamic micro-batcher (length-bucketed
+                    padding, flush on max-batch or max-wait, jit-cached
+                    per-bucket apply so the hot path never recompiles);
+- ``sessions.py``   per-client recurrent carry cache (LRU + TTL + byte
+                    accounting) making each streaming step O(1);
+- ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
+                    interface over the paper LSTM and every zoo arch,
+                    with the EVT tail alert head;
+- ``registry.py``   multi-model hosting keyed by name, checkpoint I/O;
+- ``telemetry.py``  latency percentiles, throughput, batch occupancy,
+                    cache hit-rate.
+"""
+
+from repro.serving.engine import BatcherConfig, ServingEngine
+from repro.serving.forecaster import (LSTMForecaster, ZooForecaster,
+                                      build_lstm_forecaster,
+                                      build_zoo_forecaster)
+from repro.serving.registry import ModelRegistry
+from repro.serving.sessions import RecurrentSessionRunner, SessionCache
+from repro.serving.telemetry import Telemetry
+
+__all__ = [
+    "BatcherConfig",
+    "LSTMForecaster",
+    "ModelRegistry",
+    "RecurrentSessionRunner",
+    "ServingEngine",
+    "SessionCache",
+    "Telemetry",
+    "ZooForecaster",
+    "build_lstm_forecaster",
+    "build_zoo_forecaster",
+]

@@ -1,0 +1,239 @@
+"""Dynamic micro-batching engine: a request queue drained by a worker
+that groups requests by (model, length bucket), right-pads them into
+fixed bucket shapes, and dispatches one jitted apply per batch.
+
+Flush policy: a group is dispatched as soon as it holds ``max_batch``
+requests, or when its oldest request has waited ``max_wait_ms`` — the
+classic latency/throughput knob. Shapes are quantized (lengths to a
+bucket, batch to a power of two) so the set of compiled programs is
+small and fixed: after ``warmup`` the hot path never recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.serving.telemetry import Telemetry
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+    # admissible padded lengths; () -> round up to the next power of two
+    length_buckets: tuple[int, ...] = ()
+    # pad the batch dim to a power of two (<= max_batch) so compiled
+    # shapes are {pow2 batches} x {length buckets}, not arbitrary
+    pad_batch: bool = True
+
+    def bucket_len(self, t: int) -> int:
+        for b in sorted(self.length_buckets):
+            if t <= b:
+                return b
+        return t if self.length_buckets else _next_pow2(max(t, 8))
+
+    def bucket_batch(self, n: int) -> int:
+        if not self.pad_batch:
+            return n
+        return min(_next_pow2(n), max(self.max_batch, 1))
+
+
+class _Request:
+    __slots__ = ("payload", "length", "future", "t_enq")
+
+    def __init__(self, payload: np.ndarray, t_enq: float):
+        self.payload = payload
+        self.length = payload.shape[0]
+        self.future: Future = Future()
+        self.t_enq = t_enq
+
+
+class ServingEngine:
+    """Multi-model streaming forecast engine over a ``ModelRegistry``
+    (anything with ``get(key) -> forecaster`` works)."""
+
+    def __init__(self, registry, config: BatcherConfig | None = None,
+                 telemetry: Telemetry | None = None):
+        self.registry = registry
+        self.config = config or BatcherConfig()
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self._queue: queue.Queue = queue.Queue()
+        self._pending: dict[tuple[str, int], list[_Request]] = {}
+        self._running = False
+        # makes submit's running-check + enqueue atomic w.r.t. stop()
+        self._state_lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "ServingEngine":
+        with self._state_lock:
+            if self._running:
+                return self
+            self._running = True
+        self._thread = threading.Thread(target=self._worker,
+                                        name="serving-engine", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        with self._state_lock:
+            if not self._running:
+                return
+            self._running = False
+        # any submit that saw _running under the lock has already enqueued,
+        # and the worker drains queue + pending before exiting; submits
+        # from here on raise instead of enqueueing into a dead engine
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "ServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+    def submit(self, model_key: str, window) -> Future:
+        """Enqueue one window ([T, F] features or [T] token ids); returns
+        a Future resolving to (forecast, p_extreme) scalars."""
+        payload = np.asarray(window)
+        fc = self.registry.get(model_key)
+        want_ndim = 2 if fc.feature_dim else 1
+        if payload.ndim != want_ndim or payload.shape[0] < 1 or (
+                fc.feature_dim and payload.shape[1] != fc.feature_dim):
+            raise ValueError(
+                f"{model_key!r} expects windows of shape "
+                f"{'[T>=1, ' + str(fc.feature_dim) + ']' if fc.feature_dim else '[T>=1]'}"
+                f", got {payload.shape}")
+        req = _Request(payload, time.perf_counter())
+        with self._state_lock:
+            if not self._running:
+                raise RuntimeError("engine is not running (use start() or a "
+                                   "with-block)")
+            self._queue.put((model_key, req))
+        return req.future
+
+    def predict(self, model_key: str, window, timeout: float | None = 30.0):
+        return self.submit(model_key, window).result(timeout=timeout)
+
+    def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
+               ) -> int:
+        """Compile every (pow2 batch) x (length bucket) apply the hot path
+        can hit, off the serving path. Returns #programs warmed."""
+        fc = self.registry.get(model_key)
+        lens = lengths if lengths is not None else (fc.window,)
+        max_b = max(self.config.max_batch, 1)
+        # exactly the shapes bucket_batch can emit: powers of two below
+        # max_batch, plus max_batch itself (which may not be a power of two)
+        if self.config.pad_batch:
+            batches = sorted({min(1 << i, max_b)
+                              for i in range(max_b.bit_length() + 1)})
+        else:
+            # unquantized batches: any size 1..max_batch can reach the
+            # hot path, so all of them must be compiled here
+            batches = list(range(1, max_b + 1))
+        n = 0
+        for t in {self.config.bucket_len(x) for x in lens}:
+            for b in batches:
+                fc.predict(*self._padded(fc, [np.zeros(
+                    self._payload_shape(fc, t), self._payload_dtype(fc))] * b,
+                    [t] * b, b, t))
+                n += 1
+        return n
+
+    # -- batching internals ------------------------------------------------
+    @staticmethod
+    def _payload_shape(fc, t: int):
+        return (t, fc.feature_dim) if fc.feature_dim else (t,)
+
+    @staticmethod
+    def _payload_dtype(fc):
+        return np.float32 if fc.feature_dim else np.int32
+
+    def _padded(self, fc, payloads, lengths, bucket_b: int, bucket_t: int):
+        """Stack variable-length payloads into one right-padded batch of
+        shape [bucket_b, bucket_t, ...]; padded rows get length 1."""
+        shape = (bucket_b,) + self._payload_shape(fc, bucket_t)
+        x = np.zeros(shape, self._payload_dtype(fc))
+        out_len = np.ones((bucket_b,), np.int32)
+        for i, (p, t) in enumerate(zip(payloads, lengths)):
+            x[i, :t] = p
+            out_len[i] = t
+        return x, out_len
+
+    def _flush(self, model_key: str, bucket_t: int,
+               reqs: list[_Request]) -> None:
+        # transition futures to RUNNING; drops client-cancelled requests
+        # and guarantees the set_result/set_exception below cannot raise
+        # InvalidStateError into the worker thread
+        reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not reqs:
+            return
+        try:
+            fc = self.registry.get(model_key)
+            bucket_b = self.config.bucket_batch(len(reqs))
+            x, lens = self._padded(fc, [r.payload for r in reqs],
+                                   [r.length for r in reqs], bucket_b,
+                                   bucket_t)
+            forecast, p_extreme = fc.predict(x, lens)
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the engine
+            for r in reqs:
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        self.telemetry.record_batch(len(reqs), bucket_b)
+        for i, r in enumerate(reqs):
+            self.telemetry.record_request(now - r.t_enq)
+            r.future.set_result((float(forecast[i]), float(p_extreme[i])))
+
+    def _worker(self) -> None:
+        cfg = self.config
+        max_wait = cfg.max_wait_ms * 1e-3
+        while self._running or not self._queue.empty() or self._pending:
+            # drain everything already queued, then block briefly
+            drained = False
+            while True:
+                try:
+                    model_key, req = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                drained = True
+                key = (model_key, cfg.bucket_len(req.length))
+                self._pending.setdefault(key, []).append(req)
+            now = time.perf_counter()
+            # flush full groups and expired groups
+            for key in list(self._pending):
+                reqs = self._pending[key]
+                while len(reqs) >= cfg.max_batch:
+                    self._flush(key[0], key[1], reqs[:cfg.max_batch])
+                    del reqs[:cfg.max_batch]
+                if reqs and (now - reqs[0].t_enq >= max_wait
+                             or not self._running):
+                    self._flush(key[0], key[1], reqs)
+                    reqs.clear()
+                if not reqs:
+                    del self._pending[key]
+            if drained:
+                continue
+            # sleep until the next group deadline (or a short poll)
+            timeout = max_wait if not self._pending else max(
+                1e-4, min(r[0].t_enq + max_wait
+                          for r in self._pending.values())
+                - time.perf_counter())
+            try:
+                model_key, req = self._queue.get(timeout=min(timeout, 0.05))
+            except queue.Empty:
+                continue
+            key = (model_key, cfg.bucket_len(req.length))
+            self._pending.setdefault(key, []).append(req)

@@ -1,0 +1,108 @@
+"""Multi-model hosting: forecasters keyed by name, with checkpoint save/
+load through ``repro.checkpoint.io`` (the forecaster's config, EVT tail
+calibration and indicator thresholds ride along as metadata, so a loaded
+model serves identically to the one that was saved).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+
+from repro.checkpoint.io import assemble, load_checkpoint, save_checkpoint
+from repro.models.rnn import RNNConfig, init_rnn
+from repro.serving.forecaster import LSTMForecaster, ZooForecaster
+
+
+def _rnn_cfg_meta(cfg: RNNConfig) -> dict:
+    return {"input_dim": cfg.input_dim, "hidden": cfg.hidden,
+            "num_layers": cfg.num_layers, "fc_dims": list(cfg.fc_dims),
+            "window": cfg.window, "evl_head": cfg.evl_head}
+
+
+def _rnn_cfg_from_meta(m: dict) -> RNNConfig:
+    return RNNConfig(input_dim=m["input_dim"], hidden=m["hidden"],
+                     num_layers=m["num_layers"],
+                     fc_dims=tuple(m["fc_dims"]), window=m["window"],
+                     evl_head=m["evl_head"])
+
+
+class ModelRegistry:
+    """Thread-safe name -> forecaster map used by the serving engine."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._models: dict[str, object] = {}
+
+    def register(self, key: str, forecaster):
+        with self._lock:
+            self._models[key] = forecaster
+        return forecaster
+
+    def unregister(self, key: str) -> None:
+        with self._lock:
+            self._models.pop(key, None)
+
+    def get(self, key: str):
+        with self._lock:
+            if key not in self._models:
+                raise KeyError(f"unknown model {key!r}; hosted: "
+                               f"{sorted(self._models)}")
+            return self._models[key]
+
+    def keys(self) -> list[str]:
+        with self._lock:
+            return sorted(self._models)
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._models
+
+    # -- persistence -------------------------------------------------------
+    def save(self, key: str, path: str) -> None:
+        fc = self.get(key)
+        meta: dict = {"kind": fc.kind, "tail": fc.tail, "gamma": fc.gamma}
+        if fc.kind == "lstm":
+            meta["cfg"] = _rnn_cfg_meta(fc.cfg)
+            meta["eps"] = list(fc.eps)
+        elif fc.kind == "zoo":
+            name = fc.cfg.name
+            meta["reduced"] = name.endswith("-smoke")
+            meta["arch"] = name[:-len("-smoke")] if meta["reduced"] else name
+        else:
+            raise ValueError(f"cannot persist forecaster kind {fc.kind!r}")
+        save_checkpoint(path, fc.params, metadata=meta)
+
+    def load(self, path: str, key: str | None = None):
+        """Rebuild a forecaster from a checkpoint and (optionally)
+        register it under ``key``. Returns the forecaster."""
+        flat, meta = load_checkpoint(path)
+        if not meta or "kind" not in meta:
+            raise ValueError(f"{path}: not a serving checkpoint (no kind "
+                             "metadata)")
+        kind = meta["kind"]
+        if kind == "lstm":
+            cfg = _rnn_cfg_from_meta(meta["cfg"])
+            like = init_rnn(jax.random.PRNGKey(0), cfg)
+            fc = LSTMForecaster(cfg=cfg, params=assemble(flat, like),
+                                tail=meta.get("tail"),
+                                eps=tuple(meta.get("eps", (0.01, 0.01))),
+                                gamma=meta.get("gamma", 5.0))
+        elif kind == "zoo":
+            from repro.configs import get_config
+            from repro.configs.base import reduced as reduce_cfg
+            from repro.models.model_zoo import build_model
+
+            acfg = get_config(meta["arch"])
+            if meta.get("reduced"):
+                acfg = reduce_cfg(acfg)
+            like = build_model(acfg).init(jax.random.PRNGKey(0))
+            fc = ZooForecaster(cfg=acfg, params=assemble(flat, like),
+                               tail=meta.get("tail"),
+                               gamma=meta.get("gamma", 5.0))
+        else:
+            raise ValueError(f"{path}: unknown forecaster kind {kind!r}")
+        if key is not None:
+            self.register(key, fc)
+        return fc

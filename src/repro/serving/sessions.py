@@ -1,0 +1,183 @@
+"""Recurrent session cache: per-client carry state kept resident between
+requests so a streaming step is O(1) instead of O(window).
+
+``SessionCache`` is model-agnostic (it stores opaque carries with byte
+accounting); ``RecurrentSessionRunner`` binds it to a forecaster that
+exposes ``init_carry`` / ``step`` / ``replay``. Eviction is LRU with an
+optional TTL and byte budget. A cache miss replays the client's window
+prefix through the same compiled step function the hot path uses, so —
+provided the client supplies its history on a miss — eviction never
+changes the numbers a client sees, only the latency. Misses without
+history start a fresh session from zero state (or raise, with
+``on_miss="error"``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+from typing import Any
+
+from repro.serving.telemetry import Telemetry
+
+
+@dataclasses.dataclass
+class _Session:
+    carry: Any
+    nbytes: int
+    last_used: float
+    created: float
+    steps: int = 0
+
+
+class SessionCache:
+    """LRU + TTL cache of per-client carries with capacity accounting."""
+
+    def __init__(self, max_sessions: int = 4096,
+                 max_bytes: int | None = None,
+                 ttl_s: float | None = None,
+                 telemetry: Telemetry | None = None,
+                 clock=time.monotonic):
+        if max_sessions < 1:
+            raise ValueError("max_sessions must be >= 1")
+        self.max_sessions = max_sessions
+        self.max_bytes = max_bytes
+        self.ttl_s = ttl_s
+        self.telemetry = telemetry
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._sessions: OrderedDict[str, _Session] = OrderedDict()
+        self.nbytes_in_use = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    def __contains__(self, client_id: str) -> bool:
+        with self._lock:
+            return client_id in self._sessions
+
+    def get(self, client_id: str):
+        """Return the cached carry (refreshing LRU order) or None."""
+        with self._lock:
+            expired = self._expire_locked()
+            s = self._sessions.get(client_id)
+            hit = s is not None
+            if hit:
+                self._sessions.move_to_end(client_id)
+                s.last_used = self._clock()
+                self.hits += 1
+            else:
+                self.misses += 1
+        if self.telemetry is not None:
+            if expired:
+                self.telemetry.record_eviction(expired)
+            self.telemetry.record_cache(hit)
+        return s.carry if hit else None
+
+    def put(self, client_id: str, carry, nbytes: int) -> None:
+        evicted = 0
+        with self._lock:
+            now = self._clock()
+            old = self._sessions.pop(client_id, None)
+            if old is not None:
+                self.nbytes_in_use -= old.nbytes
+            s = _Session(carry=carry, nbytes=nbytes, last_used=now,
+                         created=old.created if old else now,
+                         steps=(old.steps + 1) if old else 1)
+            self._sessions[client_id] = s
+            self.nbytes_in_use += nbytes
+            while len(self._sessions) > self.max_sessions or (
+                    self.max_bytes is not None
+                    and self.nbytes_in_use > self.max_bytes
+                    and len(self._sessions) > 1):
+                _, victim = self._sessions.popitem(last=False)
+                self.nbytes_in_use -= victim.nbytes
+                self.evictions += 1
+                evicted += 1
+        if evicted and self.telemetry is not None:
+            self.telemetry.record_eviction(evicted)
+
+    def drop(self, client_id: str) -> bool:
+        with self._lock:
+            s = self._sessions.pop(client_id, None)
+            if s is not None:
+                self.nbytes_in_use -= s.nbytes
+            return s is not None
+
+    def _expire_locked(self) -> int:
+        if self.ttl_s is None:
+            return 0
+        cutoff = self._clock() - self.ttl_s
+        stale = [cid for cid, s in self._sessions.items()
+                 if s.last_used < cutoff]
+        for cid in stale:
+            s = self._sessions.pop(cid)
+            self.nbytes_in_use -= s.nbytes
+            self.evictions += 1
+        return len(stale)
+
+    def stats(self) -> dict:
+        with self._lock:
+            lookups = self.hits + self.misses
+            return {
+                "sessions": len(self._sessions),
+                "nbytes_in_use": self.nbytes_in_use,
+                "hits": self.hits,
+                "misses": self.misses,
+                "hit_rate": self.hits / lookups if lookups else 0.0,
+                "evictions": self.evictions,
+            }
+
+
+class RecurrentSessionRunner:
+    """Streaming serving for a recurrent forecaster: each client is a
+    session whose carry lives in the cache between requests."""
+
+    def __init__(self, forecaster, cache: SessionCache | None = None,
+                 on_miss: str = "zeros"):
+        for attr in ("init_carry", "step", "replay"):
+            if not hasattr(forecaster, attr):
+                raise TypeError(
+                    f"forecaster {type(forecaster).__name__} does not "
+                    f"support incremental serving (missing {attr!r})")
+        if on_miss not in ("zeros", "error"):
+            raise ValueError("on_miss must be 'zeros' or 'error'")
+        self.forecaster = forecaster
+        self.cache = cache if cache is not None else SessionCache()
+        self.on_miss = on_miss
+        self._nbytes = forecaster.carry_nbytes(1)
+
+    def step(self, client_id: str, x_t, history=None):
+        """One streaming step for ``client_id``. ``x_t`` is one feature
+        vector [F] (or [1, F]). On a cache miss the carry is rebuilt from
+        ``history`` ([T, F] window prefix, replayed through the same
+        compiled step the hot path uses). Without history, a miss starts
+        a fresh zero-state session — correct for a new client, but an
+        evicted client's forecasts silently restart from scratch, so
+        deployments where eviction is expected should pass history or
+        construct the runner with ``on_miss="error"``.
+        Returns (forecast, p_extreme) scalars."""
+        import numpy as np
+
+        x_t = np.asarray(x_t, np.float32)
+        if x_t.ndim == 1:
+            x_t = x_t[None, :]
+        carry = self.cache.get(client_id)
+        if carry is None:
+            if history is not None:
+                hist = np.asarray(history, np.float32)
+                _, _, carry = self.forecaster.replay(hist[None])
+            elif self.on_miss == "error":
+                raise KeyError(
+                    f"no session for {client_id!r} and no history given")
+            else:
+                carry = self.forecaster.init_carry(1)
+        y, p, carry = self.forecaster.step(x_t, carry)
+        self.cache.put(client_id, carry, self._nbytes)
+        return float(y[0]), float(p[0])

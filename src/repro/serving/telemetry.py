@@ -1,0 +1,124 @@
+"""Serving telemetry: latency percentiles, throughput, batch occupancy
+and cache hit-rate. Pure stdlib, thread-safe, O(1) per event — cheap
+enough to sit on the hot path of the micro-batcher.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+
+class _Reservoir:
+    """Fixed-size ring of the most recent samples (enough for stable
+    p50/p95/p99 at serving rates without unbounded memory)."""
+
+    def __init__(self, capacity: int = 8192):
+        self.capacity = capacity
+        self._buf: list[float] = []
+        self._pos = 0
+
+    def add(self, value: float) -> None:
+        if len(self._buf) < self.capacity:
+            self._buf.append(value)
+        else:
+            self._buf[self._pos] = value
+            self._pos = (self._pos + 1) % self.capacity
+
+    def percentile(self, p: float) -> float:
+        if not self._buf:
+            return 0.0
+        data = sorted(self._buf)
+        k = min(len(data) - 1, max(0, int(round(p / 100.0 * (len(data) - 1)))))
+        return data[k]
+
+
+class Telemetry:
+    """Counters + reservoirs for one serving engine (or one model)."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._t0 = clock()
+        self.requests = 0
+        self.batches = 0
+        self.padded_slots = 0      # total batch capacity dispatched
+        self.real_slots = 0        # non-padding rows dispatched
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.cache_evictions = 0
+        self._latency = _Reservoir()
+        self._batch_sizes = _Reservoir()
+
+    # -- recording ---------------------------------------------------------
+    def record_request(self, latency_s: float) -> None:
+        with self._lock:
+            self.requests += 1
+            self._latency.add(latency_s)
+
+    def record_batch(self, n_real: int, n_padded: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.real_slots += n_real
+            self.padded_slots += n_padded
+            self._batch_sizes.add(float(n_real))
+
+    def record_cache(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.cache_hits += 1
+            else:
+                self.cache_misses += 1
+
+    def record_eviction(self, n: int = 1) -> None:
+        with self._lock:
+            self.cache_evictions += n
+
+    # -- reading -----------------------------------------------------------
+    def latency_percentile_ms(self, p: float) -> float:
+        with self._lock:
+            return self._latency.percentile(p) * 1e3
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            elapsed = max(self._clock() - self._t0, 1e-9)
+            lookups = self.cache_hits + self.cache_misses
+            return {
+                "requests": self.requests,
+                "batches": self.batches,
+                "throughput_rps": self.requests / elapsed,
+                "p50_ms": self._latency.percentile(50) * 1e3,
+                "p95_ms": self._latency.percentile(95) * 1e3,
+                "p99_ms": self._latency.percentile(99) * 1e3,
+                "mean_batch": (self.real_slots / self.batches
+                               if self.batches else 0.0),
+                "batch_occupancy": (self.real_slots / self.padded_slots
+                                    if self.padded_slots else 0.0),
+                "cache_hit_rate": (self.cache_hits / lookups
+                                   if lookups else 0.0),
+                "cache_evictions": self.cache_evictions,
+            }
+
+    def reset_clock(self) -> None:
+        """Restart the measurement window (e.g. after jit warmup):
+        throughput counters AND latency/batch reservoirs, so a snapshot
+        never mixes pre-reset samples with the new window. Cache counters
+        are cumulative state and are kept."""
+        with self._lock:
+            self._t0 = self._clock()
+            self.requests = 0
+            self.batches = 0
+            self.real_slots = 0
+            self.padded_slots = 0
+            self._latency = _Reservoir()
+            self._batch_sizes = _Reservoir()
+
+    @staticmethod
+    def format(snap: dict) -> str:
+        return (f"{snap['requests']} req in {snap['batches']} batches | "
+                f"{snap['throughput_rps']:.0f} req/s | "
+                f"p50 {snap['p50_ms']:.2f} ms  p95 {snap['p95_ms']:.2f} ms  "
+                f"p99 {snap['p99_ms']:.2f} ms | "
+                f"mean batch {snap['mean_batch']:.1f} "
+                f"(occupancy {snap['batch_occupancy']:.0%}) | "
+                f"cache hit {snap['cache_hit_rate']:.0%}")

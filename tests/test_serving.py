@@ -1,0 +1,249 @@
+"""Streaming forecast serving: micro-batcher flush policies, padding
+correctness, session-cache semantics, and registry round-trips."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.rnn import RNNConfig, init_rnn, rnn_apply
+from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
+                           RecurrentSessionRunner, ServingEngine,
+                           SessionCache, Telemetry, build_lstm_forecaster)
+
+CFG = RNNConfig(input_dim=5, hidden=16, num_layers=2, fc_dims=(8, 4),
+                window=20, evl_head=True)
+
+
+@pytest.fixture(scope="module")
+def forecaster():
+    params = init_rnn(jax.random.PRNGKey(0), CFG)
+    fc = LSTMForecaster(cfg=CFG, params=params)
+    rng = np.random.default_rng(0)
+    fc.calibrate(rng.standard_normal((64, CFG.window, 5)).astype(np.float32)
+                 * 0.02)
+    return fc
+
+
+@pytest.fixture()
+def registry(forecaster):
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    return reg
+
+
+def _windows(n, t=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, t, 5)).astype(np.float32) * 0.02
+
+
+# -- micro-batcher ---------------------------------------------------------
+
+def test_flush_on_max_batch(registry):
+    """With an effectively infinite wait, a full group must still flush
+    the moment it reaches max_batch."""
+    cfg = BatcherConfig(max_batch=4, max_wait_ms=60_000.0)
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(20,))
+        futs = [eng.submit("m", w) for w in _windows(4)]
+        res = [f.result(timeout=10.0) for f in futs]
+    assert len(res) == 4
+    assert eng.telemetry.batches >= 1
+    snap = eng.telemetry.snapshot()
+    assert snap["mean_batch"] == 4.0
+
+
+def test_flush_on_timeout(registry):
+    """A partial group must flush once its oldest request has waited
+    max_wait_ms, without needing more arrivals."""
+    cfg = BatcherConfig(max_batch=64, max_wait_ms=10.0)
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(20,))
+        t0 = time.perf_counter()
+        futs = [eng.submit("m", w) for w in _windows(3)]
+        res = [f.result(timeout=10.0) for f in futs]
+        elapsed = time.perf_counter() - t0
+    assert len(res) == 3
+    assert elapsed < 5.0                       # did not wait for a full batch
+    assert eng.telemetry.snapshot()["mean_batch"] == 3.0
+
+
+def test_bucket_padding_matches_unbatched(registry, forecaster):
+    """Mixed-length windows batched into one padded bucket must produce
+    exactly the same predictions as unbatched exact-shape applies."""
+    lengths = (12, 20, 17, 9, 20)
+    wins = [_windows(1, t, seed=t)[0] for t in lengths]
+    cfg = BatcherConfig(max_batch=8, max_wait_ms=5.0)
+    with ServingEngine(registry, cfg) as eng:
+        futs = [eng.submit("m", w) for w in wins]
+        got = [f.result(timeout=10.0) for f in futs]
+    # exact-shape reference; batching at a different [B, T] makes XLA pick
+    # a different tiling, so agreement is to float32 ulp, not bitwise
+    for (y_got, p_got), w in zip(got, wins):
+        y_ref, p_ref = forecaster.predict(w[None])
+        np.testing.assert_allclose(y_got, y_ref[0], atol=1e-7, rtol=1e-6)
+        np.testing.assert_allclose(p_got, p_ref[0], atol=1e-7, rtol=1e-6)
+    # within one padded batch the gather must be exact: re-submitting the
+    # same mixed-length batch reproduces itself bitwise
+    with ServingEngine(registry, cfg) as eng:
+        futs = [eng.submit("m", w) for w in wins]
+        again = [f.result(timeout=10.0) for f in futs]
+    assert got == again
+
+
+def test_cancelled_request_does_not_kill_engine(registry):
+    """A client cancelling its future must not crash the worker thread
+    (futures transition to RUNNING at flush, so late cancels fail)."""
+    cfg = BatcherConfig(max_batch=64, max_wait_ms=20.0)
+    with ServingEngine(registry, cfg) as eng:
+        fut = eng.submit("m", _windows(1)[0])
+        fut.cancel()                           # may or may not win the race
+        res = eng.predict("m", _windows(1)[0], timeout=10.0)
+    assert isinstance(res, tuple) and len(res) == 2
+
+
+def test_engine_submit_requires_running(registry):
+    eng = ServingEngine(registry)
+    with pytest.raises(RuntimeError):
+        eng.submit("m", _windows(1)[0])
+
+
+def test_engine_rejects_bad_submissions(registry):
+    with ServingEngine(registry) as eng:
+        with pytest.raises(KeyError):
+            eng.submit("nope", _windows(1)[0])         # unknown model
+        with pytest.raises(ValueError):
+            eng.submit("m", np.zeros((0, 5), np.float32))   # empty window
+        with pytest.raises(ValueError):
+            eng.submit("m", np.zeros((20,), np.float32))    # wrong rank
+        assert eng.predict("m", _windows(1)[0], timeout=10.0)
+
+
+def test_batch_bucketing_quantizes_shapes():
+    cfg = BatcherConfig(max_batch=32, length_buckets=(16, 32))
+    assert cfg.bucket_len(9) == 16
+    assert cfg.bucket_len(16) == 16
+    assert cfg.bucket_len(20) == 32
+    assert cfg.bucket_len(40) == 40            # beyond buckets: own group
+    assert cfg.bucket_batch(3) == 4
+    assert cfg.bucket_batch(32) == 32
+
+
+# -- session cache ---------------------------------------------------------
+
+def test_session_cache_lru_eviction():
+    cache = SessionCache(max_sessions=2)
+    cache.put("a", "carry-a", 8)
+    cache.put("b", "carry-b", 8)
+    assert cache.get("a") == "carry-a"         # refresh a; b is now LRU
+    cache.put("c", "carry-c", 8)
+    assert cache.get("b") is None              # evicted
+    assert cache.get("a") == "carry-a"
+    assert cache.get("c") == "carry-c"
+    assert cache.evictions == 1
+    assert cache.nbytes_in_use == 16
+
+
+def test_session_cache_ttl_and_bytes():
+    now = [0.0]
+    cache = SessionCache(max_sessions=8, ttl_s=10.0, max_bytes=20,
+                         clock=lambda: now[0])
+    cache.put("a", "A", 8)
+    now[0] = 5.0
+    cache.put("b", "B", 8)
+    now[0] = 12.0                              # a expired (idle 12s), b not
+    assert cache.get("a") is None
+    assert cache.get("b") == "B"
+    cache.put("c", "C", 16)                    # 8 + 16 > 20 -> evict LRU (b)
+    assert cache.get("b") is None
+    assert cache.nbytes_in_use == 16
+
+
+def test_session_carry_matches_full_window_recompute(forecaster):
+    """Acceptance: serving a session incrementally through the cache is
+    numerically identical to recomputing from the full window."""
+    w = _windows(1)[0]                          # [20, 5]
+    runner = RecurrentSessionRunner(forecaster, SessionCache(max_sessions=4))
+    for t in range(CFG.window):
+        y_inc, p_inc = runner.step("client", w[t])
+    # full-window recompute through the same compiled step path (what a
+    # cache miss executes): bitwise identical
+    y_ref, p_ref, _ = forecaster.replay(w[None])
+    assert y_inc == float(y_ref[0]) and p_inc == float(p_ref[0])
+    # and equal to the batched scan apply to float32 resolution (XLA
+    # fuses the full-sequence scan differently, so not bitwise)
+    y_scan, _ = rnn_apply(forecaster.params, w[None], CFG)
+    np.testing.assert_allclose(y_inc, float(y_scan[0]), atol=1e-6, rtol=0)
+    assert runner.cache.stats()["hits"] == CFG.window - 1
+
+
+def test_session_eviction_recovers_via_history_replay(forecaster):
+    """Evicting a session mid-stream must not change its predictions when
+    the client supplies its window history on the miss."""
+    w = _windows(1, seed=3)[0]
+    runner = RecurrentSessionRunner(forecaster, SessionCache(max_sessions=4))
+    for t in range(CFG.window):
+        y_uninterrupted, _ = runner.step("c1", w[t])
+
+    runner2 = RecurrentSessionRunner(forecaster, SessionCache(max_sessions=4))
+    half = CFG.window // 2
+    for t in range(half):
+        runner2.step("c2", w[t])
+    assert runner2.cache.drop("c2")            # simulate eviction
+    for t in range(half, CFG.window):
+        y_resumed, _ = runner2.step("c2", w[t], history=w[:t])
+    assert y_uninterrupted == y_resumed
+
+
+def test_session_runner_on_miss_error(forecaster):
+    runner = RecurrentSessionRunner(forecaster, SessionCache(max_sessions=2),
+                                    on_miss="error")
+    w = _windows(1)[0]
+    with pytest.raises(KeyError):
+        runner.step("evicted-client", w[0])            # miss, no history
+    y, p = runner.step("evicted-client", w[5], history=w[:5])
+    assert np.isfinite(y) and 0.0 <= p <= 1.0
+
+
+def test_session_cache_telemetry_hit_rate(forecaster):
+    tel = Telemetry()
+    runner = RecurrentSessionRunner(
+        forecaster, SessionCache(max_sessions=4, telemetry=tel))
+    w = _windows(1)[0]
+    for t in range(10):
+        runner.step("c", w[t])
+    assert tel.snapshot()["cache_hit_rate"] == pytest.approx(0.9)
+
+
+# -- registry --------------------------------------------------------------
+
+def test_registry_checkpoint_roundtrip(tmp_path, forecaster):
+    reg = ModelRegistry()
+    reg.register("paper", forecaster)
+    path = str(tmp_path / "paper.npz")
+    reg.save("paper", path)
+    loaded = reg.load(path, key="paper-v2")
+    assert "paper-v2" in reg
+    assert loaded.cfg == forecaster.cfg
+    assert loaded.tail == pytest.approx(forecaster.tail)
+    assert loaded.eps == pytest.approx(forecaster.eps)
+    w = _windows(3, seed=7)
+    y0, p0 = forecaster.predict(w)
+    y1, p1 = loaded.predict(w)
+    np.testing.assert_array_equal(y0, y1)
+    np.testing.assert_array_equal(p0, p1)
+
+
+def test_registry_unknown_key():
+    reg = ModelRegistry()
+    with pytest.raises(KeyError):
+        reg.get("missing")
+
+
+def test_build_lstm_forecaster_is_calibrated():
+    fc = build_lstm_forecaster(seed=0, n_days=120)
+    assert fc.tail is not None and fc.tail["scale"] > 0
+    y, p = fc.predict(_windows(2))
+    assert y.shape == (2,) and p.shape == (2,)
+    assert np.all((p >= 0) & (p <= 1))
