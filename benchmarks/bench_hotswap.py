@@ -1,0 +1,143 @@
+"""Serving behavior during weight updates (ISSUE 2 acceptance): p99
+latency and dropped-request count under a swap storm, hot-swap vs a
+stop-the-world reload baseline.
+
+Three phases over the same traffic generator:
+  steady     — no weight updates (the latency floor);
+  hotswap    — a publisher thread swaps weights every few ms while
+               traffic flows: zero drops required, p99 within 2x steady;
+  stopworld  — the engine is halted around each weight update: submits
+               in the stopped window are dropped, and latency spikes are
+               unbounded by design.
+
+Rows: ``hotswap/<phase>,us_per_request,p99_ms=..;dropped=..;swaps=..``
+plus ``hotswap/p99_ratio_vs_steady`` with the acceptance figure.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.models.rnn import RNNConfig
+
+
+def _percentile(xs: list[float], p: float) -> float:
+    if not xs:
+        return 0.0
+    data = sorted(xs)
+    k = min(len(data) - 1, max(0, int(round(p / 100.0 * (len(data) - 1)))))
+    return data[k]
+
+
+def _run_phase(engine, key, windows, n_requests: int, swap_fn=None,
+               swap_interval_s: float = 0.003):
+    """Serve ``n_requests``; optionally run ``swap_fn`` on a side thread
+    every ``swap_interval_s``. Returns (latencies_s, dropped, swaps)."""
+    stop = threading.Event()
+    swaps = [0]
+
+    def swapper() -> None:
+        while not stop.is_set():
+            swap_fn()
+            swaps[0] += 1
+            time.sleep(swap_interval_s)
+
+    thread = None
+    if swap_fn is not None:
+        thread = threading.Thread(target=swapper, name="bench-swapper")
+        thread.start()
+    latencies: list[float] = []
+    dropped = 0
+    try:
+        for i in range(n_requests):
+            t0 = time.perf_counter()
+            try:
+                engine.predict(key, windows[i % len(windows)], timeout=30.0)
+            except RuntimeError:
+                dropped += 1       # submit refused: engine stopped
+                # mid-reload — precisely what hot swap eliminates
+                time.sleep(5e-4)   # client pause before the next attempt
+                continue
+            latencies.append(time.perf_counter() - t0)
+    finally:
+        stop.set()
+        if thread is not None:
+            thread.join()
+    return latencies, dropped, swaps[0]
+
+
+def main(n_requests: int = 400) -> None:
+    import jax
+
+    from repro.models.rnn import init_rnn
+    from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
+                               ServingEngine, WeightPublisher,
+                               stop_the_world_swap)
+
+    cfg = RNNConfig(input_dim=5, hidden=32, num_layers=2, fc_dims=(16, 8),
+                    window=20, evl_head=True)
+    fc0 = LSTMForecaster(cfg=cfg, params=init_rnn(jax.random.PRNGKey(0),
+                                                  cfg))
+    rng = np.random.default_rng(0)
+    fc0.calibrate(rng.standard_normal((64, cfg.window, 5)).astype(np.float32)
+                  * 0.02)
+    reg = ModelRegistry()
+    reg.register("m", fc0)
+    variants = [jax.tree.map(lambda a, s=s: a * s, fc0.params)
+                for s in (1.0, 1.05, 0.95)]
+    windows = rng.standard_normal((64, cfg.window, 5)).astype(np.float32) \
+        * 0.02
+
+    engine = ServingEngine(reg, BatcherConfig(
+        max_batch=8, max_wait_ms=1.0, length_buckets=(cfg.window,)))
+    publisher = WeightPublisher(reg, "m", template=fc0,
+                                telemetry=engine.telemetry)
+    counter = [0]
+
+    def hot_swap() -> None:
+        counter[0] += 1
+        publisher.publish(variants[counter[0] % len(variants)])
+
+    def stop_world() -> None:
+        counter[0] += 1
+        stop_the_world_swap(
+            engine, reg, "m",
+            fc0.with_params(variants[counter[0] % len(variants)]),
+            reload_s=0.005)        # modest simulated checkpoint reload
+
+    results = {}
+    with engine:
+        engine.warmup("m", lengths=(cfg.window,))
+        for phase, swap_fn, interval in (
+                ("steady", None, 0.0),
+                ("hotswap", hot_swap, 0.003),
+                ("stopworld", stop_world, 0.02)):
+            engine.telemetry.reset_clock()
+            lat, dropped, swaps = _run_phase(engine, "m", windows,
+                                             n_requests, swap_fn,
+                                             swap_interval_s=interval)
+            results[phase] = (lat, dropped, swaps)
+            us = (np.mean(lat) * 1e6) if lat else float("inf")
+            row(f"hotswap/{phase}", us,
+                f"p99_ms={_percentile(lat, 99) * 1e3:.2f};"
+                f"dropped={dropped};swaps={swaps}")
+
+    steady_p99 = _percentile(results["steady"][0], 99)
+    hot_p99 = _percentile(results["hotswap"][0], 99)
+    ratio = hot_p99 / max(steady_p99, 1e-9)
+    row("hotswap/p99_ratio_vs_steady", hot_p99 * 1e6,
+        f"ratio={ratio:.2f};accept={'PASS' if ratio <= 2.0 else 'FAIL'}")
+    assert results["hotswap"][1] == 0, \
+        f"hot swap dropped {results['hotswap'][1]} requests"
+    print(f"# hot swap: {results['hotswap'][2]} swaps, 0 dropped, p99 "
+          f"{ratio:.2f}x steady | stop-the-world: "
+          f"{results['stopworld'][2]} reloads dropped "
+          f"{results['stopworld'][1]} requests")
+
+
+if __name__ == "__main__":
+    main()

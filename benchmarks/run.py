@@ -8,9 +8,9 @@ import argparse
 import sys
 import traceback
 
-from benchmarks import (bench_communication, bench_extreme, bench_kernels,
-                        bench_prediction, bench_roofline, bench_serving,
-                        bench_speedup)
+from benchmarks import (bench_communication, bench_extreme, bench_hotswap,
+                        bench_kernels, bench_prediction, bench_roofline,
+                        bench_serving, bench_speedup)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -20,6 +20,7 @@ ALL = [
     ("kernels", bench_kernels),          # Pallas kernels vs oracles
     ("roofline", bench_roofline),        # dry-run roofline table
     ("serving", bench_serving),          # ISSUE 1 micro-batcher throughput
+    ("hotswap", bench_hotswap),          # ISSUE 2 swap-storm latency/drops
 ]
 
 

@@ -52,6 +52,14 @@ class LocalSGDConfig:
     schedule: SampleSchedule = SampleSchedule()   # s_i (global iterations)
     stepsize: StepSizeSchedule = StepSizeSchedule()
 
+    def __post_init__(self):
+        if self.exchange not in ("model", "gradient"):
+            raise ValueError(f"unknown exchange mode {self.exchange!r}")
+        if self.exchange == "gradient" and self.tau != 0:
+            raise ValueError(
+                "gradient exchange is synchronous SGD: every step is a "
+                "collective, so delayed averaging (tau > 0) does not apply")
+
 
 # --------------------------------------------------------------------------
 # Building blocks
@@ -150,12 +158,19 @@ class AsyncLocalSGD:
         self._round = jax.jit(
             lambda p, o, b, lr: local_sgd_round(
                 loss_fn, optimizer, p, o, b, lr))
-        self._avg_queue: list[tuple[PyTree, PyTree]] = []  # (avg, snapshot)
+        self._sync = jax.jit(
+            lambda p, o, b, lr: sync_step(
+                loss_fn, optimizer, p, o, b, lr, exchange="gradient"))
+        # (avg, snapshot, round index the average was computed at)
+        self._avg_queue: list[tuple[PyTree, PyTree, int]] = []
         # accounting
         self.rounds_done = 0
         self.iterations_done = 0
         self.communications = 0
         self.loss_history: list[float] = []
+        # Definition 1 audit trail: (round applied at, round averaged at),
+        # i.e. each entry asserts "round r consumed the round r - tau avg"
+        self.consumed_rounds: list[tuple[int, int]] = []
 
     def init(self, params: PyTree) -> tuple[PyTree, PyTree]:
         W = self.cfg.n_workers
@@ -165,6 +180,9 @@ class AsyncLocalSGD:
         return stacked, opt
 
     def local_steps_for_round(self, i: int) -> int:
+        if self.cfg.exchange == "gradient":
+            return 1             # paper footnote **: gradient exchange
+            # communicates every iteration, so a "round" is one step
         s_i = self.cfg.schedule.round_size(i)
         return max(1, s_i // self.cfg.n_workers)
 
@@ -175,8 +193,22 @@ class AsyncLocalSGD:
                   batches: PyTree) -> tuple[PyTree, PyTree, float]:
         """batches leaves: [W, H, ...] with H = local_steps_for_round(r+1)."""
         lr = self.lr_for_round()
-        p, o, losses = self._round(stacked_params, stacked_opt, batches, lr)
         H = int(jax.tree_util.tree_leaves(batches)[0].shape[1])
+        if self.cfg.exchange == "gradient":
+            if H != 1:
+                raise ValueError(
+                    f"exchange='gradient' forces H == 1 (communicate every "
+                    f"iteration); got a round of H = {H} local steps")
+            batches1 = jax.tree.map(lambda b: b[:, 0], batches)
+            p, o, losses = self._sync(stacked_params, stacked_opt,
+                                      batches1, lr)
+            self.iterations_done += self.cfg.n_workers
+            self.rounds_done += 1
+            self.communications += 1
+            mean_loss = float(jnp.mean(losses))
+            self.loss_history.append(mean_loss)
+            return p, o, mean_loss
+        p, o, losses = self._round(stacked_params, stacked_opt, batches, lr)
         self.iterations_done += H * self.cfg.n_workers
         self.rounds_done += 1
         self.communications += 1
@@ -188,12 +220,13 @@ class AsyncLocalSGD:
             # dispatch this round's average; apply the one from tau ago
             avg_now = worker_mean(p)
             snapshot = p
-            self._avg_queue.append((avg_now, snapshot))
+            self._avg_queue.append((avg_now, snapshot, self.rounds_done))
             if len(self._avg_queue) > self.cfg.tau:
-                avg_old, snap_old = self._avg_queue.pop(0)
+                avg_old, snap_old, round_old = self._avg_queue.pop(0)
                 p = jax.tree.map(
                     lambda a, w, s: (a[None] + (w - s)).astype(w.dtype),
                     avg_old, p, snap_old)
+                self.consumed_rounds.append((self.rounds_done, round_old))
         mean_loss = float(jnp.mean(losses))
         self.loss_history.append(mean_loss)
         return p, o, mean_loss

@@ -1,0 +1,154 @@
+"""Online-learning launcher: train and serve in ONE process — the
+paper-faithful "continuously retrain on streaming stock data while
+serving forecasts" scenario (ROADMAP north-star, unlocked by the
+hot-swap bridge in ``repro.serving.hotswap``).
+
+A background thread runs the async local-SGD round loop over
+``data/sp500.py`` windows; after every cross-worker model exchange the
+round's worker-averaged parameters are published into the live
+``ModelRegistry`` (EVT tail re-calibrated on the new weights), and the
+serving engine picks the new version up between micro-batch flushes —
+no request is ever dropped by a weight update. The foreground thread
+plays client traffic against the engine the whole time and reports
+swap count, staleness at serve time, and per-version request counts.
+
+    PYTHONPATH=src python -m repro.launch.online --ticker AAPL \
+        --workers 3 --iterations 600 --requests 400
+"""
+
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticker", default="AAPL")
+    ap.add_argument("--days", type=int, default=800)
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--iterations", type=int, default=600)
+    ap.add_argument("--tau", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=400,
+                    help="minimum client requests to play against the "
+                    "engine; traffic keeps flowing until training ends")
+    ap.add_argument("--rps", type=float, default=100.0,
+                    help="client traffic rate (requests/s), paced so the "
+                    "trace spans the whole training run")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--min-publish-interval-ms", type=float, default=0.0,
+                    help="rate-limit weight publishes (0 = every round)")
+    ap.add_argument("--calib-windows", type=int, default=64,
+                    help="reference windows for per-publish EVT "
+                    "re-calibration (0 disables re-calibration)")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="save the final published version as a serving "
+                    "checkpoint on exit")
+    ap.add_argument("--evl-weight", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs.paper_lstm import CONFIG
+    from repro.data import load_stock, make_windows, train_test_split
+    from repro.models.rnn import init_rnn
+    from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
+                               ServingEngine, WeightPublisher)
+    from repro.training.loop import train_rnn_local_sgd
+
+    import jax
+
+    ohlcv = load_stock(args.ticker, n_days=args.days, seed=args.seed)
+    tr, te = train_test_split(ohlcv)
+    train_ds, test_ds = make_windows(tr), make_windows(te)
+    print(f"{args.ticker}: {len(train_ds)} train windows feeding the "
+          f"trainer, {len(test_ds)} test windows as client traffic")
+
+    # v1: freshly initialized paper model, calibrated on the train set —
+    # what a cold-started service would host before training catches up
+    key = "paper-lstm"
+    fc0 = LSTMForecaster(cfg=CONFIG,
+                         params=init_rnn(jax.random.PRNGKey(args.seed),
+                                         CONFIG))
+    fc0.calibrate(train_ds.x[:max(args.calib_windows, 16)])
+    registry = ModelRegistry()
+    registry.register(key, fc0)
+
+    calib = (train_ds.x[:args.calib_windows]
+             if args.calib_windows else None)
+    engine = ServingEngine(registry, BatcherConfig(
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        length_buckets=(CONFIG.window,)))
+    publisher = WeightPublisher(
+        registry, key, calib_windows=calib,
+        min_interval_s=args.min_publish_interval_ms * 1e-3,
+        telemetry=engine.telemetry)
+
+    trainer_err: list[BaseException] = []
+
+    def train() -> None:
+        try:
+            train_rnn_local_sgd(
+                train_ds, test_ds, n_workers=args.workers,
+                iterations=args.iterations, batch=args.batch,
+                tau=args.tau, seed=args.seed, evl_weight=args.evl_weight,
+                round_callback=publisher)
+        except BaseException as e:  # noqa: BLE001 — surfaced after join
+            trainer_err.append(e)
+
+    with engine:
+        engine.warmup(key, lengths=(CONFIG.window,))
+        engine.telemetry.reset_clock()
+        trainer = threading.Thread(target=train, name="online-trainer")
+        t0 = time.time()
+        trainer.start()
+        served = 0
+        alerts = 0
+        burst = max(1, min(args.max_batch, 8))
+        period = burst / max(args.rps, 1e-3)
+        next_t = time.perf_counter()
+        while trainer.is_alive() or served < args.requests:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(min(next_t - now, 0.05))
+                continue
+            futs = [engine.submit(key, test_ds.x[(served + j) % len(test_ds)])
+                    for j in range(burst)]
+            for f in futs:
+                _, p = f.result(timeout=60.0)
+                alerts += p >= 0.9
+            served += burst
+            next_t += period
+            if next_t < time.perf_counter() - 1.0:
+                next_t = time.perf_counter()   # engine slower than --rps:
+                # shed schedule debt instead of bursting to catch up
+        trainer.join()
+        # a rate-limited final round must still reach the registry: the
+        # served (and --save'd) model is never staler than the trained one
+        publisher.flush()
+        wall = time.time() - t0
+        snap = engine.telemetry.snapshot()
+    if trainer_err:
+        raise trainer_err[0]
+
+    print(f"served {served} requests ({alerts} extreme alerts) while "
+          f"training ran, {wall:.1f}s wall")
+    print(engine.telemetry.format(snap))
+    by_version = snap["requests_by_version"]
+    print(f"swaps {snap['swaps']} (publisher: {publisher.published} "
+          f"published, {publisher.skipped} rate-limited) | final version "
+          f"v{registry.version(key)} | staleness at serve p50 "
+          f"{snap['staleness_p50_s']*1e3:.0f} ms")
+    print("requests by version: "
+          + ", ".join(f"v{v}: {n}" for v, n in sorted(by_version.items())))
+    if args.save:
+        registry.save(key, args.save)
+        print(f"saved v{registry.version(key)} -> {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,12 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def run_paper_lstm(args) -> None:
+def run_paper_lstm(args, round_callback=None):
+    """Paper experiment. ``round_callback(round_idx, avg_params)`` — when
+    given — receives every round's worker-averaged parameters as they are
+    produced (the online-learning hook ``repro.launch.online`` uses to
+    hot-swap weights into a live serving engine); the final model is no
+    longer the only artifact the loop emits. Returns the TrainResult."""
     from repro.core.schedules import ConstantSchedule, SampleSchedule
     from repro.data import load_stock, make_windows, train_test_split
     from repro.training.loop import train_rnn_local_sgd, train_rnn_serial
@@ -49,13 +54,32 @@ def run_paper_lstm(args) -> None:
             train_ds, test_ds, n_workers=args.workers,
             iterations=args.iterations, batch=args.batch,
             schedule=schedule, tau=args.tau, seed=args.seed,
-            evl_weight=args.evl_weight)
+            evl_weight=args.evl_weight, round_callback=round_callback)
     dt = time.time() - t0
     print(f"done in {dt:.1f}s: test MSE {res.test_mse:.5f}, "
           f"iterations {res.iterations}, communications "
           f"{res.communications}, comm bytes {res.comm_bytes/1e6:.2f} MB")
     if res.test_extreme:
         print("extreme-event:", res.test_extreme)
+    if getattr(args, "save", None):
+        _save_serving_checkpoint(args.save, res, train_ds)
+    return res
+
+
+def _save_serving_checkpoint(path: str, res, train_ds) -> None:
+    """Persist the trained model as a *serving* checkpoint: EVT-calibrated
+    forecaster + model-version metadata (the version is the number of
+    cross-worker exchanges that produced the weights, so a registry that
+    later loads it slots into the monotone version sequence)."""
+    from repro.configs.paper_lstm import CONFIG
+    from repro.serving import LSTMForecaster, ModelRegistry
+
+    fc = LSTMForecaster(cfg=CONFIG, params=res.params)
+    fc.calibrate(train_ds.x)
+    reg = ModelRegistry()
+    reg.register("trained", fc, version=max(res.communications, 1))
+    reg.save("trained", path)
+    print(f"saved serving checkpoint v{reg.version('trained')} -> {path}")
 
 
 def run_zoo(args) -> None:
@@ -112,6 +136,9 @@ def main() -> None:
     ap.add_argument("--evl-weight", type=float, default=0.0)
     ap.add_argument("--constant-rounds", type=int, default=0,
                     help="use constant local-SGD schedule of this size")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="save the trained paper model as a serving "
+                    "checkpoint (EVT-calibrated, version metadata)")
     ap.add_argument("--reduced", action="store_true")
     args = ap.parse_args()
     if args.arch == "paper-lstm":

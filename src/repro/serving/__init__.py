@@ -11,16 +11,22 @@ Layout (DESIGN: one concern per module):
 - ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
                     interface over the paper LSTM and every zoo arch,
                     with the EVT tail alert head;
-- ``registry.py``   multi-model hosting keyed by name, checkpoint I/O;
+- ``registry.py``   multi-model hosting keyed by name, monotone model
+                    versions, atomic weight swap, checkpoint I/O;
+- ``hotswap.py``    online-learning bridge: the local-SGD round loop
+                    publishes worker-averaged params as new versions
+                    without dropping in-flight requests;
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
-                    cache hit-rate.
+                    cache hit-rate, swap count, staleness at serve time,
+                    per-version request counts.
 """
 
 from repro.serving.engine import BatcherConfig, ServingEngine
 from repro.serving.forecaster import (LSTMForecaster, ZooForecaster,
                                       build_lstm_forecaster,
                                       build_zoo_forecaster)
-from repro.serving.registry import ModelRegistry
+from repro.serving.hotswap import WeightPublisher, stop_the_world_swap
+from repro.serving.registry import ModelRegistry, RegistryEntry
 from repro.serving.sessions import RecurrentSessionRunner, SessionCache
 from repro.serving.telemetry import Telemetry
 
@@ -29,10 +35,13 @@ __all__ = [
     "LSTMForecaster",
     "ModelRegistry",
     "RecurrentSessionRunner",
+    "RegistryEntry",
     "ServingEngine",
     "SessionCache",
     "Telemetry",
+    "WeightPublisher",
     "ZooForecaster",
     "build_lstm_forecaster",
     "build_zoo_forecaster",
+    "stop_the_world_swap",
 ]

@@ -181,6 +181,9 @@ class ServingEngine:
         if not reqs:
             return
         try:
+            # one atomic reference per flush: the whole micro-batch serves
+            # on these weights even if the registry swaps mid-predict; the
+            # next flush re-resolves and picks up the new version
             fc = self.registry.get(model_key)
             bucket_b = self.config.bucket_batch(len(reqs))
             x, lens = self._padded(fc, [r.payload for r in reqs],
@@ -192,9 +195,16 @@ class ServingEngine:
                 r.future.set_exception(e)
             return
         now = time.perf_counter()
+        version = getattr(fc, "version", None)
+        published = getattr(fc, "published_at", None)
+        staleness = (now - published) if published is not None else None
         self.telemetry.record_batch(len(reqs), bucket_b)
         for i, r in enumerate(reqs):
-            self.telemetry.record_request(now - r.t_enq)
+            self.telemetry.record_request(now - r.t_enq, version=version,
+                                          staleness_s=staleness)
+            # attribution before set_result: a client that wakes on the
+            # result always sees which model version produced it
+            r.future.model_version = version
             r.future.set_result((float(forecast[i]), float(p_extreme[i])))
 
     def _worker(self) -> None:

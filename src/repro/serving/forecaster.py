@@ -36,6 +36,24 @@ from repro.models.rnn import (RNNConfig, init_rnn, init_rnn_carry,
 
 PyTree = Any
 
+# One compiled (padded-apply, step) pair per RNNConfig, shared by every
+# forecaster instance with that config. This is what makes weight
+# hot-swapping cheap: a freshly published version reuses the traced
+# programs of the version it replaces (params are traced arguments, so
+# only shapes key the jit cache), and the swap itself never compiles.
+_RNN_COMPILED: dict[RNNConfig, tuple[Any, Any]] = {}
+
+
+def _compiled_rnn(cfg: RNNConfig):
+    fns = _RNN_COMPILED.get(cfg)
+    if fns is None:
+        # benign race under threads: worst case two identical jit wrappers
+        # are built and one wins the dict slot
+        fns = (jax.jit(partial(rnn_apply_padded, cfg=cfg)),
+               jax.jit(partial(rnn_step, cfg=cfg)))
+        _RNN_COMPILED[cfg] = fns
+    return fns
+
 
 def _alert_probability(score, tail: dict | None, gamma: float, head=None):
     """Fuse the EVT tail calibration with an optional learned head.
@@ -68,12 +86,14 @@ class LSTMForecaster:
     tail: dict | None = None
     eps: tuple[float, float] = (0.01, 0.01)
     gamma: float = 5.0
+    # stamped by ModelRegistry.register/swap: monotone per-key version and
+    # publication time (for staleness-at-serve-time telemetry)
+    version: int = 0
+    published_at: float | None = None
     kind: str = dataclasses.field(default="lstm", init=False)
 
     def __post_init__(self):
-        cfg = self.cfg
-        self._apply = jax.jit(partial(rnn_apply_padded, cfg=cfg))
-        self._step = jax.jit(partial(rnn_step, cfg=cfg))
+        self._apply, self._step = _compiled_rnn(self.cfg)
 
     # -- batched serving ---------------------------------------------------
     @property
@@ -148,6 +168,13 @@ class LSTMForecaster:
         self.eps = quantile_thresholds(y, q=quantile)
         return self
 
+    def with_params(self, params: PyTree) -> "LSTMForecaster":
+        """Unpublished successor serving ``params`` with this model's
+        calibration carried over — the hot-swap constructor. Shares the
+        compiled programs, so building one never traces or compiles."""
+        return dataclasses.replace(self, params=params, version=0,
+                                   published_at=None)
+
 
 @dataclasses.dataclass
 class ZooForecaster:
@@ -158,6 +185,8 @@ class ZooForecaster:
     params: PyTree
     tail: dict | None = None
     gamma: float = 5.0
+    version: int = 0
+    published_at: float | None = None
     kind: str = dataclasses.field(default="zoo", init=False)
 
     def __post_init__(self):

@@ -1,0 +1,148 @@
+"""Online learning bridge: the async local-SGD round loop publishes each
+cross-worker average straight into the serving registry.
+
+``WeightPublisher`` is the glue the paper-faithful "continuously retrain
+on streaming data while serving forecasts" scenario needs: after every
+round the trainer hands it the worker-averaged parameters; the publisher
+builds the next forecaster version (sharing the compiled programs of the
+version it replaces, so no publish ever traces or compiles), optionally
+refreshes the EVT tail calibration on a reference window set, and
+atomically swaps it into the ``ModelRegistry``. The serving engine keeps
+draining its queue throughout: an in-flight micro-batch completes on the
+old weights, the next flush resolves the new reference — zero requests
+dropped, which ``benchmarks/bench_hotswap.py`` quantifies against the
+``stop_the_world_swap`` baseline below.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.core.async_local_sgd import worker_mean
+from repro.serving.forecaster import LSTMForecaster
+
+PyTree = Any
+
+
+class WeightPublisher:
+    """Publishes trainer-averaged parameters as new model versions.
+
+    Args:
+        registry: the ``ModelRegistry`` serving traffic.
+        key: model key to publish under. If the key is not hosted yet the
+            first publish registers it.
+        template: an ``LSTMForecaster`` (or compatible) whose config and
+            calibration seed the published versions; when None, the
+            currently hosted forecaster is used as the template.
+        calib_windows: optional [N, T, F] reference windows — when given,
+            every publish refreshes the EVT tail + indicator thresholds on
+            the new weights' own forecast distribution (the paper's
+            calibration, kept current as the model drifts).
+        quantile: calibration quantile for ``fit_tail``.
+        min_interval_s: rate limit; publishes inside the interval are
+            skipped (returns None) so a fast trainer cannot thrash the
+            registry lock or starve serving with calibration work.
+        telemetry: optional ``Telemetry`` — each successful publish
+            records one swap.
+    """
+
+    def __init__(self, registry, key: str, template=None,
+                 calib_windows=None, quantile: float = 0.95,
+                 min_interval_s: float = 0.0, telemetry=None,
+                 clock=time.perf_counter):
+        self.registry = registry
+        self.key = key
+        self._template = template
+        self.calib_windows = calib_windows
+        self.quantile = quantile
+        self.min_interval_s = min_interval_s
+        self.telemetry = telemetry
+        self._clock = clock
+        self._last_publish: float | None = None
+        self._pending: tuple[PyTree, int | None] | None = None
+        self.published = 0
+        self.skipped = 0
+        self.last_version: int | None = None
+        self.last_round: int | None = None
+
+    def _resolve_template(self):
+        if self._template is not None:
+            return self._template
+        return self.registry.get(self.key)
+
+    # -- publishing --------------------------------------------------------
+    def publish(self, params: PyTree, round_idx: int | None = None
+                ) -> int | None:
+        """Publish one parameter pytree (already worker-averaged) as the
+        next version of ``key``. Returns the new version, or None when
+        rate-limited — rate-limited params are remembered so ``flush()``
+        can publish the freshest ones (e.g. the final training round)."""
+        now = self._clock()
+        if self._last_publish is not None and self.min_interval_s > 0 \
+                and now - self._last_publish < self.min_interval_s:
+            self.skipped += 1
+            self._pending = (params, round_idx)
+            return None
+        return self._publish_now(params, round_idx)
+
+    def flush(self) -> int | None:
+        """Publish the most recent rate-limited params, bypassing the
+        rate limit; call after training ends so the served model never
+        stays behind the trained one. Returns the new version, or None
+        when nothing is pending."""
+        if self._pending is None:
+            return None
+        params, round_idx = self._pending
+        return self._publish_now(params, round_idx)
+
+    def _publish_now(self, params: PyTree, round_idx: int | None
+                     ) -> int:
+        template = self._resolve_template()
+        if hasattr(template, "with_params"):
+            fc = template.with_params(params)
+        else:
+            fc = LSTMForecaster(cfg=template.cfg, params=params,
+                                tail=template.tail, eps=template.eps,
+                                gamma=template.gamma)
+        if self.calib_windows is not None:
+            fc.calibrate(self.calib_windows, self.quantile)
+        if self.key in self.registry:
+            version = self.registry.swap(self.key, fc)
+        else:
+            self.registry.register(self.key, fc)
+            version = self.registry.version(self.key)
+        self._last_publish = self._clock()
+        self._pending = None
+        self.published += 1
+        self.last_version = version
+        self.last_round = round_idx
+        if self.telemetry is not None:
+            self.telemetry.record_swap()
+        return version
+
+    def publish_stacked(self, stacked_params: PyTree,
+                        round_idx: int | None = None) -> int | None:
+        """Publish from trainer-side stacked params [W, ...]: averages
+        over the worker dim (the paper's model exchange) first."""
+        return self.publish(worker_mean(stacked_params), round_idx)
+
+    # convenience: the exact signature of the training-loop round callback
+    def __call__(self, round_idx: int, avg_params: PyTree) -> int | None:
+        return self.publish(avg_params, round_idx)
+
+
+def stop_the_world_swap(engine, registry, key: str, forecaster,
+                        reload_s: float = 0.0) -> int:
+    """Baseline weight update for ``bench_hotswap``: halt the engine,
+    replace the model, restart. While the engine is stopped every
+    ``submit`` raises — those are the dropped requests the hot-swap path
+    avoids — and queued work waits out the reload."""
+    engine.stop()
+    try:
+        if reload_s > 0:
+            time.sleep(reload_s)   # simulated checkpoint reload cost
+        version = registry.swap(key, forecaster)
+    finally:
+        engine.start()
+    return version

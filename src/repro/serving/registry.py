@@ -1,18 +1,37 @@
-"""Multi-model hosting: forecasters keyed by name, with checkpoint save/
-load through ``repro.checkpoint.io`` (the forecaster's config, EVT tail
-calibration and indicator thresholds ride along as metadata, so a loaded
-model serves identically to the one that was saved).
+"""Multi-model hosting: forecasters keyed by name, with atomic weight
+hot-swapping and checkpoint save/load through ``repro.checkpoint.io``
+(the forecaster's config, EVT tail calibration, indicator thresholds and
+model version ride along as metadata, so a loaded model serves
+identically to the one that was saved).
+
+Versioning: every key carries a monotonically increasing model version.
+``register`` publishes version 1 (or bumps an existing key); ``swap``
+atomically replaces the hosted forecaster and returns the new version.
+Readers (`get`) take one reference under the lock, so an in-flight
+micro-batch that already resolved its forecaster keeps serving the old
+weights while the next flush picks up the new ones — no request is ever
+dropped by a swap.
 """
 
 from __future__ import annotations
 
 import threading
+import time
+from typing import Any, NamedTuple
 
 import jax
 
 from repro.checkpoint.io import assemble, load_checkpoint, save_checkpoint
 from repro.models.rnn import RNNConfig, init_rnn
 from repro.serving.forecaster import LSTMForecaster, ZooForecaster
+
+
+class RegistryEntry(NamedTuple):
+    """Immutable snapshot of one hosted model."""
+
+    forecaster: Any
+    version: int
+    published_at: float
 
 
 def _rnn_cfg_meta(cfg: RNNConfig) -> dict:
@@ -31,38 +50,106 @@ def _rnn_cfg_from_meta(m: dict) -> RNNConfig:
 class ModelRegistry:
     """Thread-safe name -> forecaster map used by the serving engine."""
 
-    def __init__(self):
+    def __init__(self, clock=time.perf_counter):
         self._lock = threading.Lock()
-        self._models: dict[str, object] = {}
+        self._clock = clock
+        self._entries: dict[str, RegistryEntry] = {}
+        self.swap_count = 0
 
-    def register(self, key: str, forecaster):
+    # -- publication -------------------------------------------------------
+    def _publish_locked(self, key: str, forecaster,
+                        version: int | None) -> int:
+        cur = self._entries.get(key)
+        floor = cur.version if cur is not None else 0
+        new_version = version if version is not None else floor + 1
+        if new_version <= floor:
+            raise ValueError(
+                f"model version must increase monotonically: {key!r} is at "
+                f"v{floor}, refusing v{new_version}")
+        now = self._clock()
+        try:
+            # stamp before publication so readers never see a torn entry
+            forecaster.version = new_version
+            forecaster.published_at = now
+        except AttributeError:
+            pass                 # duck-typed stand-ins without attributes
+        self._entries[key] = RegistryEntry(forecaster, new_version, now)
+        return new_version
+
+    def register(self, key: str, forecaster, version: int | None = None):
+        """Host ``forecaster`` under ``key`` (bumping the version if the
+        key already exists). Returns the forecaster."""
         with self._lock:
-            self._models[key] = forecaster
+            self._publish_locked(key, forecaster, version)
         return forecaster
+
+    def swap(self, key: str, forecaster, version: int | None = None) -> int:
+        """Atomically replace the forecaster hosted at ``key``; the key
+        must already exist (use ``register`` for first publication).
+        Returns the new (monotonically increased) version."""
+        with self._lock:
+            if key not in self._entries:
+                raise KeyError(f"cannot swap unknown model {key!r}; "
+                               f"hosted: {sorted(self._entries)}")
+            v = self._publish_locked(key, forecaster, version)
+            self.swap_count += 1
+        return v
 
     def unregister(self, key: str) -> None:
         with self._lock:
-            self._models.pop(key, None)
+            self._entries.pop(key, None)
 
+    # -- lookup ------------------------------------------------------------
     def get(self, key: str):
         with self._lock:
-            if key not in self._models:
+            entry = self._entries.get(key)
+            if entry is None:
                 raise KeyError(f"unknown model {key!r}; hosted: "
-                               f"{sorted(self._models)}")
-            return self._models[key]
+                               f"{sorted(self._entries)}")
+            return entry.forecaster
+
+    def get_entry(self, key: str) -> RegistryEntry:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                raise KeyError(f"unknown model {key!r}; hosted: "
+                               f"{sorted(self._entries)}")
+            return entry
+
+    def version(self, key: str) -> int:
+        return self.get_entry(key).version
 
     def keys(self) -> list[str]:
         with self._lock:
-            return sorted(self._models)
+            return sorted(self._entries)
+
+    def items(self) -> list[tuple[str, Any]]:
+        """Snapshot of (key, forecaster) pairs taken under the lock —
+        safe to iterate while other threads register/unregister/swap."""
+        with self._lock:
+            return [(k, e.forecaster)
+                    for k, e in sorted(self._entries.items())]
+
+    def entries(self) -> list[tuple[str, RegistryEntry]]:
+        """Snapshot of (key, entry) pairs, same safety contract as
+        ``items``."""
+        with self._lock:
+            return sorted(self._entries.items())
 
     def __contains__(self, key: str) -> bool:
         with self._lock:
-            return key in self._models
+            return key in self._entries
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
 
     # -- persistence -------------------------------------------------------
     def save(self, key: str, path: str) -> None:
-        fc = self.get(key)
-        meta: dict = {"kind": fc.kind, "tail": fc.tail, "gamma": fc.gamma}
+        entry = self.get_entry(key)
+        fc = entry.forecaster
+        meta: dict = {"kind": fc.kind, "tail": fc.tail, "gamma": fc.gamma,
+                      "version": entry.version}
         if fc.kind == "lstm":
             meta["cfg"] = _rnn_cfg_meta(fc.cfg)
             meta["eps"] = list(fc.eps)
@@ -76,7 +163,9 @@ class ModelRegistry:
 
     def load(self, path: str, key: str | None = None):
         """Rebuild a forecaster from a checkpoint and (optionally)
-        register it under ``key``. Returns the forecaster."""
+        register it under ``key`` at the saved version (or the next
+        monotone version if the key has already moved past it). Returns
+        the forecaster."""
         flat, meta = load_checkpoint(path)
         if not meta or "kind" not in meta:
             raise ValueError(f"{path}: not a serving checkpoint (no kind "
@@ -103,6 +192,13 @@ class ModelRegistry:
                                gamma=meta.get("gamma", 5.0))
         else:
             raise ValueError(f"{path}: unknown forecaster kind {kind!r}")
+        fc.version = int(meta.get("version", 0))
         if key is not None:
-            self.register(key, fc)
+            with self._lock:
+                cur = self._entries.get(key)
+                saved = fc.version or None
+                if cur is not None and saved is not None \
+                        and saved <= cur.version:
+                    saved = None     # key moved on: fall back to a bump
+                self._publish_locked(key, fc, saved)
         return fc

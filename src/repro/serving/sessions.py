@@ -30,6 +30,7 @@ class _Session:
     last_used: float
     created: float
     steps: int = 0
+    version: int = 0             # model version the carry was built under
 
 
 class SessionCache:
@@ -64,6 +65,13 @@ class SessionCache:
 
     def get(self, client_id: str):
         """Return the cached carry (refreshing LRU order) or None."""
+        entry = self.get_entry(client_id)
+        return entry[0] if entry is not None else None
+
+    def get_entry(self, client_id: str) -> tuple[Any, int] | None:
+        """Like ``get`` but returns (carry, model_version) so callers can
+        detect carries built under a weight version that has since been
+        hot-swapped out."""
         with self._lock:
             expired = self._expire_locked()
             s = self._sessions.get(client_id)
@@ -78,9 +86,10 @@ class SessionCache:
             if expired:
                 self.telemetry.record_eviction(expired)
             self.telemetry.record_cache(hit)
-        return s.carry if hit else None
+        return (s.carry, s.version) if hit else None
 
-    def put(self, client_id: str, carry, nbytes: int) -> None:
+    def put(self, client_id: str, carry, nbytes: int,
+            version: int = 0) -> None:
         evicted = 0
         with self._lock:
             now = self._clock()
@@ -89,7 +98,8 @@ class SessionCache:
                 self.nbytes_in_use -= old.nbytes
             s = _Session(carry=carry, nbytes=nbytes, last_used=now,
                          created=old.created if old else now,
-                         steps=(old.steps + 1) if old else 1)
+                         steps=(old.steps + 1) if old else 1,
+                         version=version)
             self._sessions[client_id] = s
             self.nbytes_in_use += nbytes
             while len(self._sessions) > self.max_sessions or (
@@ -137,21 +147,43 @@ class SessionCache:
 
 class RecurrentSessionRunner:
     """Streaming serving for a recurrent forecaster: each client is a
-    session whose carry lives in the cache between requests."""
+    session whose carry lives in the cache between requests.
+
+    ``forecaster`` may be the forecaster itself or a zero-arg provider
+    returning the *current* forecaster (e.g. ``lambda: registry.get(key)``)
+    so a runner keeps tracking a registry key across weight hot-swaps.
+    Carries are stamped with the model version they were built under; a
+    step that observes a newer version re-primes the carry lazily — by
+    replaying ``history`` through the new weights when given, otherwise by
+    carrying the live hidden state across (valid shapes: swapped versions
+    share the config) — instead of dropping the session.
+    """
 
     def __init__(self, forecaster, cache: SessionCache | None = None,
                  on_miss: str = "zeros"):
-        for attr in ("init_carry", "step", "replay"):
-            if not hasattr(forecaster, attr):
-                raise TypeError(
-                    f"forecaster {type(forecaster).__name__} does not "
-                    f"support incremental serving (missing {attr!r})")
+        if callable(forecaster) and not hasattr(forecaster, "step"):
+            self._provider = forecaster
+        else:
+            self._provider = None
+            self.forecaster = forecaster
+        fc = self._resolve()
         if on_miss not in ("zeros", "error"):
             raise ValueError("on_miss must be 'zeros' or 'error'")
-        self.forecaster = forecaster
         self.cache = cache if cache is not None else SessionCache()
         self.on_miss = on_miss
-        self._nbytes = forecaster.carry_nbytes(1)
+        self._nbytes = fc.carry_nbytes(1)
+        self.reprimes = 0            # carries replayed onto new weights
+        self.carried_across_swap = 0  # carries reused without history
+
+    def _resolve(self):
+        fc = self._provider() if self._provider is not None \
+            else self.forecaster
+        for attr in ("init_carry", "step", "replay"):
+            if not hasattr(fc, attr):
+                raise TypeError(
+                    f"forecaster {type(fc).__name__} does not "
+                    f"support incremental serving (missing {attr!r})")
+        return fc
 
     def step(self, client_id: str, x_t, history=None):
         """One streaming step for ``client_id``. ``x_t`` is one feature
@@ -165,19 +197,39 @@ class RecurrentSessionRunner:
         Returns (forecast, p_extreme) scalars."""
         import numpy as np
 
+        fc = self._resolve()
+        version = getattr(fc, "version", 0)
         x_t = np.asarray(x_t, np.float32)
         if x_t.ndim == 1:
             x_t = x_t[None, :]
-        carry = self.cache.get(client_id)
+        entry = self.cache.get_entry(client_id)
+        carry = None
+        stamp = version
+        if entry is not None:
+            carry, carry_version = entry
+            if carry_version != version:
+                if history is not None:
+                    hist = np.asarray(history, np.float32)
+                    _, _, carry = fc.replay(hist[None])
+                    self.reprimes += 1
+                    if self.cache.telemetry is not None:
+                        self.cache.telemetry.record_reprime()
+                else:
+                    # same config, new weights: the live state stays a
+                    # usable prefix approximation until history arrives —
+                    # keep the OLD stamp so a later step that does bring
+                    # history still sees the mismatch and re-primes
+                    self.carried_across_swap += 1
+                    stamp = carry_version
         if carry is None:
             if history is not None:
                 hist = np.asarray(history, np.float32)
-                _, _, carry = self.forecaster.replay(hist[None])
+                _, _, carry = fc.replay(hist[None])
             elif self.on_miss == "error":
                 raise KeyError(
                     f"no session for {client_id!r} and no history given")
             else:
-                carry = self.forecaster.init_carry(1)
-        y, p, carry = self.forecaster.step(x_t, carry)
-        self.cache.put(client_id, carry, self._nbytes)
+                carry = fc.init_carry(1)
+        y, p, carry = fc.step(x_t, carry)
+        self.cache.put(client_id, carry, self._nbytes, version=stamp)
         return float(y[0]), float(p[0])

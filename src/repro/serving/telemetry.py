@@ -47,14 +47,32 @@ class Telemetry:
         self.cache_hits = 0
         self.cache_misses = 0
         self.cache_evictions = 0
+        self.swaps = 0             # weight hot-swaps observed (cumulative)
+        self.reprimes = 0          # session carries re-primed after a swap
+        self.requests_by_version: dict[int, int] = {}
         self._latency = _Reservoir()
+        self._staleness = _Reservoir()   # model age at serve time (s)
         self._batch_sizes = _Reservoir()
 
     # -- recording ---------------------------------------------------------
-    def record_request(self, latency_s: float) -> None:
+    def record_request(self, latency_s: float, version: int | None = None,
+                       staleness_s: float | None = None) -> None:
         with self._lock:
             self.requests += 1
             self._latency.add(latency_s)
+            if version is not None:
+                self.requests_by_version[version] = \
+                    self.requests_by_version.get(version, 0) + 1
+            if staleness_s is not None:
+                self._staleness.add(staleness_s)
+
+    def record_swap(self, n: int = 1) -> None:
+        with self._lock:
+            self.swaps += n
+
+    def record_reprime(self, n: int = 1) -> None:
+        with self._lock:
+            self.reprimes += n
 
     def record_batch(self, n_real: int, n_padded: int) -> None:
         with self._lock:
@@ -97,28 +115,41 @@ class Telemetry:
                 "cache_hit_rate": (self.cache_hits / lookups
                                    if lookups else 0.0),
                 "cache_evictions": self.cache_evictions,
+                "swaps": self.swaps,
+                "reprimes": self.reprimes,
+                "staleness_p50_s": self._staleness.percentile(50),
+                "staleness_p95_s": self._staleness.percentile(95),
+                "requests_by_version": dict(self.requests_by_version),
             }
 
     def reset_clock(self) -> None:
         """Restart the measurement window (e.g. after jit warmup):
         throughput counters AND latency/batch reservoirs, so a snapshot
-        never mixes pre-reset samples with the new window. Cache counters
-        are cumulative state and are kept."""
+        never mixes pre-reset samples with the new window. Cache and swap
+        counters are cumulative state and are kept; per-version request
+        counts follow the measurement window."""
         with self._lock:
             self._t0 = self._clock()
             self.requests = 0
             self.batches = 0
             self.real_slots = 0
             self.padded_slots = 0
+            self.requests_by_version = {}
             self._latency = _Reservoir()
+            self._staleness = _Reservoir()
             self._batch_sizes = _Reservoir()
 
     @staticmethod
     def format(snap: dict) -> str:
-        return (f"{snap['requests']} req in {snap['batches']} batches | "
+        line = (f"{snap['requests']} req in {snap['batches']} batches | "
                 f"{snap['throughput_rps']:.0f} req/s | "
                 f"p50 {snap['p50_ms']:.2f} ms  p95 {snap['p95_ms']:.2f} ms  "
                 f"p99 {snap['p99_ms']:.2f} ms | "
                 f"mean batch {snap['mean_batch']:.1f} "
                 f"(occupancy {snap['batch_occupancy']:.0%}) | "
                 f"cache hit {snap['cache_hit_rate']:.0%}")
+        if snap.get("swaps"):
+            line += (f" | {snap['swaps']} swaps, staleness p95 "
+                     f"{snap['staleness_p95_s']:.2f} s, "
+                     f"{len(snap['requests_by_version'])} versions served")
+        return line

@@ -139,8 +139,15 @@ def train_rnn_local_sgd(train_ds: WindowDataset, test_ds: WindowDataset,
                         stepsize: StepSizeSchedule | None = None,
                         optimizer: Optimizer | None = None,
                         tau: int = 0, split: str = "iid",
-                        evl_weight: float = 0.0, seed: int = 0) -> TrainResult:
-    """The paper's framework on the stacked-worker SPMD path."""
+                        evl_weight: float = 0.0, seed: int = 0,
+                        round_callback=None) -> TrainResult:
+    """The paper's framework on the stacked-worker SPMD path.
+
+    ``round_callback(round_idx, avg_params)`` — when given — is invoked
+    after every cross-worker exchange with the worker-averaged (single
+    model) parameters of that round. This is the online-learning hook: a
+    ``repro.serving.WeightPublisher`` passed here hot-swaps each round's
+    average into a live serving engine (``repro.launch.online``)."""
     cfg = cfg or RNNConfig()
     fr = extreme_fractions(train_ds.v)
     loss_fn = make_loss_fn(cfg, evl_weight, beta0=fr["normal"],
@@ -174,6 +181,9 @@ def train_rnn_local_sgd(train_ds: WindowDataset, test_ds: WindowDataset,
         batches = tuple(np.stack([pw[i] for pw in per_worker])
                         for i in range(4))
         stacked, opt_state, _ = trainer.run_round(stacked, opt_state, batches)
+        if round_callback is not None:
+            from repro.core.async_local_sgd import worker_mean
+            round_callback(round_i, worker_mean(stacked))
 
     final = jax.tree.map(lambda a: a[0], stacked)
     test_mse, ext = evaluate(final, cfg, test_ds)

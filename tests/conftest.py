@@ -5,6 +5,20 @@ and benches must see the real single CPU device; only dryrun.py forces
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import HealthCheck, settings
+
+    # "ci" bounds example counts so property tests fit the tier-1 timing
+    # gate (select with --hypothesis-profile=ci, as .github/workflows/ci.yml
+    # does); the default/dev profiles keep fuller coverage. deadline=None
+    # everywhere: jit compilation on a test's first example is slow.
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", max_examples=100, deadline=None)
+except ImportError:                      # hypothesis is an optional extra
+    pass
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.async_local_sgd import (AsyncLocalSGD, LocalSGDConfig,
                                         broadcast_to_workers,
@@ -115,6 +116,93 @@ def test_trainer_accounting_and_convergence():
     assert trainer.loss_history[-1] < trainer.loss_history[0] * 0.2
     assert trainer.communication_bytes(stacked) == \
         12 * 2 * 2 * trainer.model_bytes(stacked)
+
+
+def test_delayed_average_consumed_exactly_at_round_r_plus_tau():
+    """Definition 1, exactly: with staleness tau the round-r average is
+    consumed at round r + tau — verified against a numpy simulation of
+    the recursion w <- avg^{(r)} + (w - w^{(r)}), whose values shift if
+    consumption is off by even one round."""
+    W, H, B, tau, R = 3, 2, 4, 2, 6
+    lr = 0.05
+
+    def lin_loss(params, batch):
+        # gradient wrt w is exactly mean(x, axis=0): every local step is
+        # a predictable constant move, so the whole run is replayable
+        (x,) = batch
+        return jnp.vdot(params["w"], jnp.mean(x, axis=0))
+
+    cfg = LocalSGDConfig(n_workers=W, tau=tau,
+                         stepsize=StepSizeSchedule(eta0=lr, beta=0.0))
+    trainer = AsyncLocalSGD(lin_loss, sgd(), cfg)
+    stacked, opt_state = trainer.init({"w": jnp.zeros((3,))})
+
+    rng = np.random.default_rng(7)
+    rounds = [rng.standard_normal((W, H, B, 3)).astype(np.float32)
+              for _ in range(R)]
+
+    # numpy reference of the paper's recursion
+    pw = np.zeros((W, 3), np.float64)
+    queue, expected_consumed = [], []
+    for r, g in enumerate(rounds, start=1):
+        for w in range(W):
+            for h in range(H):
+                pw[w] -= lr * g[w, h].mean(axis=0)
+        queue.append((pw.mean(axis=0), pw.copy(), r))
+        if len(queue) > tau:
+            avg_old, snap_old, r_old = queue.pop(0)
+            expected_consumed.append((r, r_old))
+            pw = avg_old[None] + (pw - snap_old)
+
+    for g in rounds:
+        stacked, opt_state, _ = trainer.run_round(stacked, opt_state, (g,))
+
+    assert trainer.consumed_rounds == expected_consumed
+    # consumption starts at round tau + 1 and lags by exactly tau
+    assert expected_consumed == [(r, r - tau) for r in range(tau + 1, R + 1)]
+    np.testing.assert_allclose(np.asarray(stacked["w"]), pw, rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_gradient_exchange_forces_single_local_step():
+    """Paper footnote **: gradient exchange communicates every iteration,
+    so a round collapses to H == 1 — the trainer enforces it."""
+    opt = sgd()
+    x, y = _data(16)
+    cfg = LocalSGDConfig(n_workers=4, exchange="gradient",
+                         schedule=SampleSchedule(a=16),
+                         stepsize=StepSizeSchedule(eta0=0.1, beta=0.0))
+    trainer = AsyncLocalSGD(quad_loss, opt, cfg)
+    # the schedule may ask for many local steps; gradient exchange pins 1
+    for i in (1, 2, 5, 20):
+        assert trainer.local_steps_for_round(i) == 1
+
+    stacked, opt_state = trainer.init(_params())
+    xb = x.reshape(4, 1, 4, 3)
+    yb = y.reshape(4, 1, 4)
+    newp, _, _ = trainer.run_round(stacked, opt_state, (xb, yb))
+    assert trainer.iterations_done == 4 and trainer.communications == 1
+    # matches the synchronous gradient-averaging baseline exactly
+    want, _, _ = sync_step(quad_loss, opt, stacked, opt_state,
+                           (xb[:, 0], yb[:, 0]), trainer.cfg.stepsize(0),
+                           exchange="gradient")
+    np.testing.assert_allclose(np.asarray(newp["w"]),
+                               np.asarray(want["w"]), rtol=1e-6)
+
+    # an H=2 round is a contract violation, not a silent average
+    xb2 = np.broadcast_to(x.reshape(4, 1, 4, 3), (4, 2, 4, 3))
+    yb2 = np.broadcast_to(y.reshape(4, 1, 4), (4, 2, 4))
+    with pytest.raises(ValueError, match="H == 1"):
+        trainer.run_round(newp, opt_state, (jnp.asarray(xb2),
+                                            jnp.asarray(yb2)))
+
+
+def test_gradient_exchange_config_validation():
+    with pytest.raises(ValueError):
+        LocalSGDConfig(exchange="gradient", tau=1)  # staleness is a
+        # model-exchange concept; gradient exchange is synchronous
+    with pytest.raises(ValueError):
+        LocalSGDConfig(exchange="momentum")
 
 
 def test_stale_averaging_satisfies_definition_1():

@@ -1,0 +1,166 @@
+"""Property tests for the serving subsystem: session-cache invariants
+under arbitrary operation sequences, step-vs-replay carry equivalence
+across arbitrary evict/re-prime points, and micro-batcher bucketing laws
+(monotone, power-of-two, >= input).
+
+Example counts come from the hypothesis profile (``--hypothesis-profile=ci``
+bounds them for the tier-1 timing gate); the exhaustive variants carry the
+``slow`` marker.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.models.rnn import RNNConfig, init_rnn
+from repro.serving import (BatcherConfig, LSTMForecaster,
+                           RecurrentSessionRunner, SessionCache)
+
+CFG = RNNConfig(input_dim=3, hidden=8, num_layers=1, fc_dims=(4,),
+                window=8, evl_head=True)
+
+
+@pytest.fixture(scope="module")
+def forecaster():
+    return LSTMForecaster(cfg=CFG, params=init_rnn(jax.random.PRNGKey(0),
+                                                   CFG))
+
+
+# -- bucketing laws --------------------------------------------------------
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+@given(st.integers(1, 2048), st.integers(1, 2048))
+@settings(deadline=None)
+def test_bucket_len_monotone_pow2_geq_without_buckets(t1, t2):
+    cfg = BatcherConfig()
+    b1, b2 = cfg.bucket_len(t1), cfg.bucket_len(t2)
+    assert b1 >= t1 and _is_pow2(b1)
+    if t1 <= t2:
+        assert b1 <= b2
+    # idempotent: a bucketed length is its own bucket
+    assert cfg.bucket_len(b1) == b1
+
+
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=6, unique=True),
+       st.integers(1, 600), st.integers(1, 600))
+@settings(deadline=None)
+def test_bucket_len_monotone_geq_with_buckets(buckets, t1, t2):
+    cfg = BatcherConfig(length_buckets=tuple(buckets))
+    b1, b2 = cfg.bucket_len(t1), cfg.bucket_len(t2)
+    assert b1 >= t1
+    assert b1 in buckets or b1 == t1     # a bucket, or its own group
+    if t1 <= t2:
+        assert b1 <= b2
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64))
+@settings(deadline=None)
+def test_bucket_batch_monotone_pow2_geq(max_batch, n1, n2):
+    cfg = BatcherConfig(max_batch=max_batch)
+    n1, n2 = min(n1, max_batch), min(n2, max_batch)  # engine flushes
+    # groups of at most max_batch requests
+    b1, b2 = cfg.bucket_batch(n1), cfg.bucket_batch(n2)
+    assert n1 <= b1 <= max_batch
+    assert _is_pow2(b1) or b1 == max_batch
+    if n1 <= n2:
+        assert b1 <= b2
+    assert BatcherConfig(max_batch=max_batch,
+                         pad_batch=False).bucket_batch(n1) == n1
+
+
+# -- session cache invariants ----------------------------------------------
+
+_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("put"), st.integers(0, 5), st.integers(1, 16)),
+        st.tuples(st.just("get"), st.integers(0, 5), st.just(0)),
+        st.tuples(st.just("drop"), st.integers(0, 5), st.just(0)),
+        st.tuples(st.just("tick"), st.just(0), st.integers(1, 8)),
+    ),
+    min_size=1, max_size=60)
+
+
+def _run_cache_ops(ops, max_sessions, max_bytes, ttl_s):
+    now = [0.0]
+    cache = SessionCache(max_sessions=max_sessions, max_bytes=max_bytes,
+                         ttl_s=ttl_s, clock=lambda: now[0])
+    for op, k, arg in ops:
+        key = f"c{k}"
+        if op == "put":
+            cache.put(key, f"carry-{k}", arg, version=arg)
+        elif op == "get":
+            entry = cache.get_entry(key)
+            if entry is not None:
+                assert entry[0] == f"carry-{k}"
+        elif op == "drop":
+            cache.drop(key)
+        else:
+            now[0] += arg
+        # the invariants, after every single operation:
+        stats = cache.stats()
+        assert len(cache) <= max_sessions
+        assert stats["sessions"] == len(cache)
+        assert stats["nbytes_in_use"] >= 0
+        if max_bytes is not None:
+            # one oversize session is admitted rather than thrashing
+            assert stats["nbytes_in_use"] <= max_bytes or len(cache) == 1
+        assert stats["hits"] + stats["misses"] >= 0
+
+
+@given(_OPS, st.integers(1, 4),
+       st.one_of(st.none(), st.integers(8, 48)),
+       st.one_of(st.none(), st.floats(1.0, 16.0)))
+@settings(deadline=None)
+def test_session_cache_never_exceeds_capacity(ops, max_sessions, max_bytes,
+                                              ttl_s):
+    _run_cache_ops(ops, max_sessions, max_bytes, ttl_s)
+
+
+@pytest.mark.slow
+@given(_OPS, st.integers(1, 4),
+       st.one_of(st.none(), st.integers(8, 48)),
+       st.one_of(st.none(), st.floats(1.0, 16.0)))
+@settings(max_examples=300, deadline=None)
+def test_session_cache_never_exceeds_capacity_exhaustive(ops, max_sessions,
+                                                         max_bytes, ttl_s):
+    _run_cache_ops(ops, max_sessions, max_bytes, ttl_s)
+
+
+# -- step vs replay equivalence --------------------------------------------
+
+def _stream(forecaster, w, evict_at):
+    """Serve window ``w`` step by step, dropping the session (and
+    re-priming from history) at every index in ``evict_at``."""
+    runner = RecurrentSessionRunner(forecaster,
+                                    SessionCache(max_sessions=4))
+    y = p = None
+    for t in range(w.shape[0]):
+        if t in evict_at and t > 0:
+            runner.cache.drop("c")
+        y, p = runner.step("c", w[t], history=w[:t] if t > 0 else None)
+    return y, p
+
+
+@given(st.integers(0, 2 ** 16 - 1),
+       st.sets(st.integers(1, CFG.window - 1), max_size=4))
+@settings(deadline=None)
+def test_step_replay_equivalence_across_evictions(forecaster, seed,
+                                                  evict_at):
+    """Evict/re-prime at arbitrary points must be invisible: the final
+    forecast equals the uninterrupted session's, bitwise (both paths run
+    the same compiled step function)."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((CFG.window, 3)).astype(np.float32) * 0.02
+    y_evicted, p_evicted = _stream(forecaster, w, evict_at)
+    y_clean, p_clean = _stream(forecaster, w, set())
+    assert y_evicted == y_clean
+    assert p_evicted == p_clean
+    # and both equal a raw replay through the compiled step path
+    y_ref, p_ref, _ = forecaster.replay(w[None])
+    assert y_clean == float(y_ref[0]) and p_clean == float(p_ref[0])
