@@ -70,7 +70,7 @@ def _run_phase(engine, key, windows, n_requests: int, swap_fn=None,
     return latencies, dropped, swaps[0]
 
 
-def main(n_requests: int = 400) -> None:
+def main(n_requests: int = 400, smoke: bool = False) -> None:
     import jax
 
     from repro.models.rnn import init_rnn
@@ -78,6 +78,8 @@ def main(n_requests: int = 400) -> None:
                                ServingEngine, WeightPublisher,
                                stop_the_world_swap)
 
+    if smoke:
+        n_requests = min(n_requests, 80)
     cfg = RNNConfig(input_dim=5, hidden=32, num_layers=2, fc_dims=(16, 8),
                     window=20, evl_head=True)
     fc0 = LSTMForecaster(cfg=cfg, params=init_rnn(jax.random.PRNGKey(0),
@@ -129,8 +131,12 @@ def main(n_requests: int = 400) -> None:
     steady_p99 = _percentile(results["steady"][0], 99)
     hot_p99 = _percentile(results["hotswap"][0], 99)
     ratio = hot_p99 / max(steady_p99, 1e-9)
+    # smoke runs report the ratio without the accept gate: percentiles
+    # over ~80 requests on a loaded CI box are too noisy to gate on
     row("hotswap/p99_ratio_vs_steady", hot_p99 * 1e6,
-        f"ratio={ratio:.2f};accept={'PASS' if ratio <= 2.0 else 'FAIL'}")
+        f"ratio={ratio:.2f}"
+        + ("" if smoke else
+           f";accept={'PASS' if ratio <= 2.0 else 'FAIL'}"))
     assert results["hotswap"][1] == 0, \
         f"hot swap dropped {results['hotswap'][1]} requests"
     print(f"# hot swap: {results['hotswap'][2]} swaps, 0 dropped, p99 "
@@ -140,4 +146,11 @@ def main(n_requests: int = 400) -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced request count (CI smoke)")
+    ap.add_argument("--requests", type=int, default=400)
+    args = ap.parse_args()
+    main(n_requests=args.requests, smoke=args.smoke)

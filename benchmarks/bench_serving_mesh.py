@@ -1,0 +1,191 @@
+"""Sharded serving mesh scaling curve + swap-storm behavior (ISSUE 3
+acceptance): aggregate throughput at 1/2/4 shards, and p99 / dropped
+requests / version skew while a publisher storms weight swaps across
+the fleet.
+
+Two phases over the same (reduced) paper-LSTM model:
+
+  scaling    — submit-all traffic against 1, 2 and 4 shards; the
+               4-shard mesh must beat the single engine (>= 1.5x on a
+               multi-core CPU — reported, since the achievable ratio is
+               machine-dependent);
+  swapstorm  — a ``WeightPublisher`` publishes into the swarm every few
+               ms while traffic flows over the max-shard mesh: zero
+               dropped requests (hard assert), every sampled version
+               vector within the configured staleness skew bound (hard
+               assert), p99 and pull/transfer volume reported.
+
+Rows: ``mesh/shards<n>,us_per_request,rps=..;p99_ms=..;occ=..``,
+``mesh/scaling,0,speedup4v1=..``, and
+``mesh/swapstorm,us_per_request,p99_ms=..;dropped=..;skew_max=..;...``.
+
+Standalone runs force 4 host devices (one per shard, before jax
+initializes) so shard flushes can execute concurrently; under
+``benchmarks.run`` whatever devices exist are used.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _model(smoke: bool):
+    import jax
+
+    from repro.models.rnn import RNNConfig, init_rnn
+    from repro.serving import LSTMForecaster
+
+    # reduced paper topology; sized so the jitted flush dominates the
+    # GIL-held batching overhead (that compute is what shards overlap)
+    cfg = RNNConfig(input_dim=5, hidden=32 if smoke else 256, num_layers=2,
+                    fc_dims=(16, 8) if smoke else (64, 32), window=20,
+                    evl_head=True)
+    fc = LSTMForecaster(cfg=cfg, params=init_rnn(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    fc.calibrate(rng.standard_normal((64, cfg.window, 5)).astype(np.float32)
+                 * 0.02)
+    return cfg, fc, rng
+
+
+def _serve_all(engine, key, windows, n_requests: int):
+    """Submit everything upfront, wait for all results; returns
+    (rps, dropped)."""
+    dropped = 0
+    futures = []
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        try:
+            futures.append(engine.submit(key, windows[i % len(windows)]))
+        except RuntimeError:
+            dropped += 1
+    for f in futures:
+        f.result(timeout=120.0)
+    return len(futures) / (time.perf_counter() - t0), dropped
+
+
+def main(n_requests: int = 384, smoke: bool = False) -> None:
+    from repro.serving import (BatcherConfig, ModelRegistry,
+                               ServingEngine, ShardedServingEngine,
+                               WeightPublisher)
+
+    if smoke:
+        n_requests = min(n_requests, 96)
+    cfg, fc0, rng = _model(smoke)
+    windows = rng.standard_normal(
+        (128, cfg.window, 5)).astype(np.float32) * 0.02
+    bcfg = BatcherConfig(max_batch=16, max_wait_ms=2.0,
+                         length_buckets=(cfg.window,))
+    shard_counts = (1, 2) if smoke else (1, 2, 4)
+    max_shards = shard_counts[-1]
+    max_skew = 1
+
+    # -- phase 1: scaling curve -------------------------------------------
+    rps = {}
+    for n_shards in shard_counts:
+        reg = ModelRegistry()
+        reg.register("m", fc0)
+        engine = (ServingEngine(reg, bcfg) if n_shards == 1 else
+                  ShardedServingEngine(reg, bcfg, n_shards=n_shards,
+                                       max_skew=max_skew))
+        with engine:
+            engine.warmup("m", lengths=(cfg.window,))
+            _serve_all(engine, "m", windows, n_requests)   # warm pass
+            if n_shards == 1:
+                engine.telemetry.reset_clock()
+            else:
+                engine.reset_clock()
+            # best of 3 measured passes: a co-tenant stealing the box
+            # mid-pass should not decide the scaling curve
+            rps[n_shards] = max(
+                _serve_all(engine, "m", windows, n_requests)[0]
+                for _ in range(1 if smoke else 3))
+            snap = (engine.telemetry.snapshot() if n_shards == 1
+                    else engine.snapshot())
+        row(f"mesh/shards{n_shards}", 1e6 / max(rps[n_shards], 1e-9),
+            f"rps={rps[n_shards]:.0f};p99_ms={snap['p99_ms']:.2f};"
+            f"occ={snap['batch_occupancy']:.2f}")
+    speedup = rps[max_shards] / max(rps[1], 1e-9)
+    per_count = ";".join(f"speedup{n}v1={rps[n]/max(rps[1], 1e-9):.2f}x"
+                         for n in shard_counts[1:])
+    row("mesh/scaling", 0.0, per_count
+        + (";smoke=driver-check-only (tiny model, single pass: not a "
+           "scaling measurement)" if smoke else
+           f";accept={'PASS' if speedup >= 1.5 else 'FAIL'} (>=1.5x)"))
+
+    # -- phase 2: swap storm over the mesh --------------------------------
+    reg = ModelRegistry()
+    reg.register("m", fc0)
+    mesh = ShardedServingEngine(reg, bcfg, n_shards=max_shards,
+                                max_skew=max_skew)
+    publisher = WeightPublisher(mesh.swarm, "m", template=fc0)
+    import jax
+    variants = [jax.tree.map(lambda a, s=s: a * s, fc0.params)
+                for s in (1.0, 1.05, 0.95)]
+    stop = threading.Event()
+    swaps = [0]
+    skew_samples: list[tuple[int, int]] = []
+
+    def swapper() -> None:
+        while not stop.is_set():
+            publisher.publish(variants[swaps[0] % len(variants)])
+            swaps[0] += 1
+            time.sleep(0.003)
+
+    def sampler() -> None:
+        # every sampled vector must respect the skew bound (the vector
+        # is taken atomically under the swarm's publish lock)
+        while not stop.is_set():
+            skew_samples.append((mesh.swarm.skew("m"),
+                                 mesh.swarm.staleness("m")))
+            time.sleep(0.001)
+
+    with mesh:
+        mesh.warmup("m", lengths=(cfg.window,))
+        mesh.reset_clock()
+        threads = [threading.Thread(target=swapper, name="mesh-swapper"),
+                   threading.Thread(target=sampler, name="mesh-sampler")]
+        for t in threads:
+            t.start()
+        try:
+            storm_rps, dropped = _serve_all(mesh, "m", windows, n_requests)
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+        snap = mesh.snapshot()
+    skew_max = max((s for s, _ in skew_samples), default=0)
+    stale_max = max((s for _, s in skew_samples), default=0)
+    row("mesh/swapstorm", 1e6 / max(storm_rps, 1e-9),
+        f"p99_ms={snap['p99_ms']:.2f};dropped={dropped};swaps={swaps[0]};"
+        f"pulls={snap['pulls']};mb_pulled={snap['bytes_pulled']/1e6:.1f};"
+        f"skew_max={skew_max};staleness_max={stale_max};"
+        f"versions_served={len(snap['requests_by_version'])}")
+    assert dropped == 0, \
+        f"swap storm dropped {dropped} requests on the mesh"
+    assert stale_max <= max_skew, \
+        f"staleness skew {stale_max} exceeded the bound {max_skew}"
+    print(f"# mesh: {speedup:.2f}x at {max_shards} shards | storm: "
+          f"{swaps[0]} publishes, 0 dropped, skew bound {max_skew} held "
+          f"({len(skew_samples)} samples, max staleness {stale_max})")
+
+
+if __name__ == "__main__":
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small model + few requests (CI smoke)")
+    ap.add_argument("--requests", type=int, default=512)
+    args = ap.parse_args()
+    # one host device per shard, set before jax initializes — shard
+    # flushes then execute concurrently (see conftest note: this forcing
+    # stays inside this process, never in the shared test env)
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+    main(n_requests=args.requests, smoke=args.smoke)

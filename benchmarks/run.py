@@ -1,16 +1,19 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §8).
 Prints ``name,us_per_call,derived`` CSV. Select with ``--only <substr>``.
+``--smoke`` runs benchmarks that support it with reduced workloads (the
+CI guard against benchmark drivers silently rotting).
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
 from benchmarks import (bench_communication, bench_extreme, bench_hotswap,
                         bench_kernels, bench_prediction, bench_roofline,
-                        bench_serving, bench_speedup)
+                        bench_serving, bench_serving_mesh, bench_speedup)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -21,12 +24,18 @@ ALL = [
     ("roofline", bench_roofline),        # dry-run roofline table
     ("serving", bench_serving),          # ISSUE 1 micro-batcher throughput
     ("hotswap", bench_hotswap),          # ISSUE 2 swap-storm latency/drops
+    # "mesh", not "serving_mesh": --only matches substrings, and
+    # `--only serving` must keep selecting just bench_serving
+    ("mesh", bench_serving_mesh),        # ISSUE 3 shard scaling + storm
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workloads where the benchmark supports "
+                    "a `smoke` parameter")
     args = ap.parse_args()
     failures = 0
     for name, mod in ALL:
@@ -34,7 +43,11 @@ def main() -> None:
             continue
         print(f"# --- {name} ---", flush=True)
         try:
-            mod.main()
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.main).parameters:
+                mod.main(smoke=True)
+            else:
+                mod.main()
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures += 1

@@ -26,9 +26,17 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(n_data: int = 1, n_model: int = 1):
-    """Small mesh over whatever devices exist (CPU smoke / examples)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"))
+def make_host_mesh(n_data: int = 1, n_model: int = 1, devices=None):
+    """Small mesh over whatever devices exist (CPU smoke / examples).
+    ``devices`` pins the mesh to an explicit device subset — e.g. the
+    serving swarm builds a one-device mesh per shard so each shard's
+    replica weights live on (and its flushes run on) its own device."""
+    if devices is None:
+        return jax.make_mesh((n_data, n_model), ("data", "model"))
+    import numpy as np
+
+    arr = np.asarray(devices, dtype=object).reshape(n_data, n_model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> dict[str, int]:

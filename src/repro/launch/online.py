@@ -12,8 +12,16 @@ no request is ever dropped by a weight update. The foreground thread
 plays client traffic against the engine the whole time and reports
 swap count, staleness at serve time, and per-version request counts.
 
+With ``--shards N`` the serving side is the sharded mesh: the publisher
+publishes into the swap-propagation swarm's primary registry and every
+shard's replica pulls the new weights within ``--max-skew`` versions,
+while all shards keep draining traffic.
+
     PYTHONPATH=src python -m repro.launch.online --ticker AAPL \
         --workers 3 --iterations 600 --requests 400
+
+    PYTHONPATH=src python -m repro.launch.online --shards 4 \
+        --iterations 300 --requests 200
 """
 
 from __future__ import annotations
@@ -41,6 +49,12 @@ def main(argv: list[str] | None = None) -> None:
                     "trace spans the whole training run")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve through a sharded mesh with this many "
+                    "EngineShard workers (1 = single engine)")
+    ap.add_argument("--max-skew", type=int, default=1,
+                    help="mesh staleness bound: versions a shard may lag "
+                    "the primary before a publish forces its pull")
     ap.add_argument("--min-publish-interval-ms", type=float, default=0.0,
                     help="rate-limit weight publishes (0 = every round)")
     ap.add_argument("--calib-windows", type=int, default=64,
@@ -57,7 +71,8 @@ def main(argv: list[str] | None = None) -> None:
     from repro.data import load_stock, make_windows, train_test_split
     from repro.models.rnn import init_rnn
     from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
-                               ServingEngine, WeightPublisher)
+                               ServingEngine, ShardedServingEngine,
+                               Telemetry, WeightPublisher)
     from repro.training.loop import train_rnn_local_sgd
 
     import jax
@@ -80,13 +95,25 @@ def main(argv: list[str] | None = None) -> None:
 
     calib = (train_ds.x[:args.calib_windows]
              if args.calib_windows else None)
-    engine = ServingEngine(registry, BatcherConfig(
-        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-        length_buckets=(CONFIG.window,)))
+    bcfg = BatcherConfig(max_batch=args.max_batch,
+                         max_wait_ms=args.max_wait_ms,
+                         length_buckets=(CONFIG.window,))
+    mesh = args.shards > 1
+    if mesh:
+        engine = ShardedServingEngine(registry, bcfg,
+                                      n_shards=args.shards,
+                                      max_skew=args.max_skew)
+        # publish into the swarm: the primary swap fans out to every
+        # shard's replica within the skew bound (pulls count as swaps
+        # on each shard's telemetry, so no publisher telemetry here)
+        publish_target, pub_telemetry = engine.swarm, None
+    else:
+        engine = ServingEngine(registry, bcfg)
+        publish_target, pub_telemetry = registry, engine.telemetry
     publisher = WeightPublisher(
-        registry, key, calib_windows=calib,
+        publish_target, key, calib_windows=calib,
         min_interval_s=args.min_publish_interval_ms * 1e-3,
-        telemetry=engine.telemetry)
+        telemetry=pub_telemetry)
 
     trainer_err: list[BaseException] = []
 
@@ -102,7 +129,10 @@ def main(argv: list[str] | None = None) -> None:
 
     with engine:
         engine.warmup(key, lengths=(CONFIG.window,))
-        engine.telemetry.reset_clock()
+        if mesh:
+            engine.reset_clock()
+        else:
+            engine.telemetry.reset_clock()
         trainer = threading.Thread(target=train, name="online-trainer")
         t0 = time.time()
         trainer.start()
@@ -116,7 +146,8 @@ def main(argv: list[str] | None = None) -> None:
             if now < next_t:
                 time.sleep(min(next_t - now, 0.05))
                 continue
-            futs = [engine.submit(key, test_ds.x[(served + j) % len(test_ds)])
+            futs = [engine.submit(key, test_ds.x[(served + j) % len(test_ds)],
+                                  client_id=f"client-{(served + j) % 32}")
                     for j in range(burst)]
             for f in futs:
                 _, p = f.result(timeout=60.0)
@@ -130,14 +161,24 @@ def main(argv: list[str] | None = None) -> None:
         # a rate-limited final round must still reach the registry: the
         # served (and --save'd) model is never staler than the trained one
         publisher.flush()
+        if mesh:
+            engine.swarm.propagate(key)     # shards converge to the final
+            # version before the engine stops
         wall = time.time() - t0
-        snap = engine.telemetry.snapshot()
+        snap = engine.snapshot() if mesh else engine.telemetry.snapshot()
     if trainer_err:
         raise trainer_err[0]
 
     print(f"served {served} requests ({alerts} extreme alerts) while "
-          f"training ran, {wall:.1f}s wall")
-    print(engine.telemetry.format(snap))
+          f"training ran, {wall:.1f}s wall"
+          + (f" over {args.shards} shards" if mesh else ""))
+    print(Telemetry.format(snap))
+    if mesh:
+        print(f"mesh: requests by shard {snap['requests_by_shard']} | "
+              f"{snap['pulls']} weight pulls "
+              f"({snap['bytes_pulled']/1e6:.2f} MB) | version vector "
+              f"{engine.version_vector(key)} | max skew bound "
+              f"{args.max_skew}")
     by_version = snap["requests_by_version"]
     print(f"swaps {snap['swaps']} (publisher: {publisher.published} "
           f"published, {publisher.skipped} rate-limited) | final version "

@@ -1,10 +1,19 @@
 """Serving launcher: thin CLI over ``repro.serving`` — hosts the paper
-LSTM and/or zoo archs behind the dynamic micro-batching engine and
-replays a simulated many-client traffic trace against it.
+LSTM and/or zoo archs behind the dynamic micro-batching engine (one
+shard, or a sharded mesh with ``--shards``) and replays a simulated
+many-client traffic trace against it.
 
     # stream stock windows from 64 synthetic clients at the paper model
     PYTHONPATH=src python -m repro.launch.serve --model paper-lstm \
         --clients 64 --requests 512 --max-batch 32 --max-wait-ms 2
+
+    # the same trace over a 4-shard serving mesh
+    PYTHONPATH=src python -m repro.launch.serve --shards 4 --requests 512
+
+    # host a REAL trained checkpoint (from `-m repro.launch.train
+    # --save ckpt.npz`) and score its extreme alerts against the
+    # synthetic labels
+    PYTHONPATH=src python -m repro.launch.serve --checkpoint ckpt.npz
 
     # host a zoo arch (reduced, CPU) serving next-token forecasts
     PYTHONPATH=src python -m repro.launch.serve --model qwen1.5-4b \
@@ -19,27 +28,48 @@ import time
 import numpy as np
 
 
-def _traffic_windows(n_clients: int, window: int, seed: int):
-    """Per-client normalized window streams from the synthetic S&P500
-    generator (distinct ticker per client)."""
+def _traffic_datasets(n_clients: int, window: int, seed: int):
+    """Per-client window datasets from the synthetic S&P500 generator
+    (distinct ticker per client); ``.x`` feeds traffic, ``.v`` is the
+    extreme-event label of each window's next step."""
     from repro.data import load_stock, make_windows
 
     streams = []
     for c in range(n_clients):
-        ohlcv = load_stock(f"CLIENT{c}", n_days=window + 64)
-        ds = make_windows(ohlcv, window=window)
-        streams.append(ds.x)
+        ohlcv = load_stock(f"CLIENT{c}", n_days=window + 64, seed=seed + c)
+        streams.append(make_windows(ohlcv, window=window))
     return streams
+
+
+def _precision_recall(alerts: np.ndarray, labels: np.ndarray):
+    tp = int(np.sum(alerts & (labels != 0)))
+    fp = int(np.sum(alerts & (labels == 0)))
+    fn = int(np.sum(~alerts & (labels != 0)))
+    precision = tp / (tp + fp) if tp + fp else 0.0
+    recall = tp / (tp + fn) if tp + fn else 0.0
+    return precision, recall, tp, fp, fn
 
 
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--model", default="paper-lstm",
                     help="'paper-lstm' or any zoo arch name")
+    ap.add_argument("--checkpoint", default=None, metavar="PATH",
+                    help="host a trained serving checkpoint (the output "
+                    "of `-m repro.launch.train --save`) instead of a "
+                    "freshly initialized model, and report alert "
+                    "precision/recall against the synthetic extreme "
+                    "labels")
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="serve the reduced (CPU smoke) zoo config; "
                     "--no-reduced hosts the full config")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="serve through a sharded mesh with this many "
+                    "EngineShard workers (1 = single engine)")
+    ap.add_argument("--max-skew", type=int, default=1,
+                    help="mesh swap-propagation staleness bound "
+                    "(versions a shard may lag the primary)")
     ap.add_argument("--clients", type=int, default=32)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=32)
@@ -53,58 +83,105 @@ def main(argv: list[str] | None = None) -> None:
 
     from repro.serving import (BatcherConfig, ModelRegistry,
                                RecurrentSessionRunner, ServingEngine,
-                               SessionCache, build_lstm_forecaster,
-                               build_zoo_forecaster)
+                               SessionCache, ShardedServingEngine, Telemetry,
+                               build_lstm_forecaster, build_zoo_forecaster)
 
     registry = ModelRegistry()
-    if args.model == "paper-lstm":
+    if args.checkpoint:
+        fc = registry.load(args.checkpoint, key=args.model)
+        print(f"hosting checkpoint {args.checkpoint} as {args.model!r} "
+              f"(kind={fc.kind}, v{registry.version(args.model)})")
+    elif args.model == "paper-lstm":
         fc = build_lstm_forecaster(seed=args.seed)
-        windows = _traffic_windows(args.clients, fc.window, args.seed)
-        payloads = [windows[i % args.clients][i % len(windows[i % args.clients])]
-                    for i in range(args.requests)]
     else:
-        from repro.data.tokens import synthetic_token_batch
         fc = build_zoo_forecaster(args.model, seed=args.seed,
                                   reduced=args.reduced)
+    if args.model not in registry:
+        registry.register(args.model, fc)
+
+    labels = None
+    if fc.feature_dim:                      # window-stream (LSTM) traffic
+        streams = _traffic_datasets(args.clients, fc.window, args.seed)
+        payloads, labels_list = [], []
+        for i in range(args.requests):
+            ds = streams[i % args.clients]
+            j = i % len(ds)
+            payloads.append(ds.x[j])
+            labels_list.append(int(ds.v[j]))
+        labels = np.asarray(labels_list)
+    else:                                   # token traffic for zoo archs
+        from repro.data.tokens import synthetic_token_batch
         toks = synthetic_token_batch(args.requests, args.prompt_len,
                                      fc.cfg.vocab, seed=args.seed)
         payloads = list(toks)
-    registry.register(args.model, fc)
 
     # bucket exactly the lengths this trace contains: no padding waste
     cfg = BatcherConfig(max_batch=args.max_batch,
                         max_wait_ms=args.max_wait_ms,
                         length_buckets=tuple(sorted(
                             {p.shape[0] for p in payloads})))
-    with ServingEngine(registry, cfg) as engine:
-        engine.warmup(args.model,
-                      lengths=tuple({p.shape[0] for p in payloads}))
-        engine.telemetry.reset_clock()
+    lengths = tuple({p.shape[0] for p in payloads})
+    if args.shards > 1:
+        engine = ShardedServingEngine(registry, cfg, n_shards=args.shards,
+                                      max_skew=args.max_skew)
+    else:
+        engine = ServingEngine(registry, cfg)
+
+    with engine:
+        engine.warmup(args.model, lengths=lengths)
+        if args.shards > 1:
+            engine.reset_clock()
+        else:
+            engine.telemetry.reset_clock()
         t0 = time.time()
-        futures = [engine.submit(args.model, p) for p in payloads]
+        futures = [engine.submit(args.model, p,
+                                 client_id=f"client-{i % args.clients}")
+                   for i, p in enumerate(payloads)]
         results = [f.result(timeout=60.0) for f in futures]
         wall = time.time() - t0
-        snap = engine.telemetry.snapshot()
+        snap = (engine.snapshot() if args.shards > 1
+                else engine.telemetry.snapshot())
 
+    alert_mask = np.asarray([p >= args.alert_threshold
+                             for _, p in results], dtype=bool)
     alerts = [(i, y, p) for i, (y, p) in enumerate(results)
               if p >= args.alert_threshold]
-    print(f"{args.model}: {len(results)} requests in {wall*1e3:.1f} ms")
-    print(engine.telemetry.format(snap))
+    print(f"{args.model}: {len(results)} requests in {wall*1e3:.1f} ms"
+          + (f" over {args.shards} shards" if args.shards > 1 else ""))
+    print(Telemetry.format(snap))
+    if args.shards > 1:
+        print(f"mesh: requests by shard {snap['requests_by_shard']} | "
+              f"{snap['pulls']} weight pulls "
+              f"({snap['bytes_pulled']/1e6:.2f} MB) | version vector "
+              f"{engine.version_vector(args.model)}")
     print(f"extreme alerts (p >= {args.alert_threshold}): {len(alerts)}"
           + (f", first: req {alerts[0][0]} forecast {alerts[0][1]:+.4f} "
                  f"p {alerts[0][2]:.3f}" if alerts else ""))
+    if labels is not None and labels.size:
+        precision, recall, tp, fp, fn = _precision_recall(alert_mask,
+                                                          labels)
+        print(f"alert quality vs synthetic extreme labels: precision "
+              f"{precision:.3f}  recall {recall:.3f}  (tp={tp} fp={fp} "
+              f"fn={fn}, base rate {float(np.mean(labels != 0)):.3f})")
 
-    if args.sessions and args.model == "paper-lstm":
-        runner = RecurrentSessionRunner(
-            fc, SessionCache(max_sessions=args.clients,
-                             telemetry=engine.telemetry))
-        streams = _traffic_windows(min(args.clients, 8), fc.window,
-                                   args.seed + 1)
+    if args.sessions and fc.feature_dim:
+        if args.shards > 1:
+            # fleet budget = clients * shards: each shard's slice can
+            # hold every demo client, so hash collisions onto one shard
+            # never evict a live session mid-stream
+            cache = engine.session_cache(
+                max_sessions=args.clients * args.shards)
+        else:
+            cache = SessionCache(max_sessions=args.clients,
+                                 telemetry=engine.telemetry)
+        runner = RecurrentSessionRunner(fc, cache)
+        streams = _traffic_datasets(min(args.clients, 8), fc.window,
+                                    args.seed + 1)
         t0 = time.time()
         n_steps = 0
         for step in range(fc.window):
-            for c, stream in enumerate(streams):
-                runner.step(f"client-{c}", stream[0][step])
+            for c, ds in enumerate(streams):
+                runner.step(f"client-{c}", ds.x[0][step])
                 n_steps += 1
         wall = time.time() - t0
         print(f"sessions: {n_steps} O(1) steps in {wall*1e3:.1f} ms "

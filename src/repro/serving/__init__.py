@@ -1,43 +1,64 @@
 """Streaming forecast serving: dynamic micro-batching, recurrent session
-cache, multi-model registry, and extreme-event alerting.
+cache, multi-model registry, extreme-event alerting, and a sharded
+serving mesh with fleet-wide weight hot-swap propagation.
 
 Layout (DESIGN: one concern per module):
 
 - ``engine.py``     request queue + dynamic micro-batcher (length-bucketed
                     padding, flush on max-batch or max-wait, jit-cached
                     per-bucket apply so the hot path never recompiles);
+                    ``EngineShard`` is one worker, ``ServingEngine`` the
+                    single-shard special case;
+- ``router.py``     consistent-hash (rendezvous) routing of client ids to
+                    shards + ``ShardedServingEngine``, the mesh of
+                    per-shard ``EngineShard`` workers behind the same
+                    ``submit``/``predict``/``warmup`` API;
+- ``swarm.py``      fleet swap propagation: primary registry + per-shard
+                    replicas, pull-based weight transfer under a bounded
+                    staleness skew (version vector per shard);
 - ``sessions.py``   per-client recurrent carry cache (LRU + TTL + byte
                     accounting) making each streaming step O(1);
+                    ``ShardedSessionCache`` shards it by client id;
 - ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
                     interface over the paper LSTM and every zoo arch,
                     with the EVT tail alert head;
 - ``registry.py``   multi-model hosting keyed by name, monotone model
-                    versions, atomic weight swap, checkpoint I/O;
+                    versions, atomic weight swap, publish subscriptions,
+                    checkpoint I/O;
 - ``hotswap.py``    online-learning bridge: the local-SGD round loop
                     publishes worker-averaged params as new versions
-                    without dropping in-flight requests;
+                    without dropping in-flight requests (swarm-aware:
+                    publishing into a ``ShardSwarm`` fans out fleet-wide);
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
                     cache hit-rate, swap count, staleness at serve time,
-                    per-version request counts.
+                    per-version request counts, cross-shard ``merge``.
 """
 
-from repro.serving.engine import BatcherConfig, ServingEngine
+from repro.serving.engine import BatcherConfig, EngineShard, ServingEngine
 from repro.serving.forecaster import (LSTMForecaster, ZooForecaster,
                                       build_lstm_forecaster,
                                       build_zoo_forecaster)
 from repro.serving.hotswap import WeightPublisher, stop_the_world_swap
 from repro.serving.registry import ModelRegistry, RegistryEntry
-from repro.serving.sessions import RecurrentSessionRunner, SessionCache
+from repro.serving.router import ConsistentRouter, ShardedServingEngine
+from repro.serving.sessions import (RecurrentSessionRunner, SessionCache,
+                                    ShardedSessionCache)
+from repro.serving.swarm import ShardSwarm
 from repro.serving.telemetry import Telemetry
 
 __all__ = [
     "BatcherConfig",
+    "ConsistentRouter",
+    "EngineShard",
     "LSTMForecaster",
     "ModelRegistry",
     "RecurrentSessionRunner",
     "RegistryEntry",
     "ServingEngine",
     "SessionCache",
+    "ShardSwarm",
+    "ShardedServingEngine",
+    "ShardedSessionCache",
     "Telemetry",
     "WeightPublisher",
     "ZooForecaster",

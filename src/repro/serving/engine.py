@@ -7,6 +7,12 @@ requests, or when its oldest request has waited ``max_wait_ms`` — the
 classic latency/throughput knob. Shapes are quantized (lengths to a
 bucket, batch to a power of two) so the set of compiled programs is
 small and fixed: after ``warmup`` the hot path never recompiles.
+
+``EngineShard`` is one queue + worker thread; ``ServingEngine`` is the
+single-shard special case that keeps the original public API. The
+sharded mesh in ``repro.serving.router`` runs several ``EngineShard``
+workers side by side (each over its own registry replica) and routes
+requests between them.
 """
 
 from __future__ import annotations
@@ -36,6 +42,16 @@ class BatcherConfig:
     # shapes are {pow2 batches} x {length buckets}, not arbitrary
     pad_batch: bool = True
 
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.pad_batch and self.max_batch & (self.max_batch - 1):
+            # a non-pow2 max_batch would make bucket_batch emit a non-pow2
+            # clamped shape, breaking the "{pow2 batches} x {length
+            # buckets}" fixed compile-set contract — round it down
+            object.__setattr__(self, "max_batch",
+                               1 << (self.max_batch.bit_length() - 1))
+
     def bucket_len(self, t: int) -> int:
         for b in sorted(self.length_buckets):
             if t <= b:
@@ -45,7 +61,7 @@ class BatcherConfig:
     def bucket_batch(self, n: int) -> int:
         if not self.pad_batch:
             return n
-        return min(_next_pow2(n), max(self.max_batch, 1))
+        return min(_next_pow2(n), self.max_batch)
 
 
 class _Request:
@@ -58,15 +74,18 @@ class _Request:
         self.t_enq = t_enq
 
 
-class ServingEngine:
-    """Multi-model streaming forecast engine over a ``ModelRegistry``
-    (anything with ``get(key) -> forecaster`` works)."""
+class EngineShard:
+    """One serving worker: a request queue drained by a thread that
+    groups, pads and dispatches micro-batches over a ``ModelRegistry``
+    (anything with ``get(key) -> forecaster`` works). ``shard_id``
+    names the worker in thread names and mesh telemetry."""
 
     def __init__(self, registry, config: BatcherConfig | None = None,
-                 telemetry: Telemetry | None = None):
+                 telemetry: Telemetry | None = None, shard_id: int = 0):
         self.registry = registry
         self.config = config or BatcherConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.shard_id = shard_id
         self._queue: queue.Queue = queue.Queue()
         self._pending: dict[tuple[str, int], list[_Request]] = {}
         self._running = False
@@ -75,13 +94,14 @@ class ServingEngine:
         self._thread: threading.Thread | None = None
 
     # -- lifecycle ---------------------------------------------------------
-    def start(self) -> "ServingEngine":
+    def start(self) -> "EngineShard":
         with self._state_lock:
             if self._running:
                 return self
             self._running = True
-        self._thread = threading.Thread(target=self._worker,
-                                        name="serving-engine", daemon=True)
+        self._thread = threading.Thread(
+            target=self._worker, name=f"serving-shard-{self.shard_id}",
+            daemon=True)
         self._thread.start()
         return self
 
@@ -97,16 +117,20 @@ class ServingEngine:
             self._thread.join()
             self._thread = None
 
-    def __enter__(self) -> "ServingEngine":
+    def __enter__(self) -> "EngineShard":
         return self.start()
 
     def __exit__(self, *exc) -> None:
         self.stop()
 
     # -- client API --------------------------------------------------------
-    def submit(self, model_key: str, window) -> Future:
+    def submit(self, model_key: str, window,
+               client_id: str | None = None) -> Future:
         """Enqueue one window ([T, F] features or [T] token ids); returns
-        a Future resolving to (forecast, p_extreme) scalars."""
+        a Future resolving to (forecast, p_extreme) scalars.
+        ``client_id`` is accepted for API parity with the sharded mesh
+        (which routes on it); a single shard serves every client, so it
+        is ignored here."""
         payload = np.asarray(window)
         fc = self.registry.get(model_key)
         want_ndim = 2 if fc.feature_dim else 1
@@ -124,8 +148,10 @@ class ServingEngine:
             self._queue.put((model_key, req))
         return req.future
 
-    def predict(self, model_key: str, window, timeout: float | None = 30.0):
-        return self.submit(model_key, window).result(timeout=timeout)
+    def predict(self, model_key: str, window, timeout: float | None = 30.0,
+                client_id: str | None = None):
+        return self.submit(model_key, window,
+                           client_id=client_id).result(timeout=timeout)
 
     def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
                ) -> int:
@@ -133,9 +159,9 @@ class ServingEngine:
         can hit, off the serving path. Returns #programs warmed."""
         fc = self.registry.get(model_key)
         lens = lengths if lengths is not None else (fc.window,)
-        max_b = max(self.config.max_batch, 1)
-        # exactly the shapes bucket_batch can emit: powers of two below
-        # max_batch, plus max_batch itself (which may not be a power of two)
+        max_b = self.config.max_batch
+        # exactly the shapes bucket_batch can emit: the powers of two up
+        # to max_batch (itself a power of two after __post_init__)
         if self.config.pad_batch:
             batches = sorted({min(1 << i, max_b)
                               for i in range(max_b.bit_length() + 1)})
@@ -199,9 +225,10 @@ class ServingEngine:
         published = getattr(fc, "published_at", None)
         staleness = (now - published) if published is not None else None
         self.telemetry.record_batch(len(reqs), bucket_b)
+        self.telemetry.record_requests([now - r.t_enq for r in reqs],
+                                       version=version,
+                                       staleness_s=staleness)
         for i, r in enumerate(reqs):
-            self.telemetry.record_request(now - r.t_enq, version=version,
-                                          staleness_s=staleness)
             # attribution before set_result: a client that wakes on the
             # result always sees which model version produced it
             r.future.model_version = version
@@ -247,3 +274,10 @@ class ServingEngine:
                 continue
             key = (model_key, cfg.bucket_len(req.length))
             self._pending.setdefault(key, []).append(req)
+
+
+class ServingEngine(EngineShard):
+    """Single-shard serving engine — the original public API
+    (``submit`` / ``predict`` / ``warmup``), now a thin special case of
+    ``EngineShard``. The sharded mesh (``repro.serving.router``) runs
+    the same code path once per shard."""

@@ -36,12 +36,29 @@ from repro.models.rnn import (RNNConfig, init_rnn, init_rnn_carry,
 
 PyTree = Any
 
-# One compiled (padded-apply, step) pair per RNNConfig, shared by every
-# forecaster instance with that config. This is what makes weight
-# hot-swapping cheap: a freshly published version reuses the traced
-# programs of the version it replaces (params are traced arguments, so
-# only shapes key the jit cache), and the swap itself never compiles.
-_RNN_COMPILED: dict[RNNConfig, tuple[Any, Any]] = {}
+# One compiled function set per RNNConfig, shared by every forecaster
+# instance with that config. This is what makes weight hot-swapping
+# cheap: a freshly published version reuses the traced programs of the
+# version it replaces (params — and the EVT tail calibration — are
+# traced arguments, so only shapes key the jit cache), and the swap
+# itself never compiles. The predict/step variants fuse the GEV alert
+# head into the same program as the model apply: one dispatch per
+# micro-batch flush, no eager tail math on the serving hot path (which
+# is what lets concurrent mesh shards overlap their GIL-free compute).
+_RNN_COMPILED: dict[RNNConfig, dict[str, Any]] = {}
+
+
+def _fused_alert(score, head, xi, scale, active, gamma):
+    """Jit-side twin of ``_alert_probability``. ``active`` is a TRACED
+    flag (uncalibrated forecasters pass False with dummy xi/scale): one
+    compiled program serves both states, so a calibration flip — e.g.
+    the first ``WeightPublisher`` publish re-calibrating an uncalibrated
+    v1 — never compiles on the serving hot path."""
+    z = (score - xi) / jnp.maximum(scale, 1e-8)
+    p = jnp.where(active, gev_cdf(z, gamma), jnp.zeros_like(score))
+    if head is not None:
+        p = 1.0 - (1.0 - head) * (1.0 - p)
+    return jnp.clip(p, 0.0, 1.0)
 
 
 def _compiled_rnn(cfg: RNNConfig):
@@ -49,8 +66,24 @@ def _compiled_rnn(cfg: RNNConfig):
     if fns is None:
         # benign race under threads: worst case two identical jit wrappers
         # are built and one wins the dict slot
-        fns = (jax.jit(partial(rnn_apply_padded, cfg=cfg)),
-               jax.jit(partial(rnn_step, cfg=cfg)))
+
+        def predict(params, x, lens, xi, scale, active, gamma):
+            y, u = rnn_apply_padded(params, x, lens, cfg=cfg)
+            return y, _fused_alert(jnp.abs(y), u, xi, scale, active, gamma)
+
+        def step(params, x_t, carry, xi, scale, active, gamma):
+            y, u, carry = rnn_step(params, x_t, carry, cfg=cfg)
+            return y, _fused_alert(jnp.abs(y), u, xi, scale, active,
+                                   gamma), carry
+
+        # gamma is static: gev_log_cdf branches on it in Python, and it
+        # is a per-deployment constant (one compile per distinct value)
+        fns = {
+            "apply": jax.jit(partial(rnn_apply_padded, cfg=cfg)),
+            "step": jax.jit(partial(rnn_step, cfg=cfg)),
+            "predict": jax.jit(predict, static_argnames=("gamma",)),
+            "fused_step": jax.jit(step, static_argnames=("gamma",)),
+        }
         _RNN_COMPILED[cfg] = fns
     return fns
 
@@ -93,7 +126,8 @@ class LSTMForecaster:
     kind: str = dataclasses.field(default="lstm", init=False)
 
     def __post_init__(self):
-        self._apply, self._step = _compiled_rnn(self.cfg)
+        self._fns = _compiled_rnn(self.cfg)
+        self._apply, self._step = self._fns["apply"], self._fns["step"]
 
     # -- batched serving ---------------------------------------------------
     @property
@@ -106,15 +140,24 @@ class LSTMForecaster:
 
     def predict(self, windows, lengths=None):
         """windows [B, T, F] (right-padded), lengths [B] true lengths.
-        Returns (forecast [B], p_extreme [B]) as float32 numpy arrays."""
+        Returns (forecast [B], p_extreme [B]) as float32 numpy arrays.
+        One fused jit dispatch: model apply + GEV alert head."""
         windows = jnp.asarray(windows, jnp.float32)
         if lengths is None:
             lengths = jnp.full((windows.shape[0],), windows.shape[1],
                                jnp.int32)
-        y, u = self._apply(self.params, windows, jnp.asarray(lengths,
-                                                             jnp.int32))
-        p = _alert_probability(jnp.abs(y), self.tail, self.gamma, head=u)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        y, p = self._fns["predict"](self.params, windows, lengths,
+                                    *self._tail_args(),
+                                    gamma=float(self.gamma))
         return np.asarray(y), np.asarray(p)
+
+    def _tail_args(self):
+        """(xi, scale, active) for the fused alert: dummies + inactive
+        when uncalibrated — same program either way."""
+        if self.tail is None:
+            return 0.0, 1.0, False
+        return float(self.tail["xi"]), float(self.tail["scale"]), True
 
     def predict_detail(self, windows, lengths=None) -> dict:
         """Rich output: forecast, p_extreme, the eq. 1 indicator, and the
@@ -141,10 +184,12 @@ class LSTMForecaster:
 
     def step(self, x_t, carry):
         """One O(1) streaming step: x_t [B, F]. Returns
-        (forecast [B], p_extreme [B], new_carry)."""
-        y, u, carry = self._step(self.params, jnp.asarray(x_t, jnp.float32),
-                                 carry)
-        p = _alert_probability(jnp.abs(y), self.tail, self.gamma, head=u)
+        (forecast [B], p_extreme [B], new_carry) — one fused dispatch,
+        like ``predict``."""
+        x_t = jnp.asarray(x_t, jnp.float32)
+        y, p, carry = self._fns["fused_step"](self.params, x_t, carry,
+                                              *self._tail_args(),
+                                              gamma=float(self.gamma))
         return np.asarray(y), np.asarray(p), carry
 
     def replay(self, window, carry=None):
@@ -239,6 +284,21 @@ class ZooForecaster:
         _, surprisal = self._fwd(self.params, tokens, lengths)
         self.tail = fit_tail(np.asarray(surprisal), q=quantile)
         return self
+
+    def with_params(self, params: PyTree) -> "ZooForecaster":
+        """Unpublished successor serving ``params`` with this model's
+        calibration carried over — the hot-swap constructor. A shallow
+        copy (NOT dataclasses.replace: ``__post_init__`` would rebuild
+        and re-jit the forward) so the compiled ``_fwd`` is shared;
+        params are traced arguments, so serving the clone never
+        retraces."""
+        import copy
+
+        clone = copy.copy(self)
+        clone.params = params
+        clone.version = 0
+        clone.published_at = None
+        return clone
 
 
 def build_lstm_forecaster(seed: int = 0, cfg: RNNConfig | None = None,

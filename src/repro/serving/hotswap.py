@@ -12,6 +12,13 @@ draining its queue throughout: an in-flight micro-batch completes on the
 old weights, the next flush resolves the new reference — zero requests
 dropped, which ``benchmarks/bench_hotswap.py`` quantifies against the
 ``stop_the_world_swap`` baseline below.
+
+Fleet publishing: ``registry`` may equally be a ``ShardSwarm`` (same
+``register``/``swap``/``get``/``version`` surface) — each publish then
+lands on the swarm's primary and propagates to every serving shard's
+replica registry within the configured staleness skew, so one publisher
+updates the whole mesh. ``benchmarks/bench_serving_mesh.py`` measures
+the swap storm against the sharded engine.
 """
 
 from __future__ import annotations

@@ -54,7 +54,36 @@ class ModelRegistry:
         self._lock = threading.Lock()
         self._clock = clock
         self._entries: dict[str, RegistryEntry] = {}
+        self._subscribers: list = []
         self.swap_count = 0
+
+    # -- publish notifications ---------------------------------------------
+    def subscribe(self, callback) -> None:
+        """Register ``callback(key, version)`` to run after every
+        publication (register/swap/load). Callbacks fire OUTSIDE the
+        registry lock — a subscriber may freely call back into the
+        registry — and on the publishing thread. The swap-propagation
+        swarm (``repro.serving.swarm``) uses this to track publishes
+        made directly against a primary registry."""
+        with self._lock:
+            self._subscribers.append(callback)
+
+    def unsubscribe(self, callback) -> bool:
+        """Detach a subscriber; returns whether it was subscribed. A
+        stopped serving mesh detaches its swarm so publishes stop
+        fanning out into dead replicas."""
+        with self._lock:
+            try:
+                self._subscribers.remove(callback)
+                return True
+            except ValueError:
+                return False
+
+    def _notify(self, key: str, version: int) -> None:
+        with self._lock:
+            subscribers = list(self._subscribers)
+        for fn in subscribers:
+            fn(key, version)
 
     # -- publication -------------------------------------------------------
     def _publish_locked(self, key: str, forecaster,
@@ -80,7 +109,8 @@ class ModelRegistry:
         """Host ``forecaster`` under ``key`` (bumping the version if the
         key already exists). Returns the forecaster."""
         with self._lock:
-            self._publish_locked(key, forecaster, version)
+            v = self._publish_locked(key, forecaster, version)
+        self._notify(key, v)
         return forecaster
 
     def swap(self, key: str, forecaster, version: int | None = None) -> int:
@@ -93,6 +123,7 @@ class ModelRegistry:
                                f"hosted: {sorted(self._entries)}")
             v = self._publish_locked(key, forecaster, version)
             self.swap_count += 1
+        self._notify(key, v)
         return v
 
     def unregister(self, key: str) -> None:
@@ -200,5 +231,6 @@ class ModelRegistry:
                 if cur is not None and saved is not None \
                         and saved <= cur.version:
                     saved = None     # key moved on: fall back to a bump
-                self._publish_locked(key, fc, saved)
+                v = self._publish_locked(key, fc, saved)
+            self._notify(key, v)
         return fc

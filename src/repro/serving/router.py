@@ -1,0 +1,201 @@
+"""Request routing for the sharded serving mesh.
+
+``ConsistentRouter`` maps client ids to shards by rendezvous (highest-
+random-weight) hashing: every ``(shard, key)`` pair gets a stable
+64-bit score and the key lives on the shard with the highest score.
+That gives the three properties the mesh needs (asserted as hypothesis
+properties in ``tests/test_serving_properties.py``): stability (same
+client -> same shard, across router instances and processes — the hash
+is keyed on bytes, not Python's seeded ``hash``), balance (scores are
+uniform, so shards split clients evenly in expectation), and minimal
+disruption (removing a shard moves only that shard's clients; adding
+one moves only the clients it wins).
+
+``ShardedServingEngine`` is the mesh: one ``EngineShard`` worker per
+shard, each serving from its own ``ShardSwarm`` replica registry, with
+``submit``/``predict``/``warmup`` keeping the single-engine API. A
+request with a ``client_id`` is routed by the consistent hash — the
+same shard every time, so that shard's session cache owns the client's
+carry; anonymous requests spread over shards round-robin within their
+``(model, length-bucket)`` group so every compiled bucket stays hot on
+every shard it lands on.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+
+import numpy as np
+
+from repro.serving.engine import BatcherConfig, EngineShard
+from repro.serving.swarm import ShardSwarm
+from repro.serving.telemetry import Telemetry
+
+
+def _score(shard_id: int, key: str) -> int:
+    """Stable 64-bit rendezvous score for (shard, key)."""
+    digest = hashlib.blake2b(f"{shard_id}|{key}".encode(),
+                             digest_size=8).digest()
+    return int.from_bytes(digest, "big")
+
+
+class ConsistentRouter:
+    """Rendezvous-hash assignment of string keys to shard ids."""
+
+    def __init__(self, shard_ids):
+        self._ids = sorted(set(int(s) for s in shard_ids))
+        if not self._ids:
+            raise ValueError("router needs at least one shard")
+
+    @property
+    def shard_ids(self) -> list[int]:
+        return list(self._ids)
+
+    def shard_for(self, key: str) -> int:
+        return max(self._ids, key=lambda sid: _score(sid, str(key)))
+
+    def add_shard(self, shard_id: int) -> None:
+        if shard_id not in self._ids:
+            self._ids = sorted(self._ids + [int(shard_id)])
+
+    def remove_shard(self, shard_id: int) -> None:
+        if len(self._ids) == 1:
+            raise ValueError("cannot remove the last shard")
+        self._ids = [s for s in self._ids if s != shard_id]
+
+
+class ShardedServingEngine:
+    """Router + per-shard ``EngineShard`` workers + swap-propagation
+    swarm: the multi-shard serving mesh behind the single-engine API.
+
+    ``registry`` may be a plain ``ModelRegistry`` (it becomes the
+    swarm's primary; replicas are seeded from it) or an existing
+    ``ShardSwarm`` (``n_shards``/``max_skew``/``transfer`` are then
+    taken from it). Weight publishes against the primary — e.g. a
+    ``WeightPublisher`` handed this engine's ``.swarm`` (or the plain
+    registry itself) — propagate to every shard within the swarm's
+    staleness bound while all shards keep draining their queues.
+    """
+
+    def __init__(self, registry, config: BatcherConfig | None = None,
+                 n_shards: int = 2, max_skew: int = 1,
+                 transfer: str = "auto",
+                 propagate_interval_s: float = 0.02):
+        if isinstance(registry, ShardSwarm):
+            self.swarm = registry
+        else:
+            self.swarm = ShardSwarm(n_shards, primary=registry,
+                                    max_skew=max_skew, transfer=transfer)
+        self.n_shards = self.swarm.n_shards
+        self.config = config or BatcherConfig()
+        self.shards = [EngineShard(self.swarm.registry_for(i), self.config,
+                                   Telemetry(), shard_id=i)
+                       for i in range(self.n_shards)]
+        # pulls into shard i count as swaps on shard i's telemetry
+        self.swarm.telemetries = [s.telemetry for s in self.shards]
+        self.router = ConsistentRouter(range(self.n_shards))
+        # one round-robin counter per (model, length-bucket) group, so a
+        # burst within one group cycles every shard (dict setdefault and
+        # itertools.count are both atomic under the GIL)
+        self._anon_counters: dict[str, itertools.count] = {}
+        self._propagate_interval_s = propagate_interval_s
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "ShardedServingEngine":
+        # attach first: publishes that happened while stopped reach the
+        # replicas before any shard serves a request
+        self.swarm.attach()
+        for shard in self.shards:
+            shard.start()
+        self.swarm.start_background(self._propagate_interval_s)
+        return self
+
+    def stop(self) -> None:
+        for shard in self.shards:
+            shard.stop()
+        self.swarm.stop_background()
+        # a stopped mesh must not keep pulling weights into its replicas
+        self.swarm.detach()
+
+    def __enter__(self) -> "ShardedServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API --------------------------------------------------------
+    def shard_for(self, client_id: str) -> int:
+        """The session shard that owns ``client_id`` (stable)."""
+        return self.router.shard_for(str(client_id))
+
+    def submit(self, model_key: str, window, client_id: str | None = None):
+        """Enqueue one window on the owning shard; returns a Future
+        resolving to (forecast, p_extreme). With a ``client_id`` the
+        request is session-affine (consistent-hashed); without one it
+        spreads round-robin within its (model, length-bucket) group."""
+        payload = np.asarray(window)
+        if client_id is not None:
+            sid = self.router.shard_for(str(client_id))
+        else:
+            group = f"{model_key}|{self.config.bucket_len(payload.shape[0])}"
+            counter = self._anon_counters.setdefault(group,
+                                                     itertools.count())
+            ids = self.router.shard_ids
+            sid = ids[next(counter) % len(ids)]
+        return self._shard(sid).submit(model_key, payload)
+
+    def _shard(self, sid: int) -> EngineShard:
+        if not 0 <= sid < self.n_shards:
+            raise KeyError(
+                f"router returned shard {sid} but this mesh has "
+                f"{self.n_shards} workers — the worker set is pinned at "
+                f"construction; live shard join/leave is a ROADMAP "
+                f"follow-on")
+        return self.shards[sid]
+
+    def predict(self, model_key: str, window,
+                timeout: float | None = 30.0,
+                client_id: str | None = None):
+        return self.submit(model_key, window,
+                           client_id=client_id).result(timeout=timeout)
+
+    def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
+               ) -> int:
+        """Warm every shard's compile set. Compiled programs are shared
+        process-wide per model config, so the first shard pays the
+        compiles and the rest are cache hits; returns the number of
+        programs the hot path can hit (per shard)."""
+        self.swarm.propagate(model_key)   # every replica hosts the key
+        return max(shard.warmup(model_key, lengths=lengths)
+                   for shard in self.shards)
+
+    # -- observation -------------------------------------------------------
+    @property
+    def shard_telemetries(self) -> list[Telemetry]:
+        return [shard.telemetry for shard in self.shards]
+
+    def snapshot(self) -> dict:
+        """Fleet-wide telemetry: per-shard counters merged by
+        ``Telemetry.merge`` plus the swarm's propagation counters."""
+        snap = Telemetry.merge(self.shard_telemetries)
+        snap["pulls"] = self.swarm.pulls
+        snap["bytes_pulled"] = self.swarm.bytes_pulled
+        return snap
+
+    def reset_clock(self) -> None:
+        for tel in self.shard_telemetries:
+            tel.reset_clock()
+
+    def version_vector(self, model_key: str) -> dict:
+        return self.swarm.version_vector(model_key)
+
+    # -- sessions ----------------------------------------------------------
+    def session_cache(self, **kwargs):
+        """A ``ShardedSessionCache`` whose client -> shard map is THIS
+        mesh's router, so a client's carry lives on the shard its
+        requests are routed to."""
+        from repro.serving.sessions import ShardedSessionCache
+
+        return ShardedSessionCache(n_shards=self.n_shards,
+                                   router=self.router, **kwargs)

@@ -10,6 +10,13 @@ provided the client supplies its history on a miss — eviction never
 changes the numbers a client sees, only the latency. Misses without
 history start a fresh session from zero state (or raise, with
 ``on_miss="error"``).
+
+``ShardedSessionCache`` splits the fleet budget over per-shard
+``SessionCache`` instances keyed by a consistent hash of the client id
+(the same rendezvous hash the request router uses, so a client's carry
+lives on the shard its requests land on). LRU/TTL state and locks are
+shard-local: session traffic on one shard never contends with another,
+and a shard leaving takes exactly its own clients' carries with it.
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import time
 from collections import OrderedDict
 from typing import Any
 
+from repro.serving.router import ConsistentRouter
 from repro.serving.telemetry import Telemetry
 
 
@@ -143,6 +151,113 @@ class SessionCache:
                 "hit_rate": self.hits / lookups if lookups else 0.0,
                 "evictions": self.evictions,
             }
+
+
+class ShardedSessionCache:
+    """Fleet session cache: the ``SessionCache`` API over per-shard
+    caches, routed by a consistent hash of the client id.
+
+    ``max_sessions`` / ``max_bytes`` are FLEET budgets, split exactly
+    over shards (remainders go to the first shards, so the fleet total
+    never exceeds the budget); eviction is shard-local LRU (a hot shard
+    evicts its own LRU client even while another shard has room — the
+    price of lock-free-across-shards operation). Pass the mesh's
+    ``router`` so session shards coincide with serving shards, or omit
+    it for a standalone sharded cache."""
+
+    def __init__(self, n_shards: int = 2, max_sessions: int = 4096,
+                 max_bytes: int | None = None, ttl_s: float | None = None,
+                 telemetry: Telemetry | None = None, clock=time.monotonic,
+                 router=None):
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        self.n_shards = n_shards
+        self.router = router if router is not None \
+            else ConsistentRouter(range(n_shards))
+        bad = [s for s in self.router.shard_ids
+               if not 0 <= s < n_shards]
+        if bad:
+            raise ValueError(
+                f"router shard ids {bad} are outside this cache's "
+                f"0..{n_shards - 1} shard range")
+        self.telemetry = telemetry
+        if max_sessions < n_shards:
+            raise ValueError(
+                f"max_sessions={max_sessions} must be >= n_shards="
+                f"{n_shards} (every shard needs at least one slot)")
+
+        def split(total: int, i: int) -> int:
+            return total // n_shards + (1 if i < total % n_shards else 0)
+
+        self.shards = [SessionCache(
+            max_sessions=split(max_sessions, i),
+            max_bytes=None if max_bytes is None else split(max_bytes, i),
+            ttl_s=ttl_s, telemetry=telemetry, clock=clock)
+            for i in range(n_shards)]
+
+    def shard_for(self, client_id: str) -> int:
+        return self.router.shard_for(str(client_id))
+
+    def _shard(self, client_id: str) -> SessionCache:
+        sid = self.shard_for(client_id)
+        if not 0 <= sid < self.n_shards:      # router mutated after init
+            raise KeyError(
+                f"router returned shard {sid} for {client_id!r} but this "
+                f"cache has {self.n_shards} shards — the shard set is "
+                f"pinned at construction")
+        return self.shards[sid]
+
+    # -- SessionCache API, routed ------------------------------------------
+    def get(self, client_id: str):
+        return self._shard(client_id).get(client_id)
+
+    def get_entry(self, client_id: str):
+        return self._shard(client_id).get_entry(client_id)
+
+    def put(self, client_id: str, carry, nbytes: int,
+            version: int = 0) -> None:
+        self._shard(client_id).put(client_id, carry, nbytes,
+                                   version=version)
+
+    def drop(self, client_id: str) -> bool:
+        return self._shard(client_id).drop(client_id)
+
+    def __len__(self) -> int:
+        return sum(len(s) for s in self.shards)
+
+    def __contains__(self, client_id: str) -> bool:
+        return client_id in self._shard(client_id)
+
+    @property
+    def hits(self) -> int:
+        return sum(s.hits for s in self.shards)
+
+    @property
+    def misses(self) -> int:
+        return sum(s.misses for s in self.shards)
+
+    @property
+    def evictions(self) -> int:
+        return sum(s.evictions for s in self.shards)
+
+    @property
+    def nbytes_in_use(self) -> int:
+        return sum(s.nbytes_in_use for s in self.shards)
+
+    def stats(self) -> dict:
+        """Fleet aggregate plus per-shard session/byte occupancy."""
+        shard_stats = [s.stats() for s in self.shards]
+        lookups = self.hits + self.misses
+        return {
+            "sessions": sum(st["sessions"] for st in shard_stats),
+            "nbytes_in_use": sum(st["nbytes_in_use"] for st in shard_stats),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "evictions": self.evictions,
+            "shards": len(self.shards),
+            "sessions_by_shard": [st["sessions"] for st in shard_stats],
+        }
 
 
 class RecurrentSessionRunner:

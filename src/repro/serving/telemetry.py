@@ -9,6 +9,14 @@ import threading
 import time
 
 
+def _percentile(data: list[float], p: float) -> float:
+    if not data:
+        return 0.0
+    data = sorted(data)
+    k = min(len(data) - 1, max(0, int(round(p / 100.0 * (len(data) - 1)))))
+    return data[k]
+
+
 class _Reservoir:
     """Fixed-size ring of the most recent samples (enough for stable
     p50/p95/p99 at serving rates without unbounded memory)."""
@@ -26,11 +34,7 @@ class _Reservoir:
             self._pos = (self._pos + 1) % self.capacity
 
     def percentile(self, p: float) -> float:
-        if not self._buf:
-            return 0.0
-        data = sorted(self._buf)
-        k = min(len(data) - 1, max(0, int(round(p / 100.0 * (len(data) - 1)))))
-        return data[k]
+        return _percentile(self._buf, p)
 
 
 class Telemetry:
@@ -65,6 +69,23 @@ class Telemetry:
                     self.requests_by_version.get(version, 0) + 1
             if staleness_s is not None:
                 self._staleness.add(staleness_s)
+
+    def record_requests(self, latencies_s, version: int | None = None,
+                        staleness_s: float | None = None) -> None:
+        """Record one flush's worth of requests under a single lock
+        acquisition (the micro-batcher calls this once per flush instead
+        of ``record_request`` per row — less lock churn on the hot
+        path). All rows share the flush's version/staleness."""
+        with self._lock:
+            for lat in latencies_s:
+                self.requests += 1
+                self._latency.add(lat)
+                if staleness_s is not None:
+                    self._staleness.add(staleness_s)
+            if version is not None and latencies_s:
+                self.requests_by_version[version] = \
+                    self.requests_by_version.get(version, 0) \
+                    + len(latencies_s)
 
     def record_swap(self, n: int = 1) -> None:
         with self._lock:
@@ -138,6 +159,60 @@ class Telemetry:
             self._latency = _Reservoir()
             self._staleness = _Reservoir()
             self._batch_sizes = _Reservoir()
+
+    @staticmethod
+    def merge(telemetries) -> dict:
+        """Cross-shard fleet snapshot: counters summed, latency /
+        staleness / batch reservoirs pooled for fleet percentiles, and
+        per-version request counts merged — so per-version attribution
+        stays meaningful mesh-wide. Throughput is total requests over
+        the longest shard window (shards serve concurrently).
+
+        Returns the same keys as ``snapshot`` (``Telemetry.format``
+        accepts the result) plus ``"shards"`` and per-shard request
+        counts under ``"requests_by_shard"``."""
+        telemetries = list(telemetries)
+        lat: list[float] = []
+        stale: list[float] = []
+        totals = {"requests": 0, "batches": 0, "real_slots": 0,
+                  "padded_slots": 0, "cache_hits": 0, "cache_misses": 0,
+                  "cache_evictions": 0, "swaps": 0, "reprimes": 0}
+        by_version: dict[int, int] = {}
+        by_shard: list[int] = []
+        elapsed = 1e-9
+        for tel in telemetries:
+            with tel._lock:
+                elapsed = max(elapsed, tel._clock() - tel._t0)
+                for k in totals:
+                    totals[k] += getattr(tel, k)
+                by_shard.append(tel.requests)
+                for v, n in tel.requests_by_version.items():
+                    by_version[v] = by_version.get(v, 0) + n
+                lat.extend(tel._latency._buf)
+                stale.extend(tel._staleness._buf)
+        lookups = totals["cache_hits"] + totals["cache_misses"]
+        return {
+            "shards": len(telemetries),
+            "requests": totals["requests"],
+            "requests_by_shard": by_shard,
+            "batches": totals["batches"],
+            "throughput_rps": totals["requests"] / elapsed,
+            "p50_ms": _percentile(lat, 50) * 1e3,
+            "p95_ms": _percentile(lat, 95) * 1e3,
+            "p99_ms": _percentile(lat, 99) * 1e3,
+            "mean_batch": (totals["real_slots"] / totals["batches"]
+                           if totals["batches"] else 0.0),
+            "batch_occupancy": (totals["real_slots"] / totals["padded_slots"]
+                                if totals["padded_slots"] else 0.0),
+            "cache_hit_rate": (totals["cache_hits"] / lookups
+                               if lookups else 0.0),
+            "cache_evictions": totals["cache_evictions"],
+            "swaps": totals["swaps"],
+            "reprimes": totals["reprimes"],
+            "staleness_p50_s": _percentile(stale, 50),
+            "staleness_p95_s": _percentile(stale, 95),
+            "requests_by_version": by_version,
+        }
 
     @staticmethod
     def format(snap: dict) -> str:

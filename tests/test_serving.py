@@ -130,6 +130,32 @@ def test_batch_bucketing_quantizes_shapes():
     assert cfg.bucket_batch(32) == 32
 
 
+def test_non_pow2_max_batch_rounds_down(registry):
+    """Regression: max_batch=12 used to clamp bucket_batch to 12 — a
+    shape outside the '{pow2 batches} x {length buckets}' compile set.
+    The config now rounds down at construction, so every emitted batch
+    shape is one the warmup compiled."""
+    cfg = BatcherConfig(max_batch=12)
+    assert cfg.max_batch == 8
+    assert {cfg.bucket_batch(n) for n in range(1, cfg.max_batch + 1)} \
+        == {1, 2, 4, 8}
+    with pytest.raises(ValueError):
+        BatcherConfig(max_batch=0)
+    # un-padded batching is untouched by the rounding
+    assert BatcherConfig(max_batch=12, pad_batch=False).max_batch == 12
+    # end to end: a full group at the rounded max_batch flushes as one
+    # pow2 batch the warmup covered (no mid-traffic compile, exact batch)
+    eng_cfg = BatcherConfig(max_batch=6, max_wait_ms=60_000.0,
+                            length_buckets=(20,))
+    assert eng_cfg.max_batch == 4
+    with ServingEngine(registry, eng_cfg) as eng:
+        eng.warmup("m", lengths=(20,))
+        futs = [eng.submit("m", w) for w in _windows(4)]
+        assert len([f.result(timeout=10.0) for f in futs]) == 4
+    snap = eng.telemetry.snapshot()
+    assert snap["mean_batch"] == 4.0 and snap["batch_occupancy"] == 1.0
+
+
 # -- session cache ---------------------------------------------------------
 
 def test_session_cache_lru_eviction():

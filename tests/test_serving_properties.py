@@ -1,12 +1,16 @@
 """Property tests for the serving subsystem: session-cache invariants
 under arbitrary operation sequences, step-vs-replay carry equivalence
-across arbitrary evict/re-prime points, and micro-batcher bucketing laws
-(monotone, power-of-two, >= input).
+across arbitrary evict/re-prime points, micro-batcher bucketing laws
+(monotone, power-of-two, >= input), consistent-hash routing laws
+(stable, balanced, minimally disruptive on shard join/leave), and the
+swap-propagation staleness skew bound.
 
 Example counts come from the hypothesis profile (``--hypothesis-profile=ci``
 bounds them for the tier-1 timing gate); the exhaustive variants carry the
 ``slow`` marker.
 """
+
+from types import SimpleNamespace
 
 import jax
 import numpy as np
@@ -16,8 +20,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.rnn import RNNConfig, init_rnn
-from repro.serving import (BatcherConfig, LSTMForecaster,
-                           RecurrentSessionRunner, SessionCache)
+from repro.serving import (BatcherConfig, ConsistentRouter, LSTMForecaster,
+                           RecurrentSessionRunner, SessionCache, ShardSwarm)
 
 CFG = RNNConfig(input_dim=3, hidden=8, num_layers=1, fc_dims=(4,),
                 window=8, evl_head=True)
@@ -63,15 +67,105 @@ def test_bucket_len_monotone_geq_with_buckets(buckets, t1, t2):
 @settings(deadline=None)
 def test_bucket_batch_monotone_pow2_geq(max_batch, n1, n2):
     cfg = BatcherConfig(max_batch=max_batch)
-    n1, n2 = min(n1, max_batch), min(n2, max_batch)  # engine flushes
-    # groups of at most max_batch requests
+    # a non-pow2 max_batch is rounded DOWN at construction, so every
+    # emitted batch shape is a power of two — the fixed compile-set
+    # contract ("{pow2 batches} x {length buckets}") holds unconditionally
+    assert _is_pow2(cfg.max_batch) and cfg.max_batch <= max_batch
+    n1, n2 = min(n1, cfg.max_batch), min(n2, cfg.max_batch)  # engine
+    # flushes groups of at most (the effective) max_batch requests
     b1, b2 = cfg.bucket_batch(n1), cfg.bucket_batch(n2)
-    assert n1 <= b1 <= max_batch
-    assert _is_pow2(b1) or b1 == max_batch
+    assert n1 <= b1 <= cfg.max_batch
+    assert _is_pow2(b1)
     if n1 <= n2:
         assert b1 <= b2
     assert BatcherConfig(max_batch=max_batch,
                          pad_batch=False).bucket_batch(n1) == n1
+
+
+# -- consistent-hash routing laws ------------------------------------------
+
+_CLIENT_IDS = st.lists(st.text(min_size=1, max_size=12), min_size=1,
+                       max_size=40, unique=True)
+
+
+@given(_CLIENT_IDS, st.integers(1, 8))
+@settings(deadline=None)
+def test_routing_stable_across_router_instances(client_ids, n_shards):
+    """Same client -> same shard, on this router and on any freshly
+    built router with the same shard set (the hash is keyed on bytes,
+    not Python's per-process seeded hash)."""
+    r1 = ConsistentRouter(range(n_shards))
+    r2 = ConsistentRouter(range(n_shards))
+    for cid in client_ids:
+        sid = r1.shard_for(cid)
+        assert 0 <= sid < n_shards
+        assert r1.shard_for(cid) == sid          # idempotent
+        assert r2.shard_for(cid) == sid          # instance-independent
+
+
+@given(st.integers(2, 8))
+@settings(deadline=None)
+def test_routing_balanced_within_tolerance(n_shards):
+    """Uniform scores split a large client population evenly-ish: every
+    shard within ±50% of the fair share (loose — rendezvous hashing is
+    binomially concentrated, ~±4 sigma here)."""
+    router = ConsistentRouter(range(n_shards))
+    n_clients = 256 * n_shards
+    counts = [0] * n_shards
+    for i in range(n_clients):
+        counts[router.shard_for(f"client-{i}")] += 1
+    fair = n_clients / n_shards
+    assert min(counts) >= 0.5 * fair, counts
+    assert max(counts) <= 1.5 * fair, counts
+
+
+@given(_CLIENT_IDS, st.integers(2, 6), st.data())
+@settings(deadline=None)
+def test_routing_minimal_disruption_on_leave(client_ids, n_shards, data):
+    """Removing a shard moves ONLY the clients that lived on it."""
+    router = ConsistentRouter(range(n_shards))
+    before = {cid: router.shard_for(cid) for cid in client_ids}
+    victim = data.draw(st.integers(0, n_shards - 1))
+    router.remove_shard(victim)
+    for cid, old in before.items():
+        new = router.shard_for(cid)
+        if old != victim:
+            assert new == old                    # survivors keep clients
+        else:
+            assert new != victim                 # victims are re-homed
+
+
+@given(_CLIENT_IDS, st.integers(1, 6))
+@settings(deadline=None)
+def test_routing_minimal_disruption_on_join(client_ids, n_shards):
+    """Adding a shard only moves clients TO the new shard — no client
+    is shuffled between two surviving shards."""
+    router = ConsistentRouter(range(n_shards))
+    before = {cid: router.shard_for(cid) for cid in client_ids}
+    router.add_shard(n_shards)
+    for cid, old in before.items():
+        assert router.shard_for(cid) in (old, n_shards)
+
+
+# -- swap-propagation staleness bound --------------------------------------
+
+@given(st.integers(1, 4), st.integers(0, 3), st.integers(1, 10))
+@settings(deadline=None)
+def test_swap_propagation_skew_bound(n_shards, max_skew, n_publishes):
+    """After every publish through the swarm facade, no shard lags the
+    primary by more than max_skew versions — and a final propagate
+    converges the whole fleet to the newest version."""
+    swarm = ShardSwarm(n_shards, max_skew=max_skew)
+    swarm.register("m", SimpleNamespace(tag="v1"))
+    for i in range(2, n_publishes + 2):
+        swarm.swap("m", SimpleNamespace(tag=f"v{i}"))
+        vec = swarm.version_vector("m")
+        shard_vs = [v for k, v in vec.items() if k != "primary"]
+        assert vec["primary"] - min(shard_vs) <= max_skew, vec
+        assert max(shard_vs) <= vec["primary"]   # replicas never ahead
+    swarm.propagate("m")
+    vec = swarm.version_vector("m")
+    assert set(vec.values()) == {n_publishes + 1}, vec
 
 
 # -- session cache invariants ----------------------------------------------
