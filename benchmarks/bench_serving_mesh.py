@@ -1,9 +1,10 @@
 """Sharded serving mesh scaling curve + swap-storm behavior (ISSUE 3
-acceptance): aggregate throughput at 1/2/4 shards, and p99 / dropped
-requests / version skew while a publisher storms weight swaps across
-the fleet.
+acceptance) + multi-process transport (ISSUE 4 acceptance): aggregate
+throughput at 1/2/4 shards, p99 / dropped requests / version skew while
+a publisher storms weight swaps across the fleet, and the same mesh over
+OS processes with a shard joining and leaving mid-traffic.
 
-Two phases over the same (reduced) paper-LSTM model:
+Three phases over the same (reduced) paper-LSTM model:
 
   scaling    — submit-all traffic against 1, 2 and 4 shards; the
                4-shard mesh must beat the single engine (>= 1.5x on a
@@ -13,11 +14,17 @@ Two phases over the same (reduced) paper-LSTM model:
                ms while traffic flows over the max-shard mesh: zero
                dropped requests (hard assert), every sampled version
                vector within the configured staleness skew bound (hard
-               assert), p99 and pull/transfer volume reported.
+               assert), p99 and pull/transfer volume reported;
+  transport  — the mesh over the SOCKET transport, one EngineShard per
+               OS process: traffic flows while a shard joins and a
+               shard leaves the live fleet, with zero dropped requests
+               and the skew bound held throughout (hard asserts), and
+               rps/latency vs the in-process thread mesh reported.
 
 Rows: ``mesh/shards<n>,us_per_request,rps=..;p99_ms=..;occ=..``,
-``mesh/scaling,0,speedup4v1=..``, and
-``mesh/swapstorm,us_per_request,p99_ms=..;dropped=..;skew_max=..;...``.
+``mesh/scaling,0,speedup4v1=..``,
+``mesh/swapstorm,us_per_request,p99_ms=..;dropped=..;skew_max=..;...``
+and ``mesh/transport,us_per_request,rps=..;procs=..;dropped=..;...``.
 
 Standalone runs force 4 host devices (one per shard, before jax
 initializes) so shard flushes can execute concurrently; under
@@ -172,6 +179,75 @@ def main(n_requests: int = 384, smoke: bool = False) -> None:
     print(f"# mesh: {speedup:.2f}x at {max_shards} shards | storm: "
           f"{swaps[0]} publishes, 0 dropped, skew bound {max_skew} held "
           f"({len(skew_samples)} samples, max staleness {stale_max})")
+
+    # -- phase 3: multi-process transport with live membership ------------
+    _transport_phase(cfg, fc0, windows, n_requests, max_skew,
+                     thread_rps=rps[2])     # vs the 2-shard thread mesh
+
+
+def _transport_phase(cfg, fc0, windows, n_requests, max_skew,
+                     thread_rps) -> None:
+    """The mesh over OS processes (2 workers), a shard joining and a
+    shard leaving while traffic flows: zero drops + skew bound asserted,
+    throughput vs the thread mesh reported."""
+    from repro.serving import (BatcherConfig, ModelRegistry,
+                               MultiProcessServingEngine)
+
+    bcfg = BatcherConfig(max_batch=16, max_wait_ms=2.0,
+                         length_buckets=(cfg.window,))
+    reg = ModelRegistry()
+    reg.register("m", fc0)
+    mesh = MultiProcessServingEngine(reg, bcfg, n_shards=2,
+                                     max_skew=max_skew)
+    dropped = 0
+    skew_samples = []
+    with mesh:
+        mesh.warmup("m", lengths=(cfg.window,))
+        mesh.reset_clock()
+        # steady state, timed: the cross-process rps the row reports
+        t0 = time.perf_counter()
+        steady = [mesh.submit("m", windows[i % len(windows)],
+                              client_id=f"client-{i % 32}")
+                  for i in range(n_requests)]
+        for f in steady:
+            f.result(timeout=120.0)
+        rps = n_requests / (time.perf_counter() - t0)
+        # membership churn, untimed (a join spawns a whole process):
+        # submits stay in flight across the join and the leave — the
+        # acceptance asserts are zero drops + the skew bound
+        futures = []
+        third = max(1, n_requests // 3)
+        for phase, membership in ((0, None), (1, "join"), (2, "leave")):
+            if membership == "join":
+                mesh.add_shard()            # mid-traffic: futures from
+            elif membership == "leave":     # phase 0/1 are still pending
+                mesh.remove_shard(0)
+            skew_samples.append(mesh.staleness("m"))
+            for i in range(third):
+                try:
+                    futures.append(mesh.submit(
+                        "m", windows[(phase * third + i) % len(windows)],
+                        client_id=f"client-{i % 32}"))
+                except (RuntimeError, ConnectionError, KeyError):
+                    dropped += 1
+        for f in futures:
+            try:
+                f.result(timeout=120.0)
+            except Exception:  # noqa: BLE001 — a failed future IS a drop
+                dropped += 1
+        snap = mesh.snapshot()
+    row("mesh/transport", 1e6 / max(rps, 1e-9),
+        f"rps={rps:.0f};vs_thread_mesh={rps/max(thread_rps, 1e-9):.2f}x;"
+        f"procs=2->3->2;p99_ms={snap['p99_ms']:.2f};dropped={dropped};"
+        f"pulls={snap['pulls']};mb_pushed={snap['bytes_pulled']/1e6:.1f};"
+        f"staleness_max={max(skew_samples)}")
+    assert dropped == 0, \
+        f"membership change dropped {dropped} requests on the transport"
+    assert max(skew_samples) <= max_skew, \
+        f"staleness {max(skew_samples)} exceeded the bound {max_skew}"
+    print(f"# transport: {n_requests} steady + {len(futures)} churn "
+          f"requests over 2->3->2 worker processes, 0 dropped, skew "
+          f"bound {max_skew} held")
 
 
 if __name__ == "__main__":

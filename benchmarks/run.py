@@ -26,7 +26,9 @@ ALL = [
     ("hotswap", bench_hotswap),          # ISSUE 2 swap-storm latency/drops
     # "mesh", not "serving_mesh": --only matches substrings, and
     # `--only serving` must keep selecting just bench_serving
-    ("mesh", bench_serving_mesh),        # ISSUE 3 shard scaling + storm
+    ("mesh", bench_serving_mesh),        # ISSUE 3 shard scaling + storm;
+    # ISSUE 4 multi-process transport phase (join/leave over OS
+    # processes) runs as its third phase, --smoke included
 ]
 
 

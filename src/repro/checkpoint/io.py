@@ -47,30 +47,20 @@ def _path_str(entry) -> str:
     return str(entry)
 
 
-def save_checkpoint(path: str, tree: PyTree,
-                    metadata: dict | None = None) -> None:
+def _pack(tree: PyTree, metadata: dict | None) -> dict[str, np.ndarray]:
     flat, dtypes = _flatten(tree)
     blob = {_DTYPES_KEY: dtypes}
     if metadata is not None:
         blob["user"] = metadata
     flat[_META_KEY] = np.frombuffer(
         msgpack.packb(blob, use_bin_type=True), dtype=np.uint8)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    tmp = path + ".tmp"
-    np.savez(tmp, **flat)
-    # np.savez appends .npz to the filename it is given
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    return flat
 
 
-def load_checkpoint(path: str, like: PyTree | None = None
-                    ) -> tuple[PyTree | dict[str, np.ndarray], dict | None]:
-    """Load a checkpoint. With ``like`` (a pytree of the target structure)
-    the arrays are re-assembled into that structure; otherwise the flat
-    {path: array} dict is returned. Returns (tree_or_flat, metadata)."""
+def _unpack(flat: dict[str, np.ndarray]
+            ) -> tuple[dict[str, np.ndarray], dict | None]:
     import ml_dtypes
 
-    with np.load(path, allow_pickle=False) as z:
-        flat = {k: z[k] for k in z.files}
     meta = None
     dtypes: dict[str, str] = {}
     if _META_KEY in flat:
@@ -80,6 +70,54 @@ def load_checkpoint(path: str, like: PyTree | None = None
     for key, name in dtypes.items():
         if key in flat:
             flat[key] = flat[key].view(np.dtype(getattr(ml_dtypes, name)))
+    return flat, meta
+
+
+def save_checkpoint(path: str, tree: PyTree,
+                    metadata: dict | None = None) -> None:
+    flat = _pack(tree, metadata)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(tmp, **flat)
+    # np.savez appends .npz to the filename it is given
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def dump_checkpoint_bytes(tree: PyTree,
+                          metadata: dict | None = None) -> bytes:
+    """The checkpoint as in-memory npz bytes — same format ``save_checkpoint``
+    writes, for transports that move weights between processes instead
+    of through the filesystem."""
+    import io
+
+    buf = io.BytesIO()
+    np.savez(buf, **_pack(tree, metadata))
+    return buf.getvalue()
+
+
+def load_checkpoint(path: str, like: PyTree | None = None
+                    ) -> tuple[PyTree | dict[str, np.ndarray], dict | None]:
+    """Load a checkpoint. With ``like`` (a pytree of the target structure)
+    the arrays are re-assembled into that structure; otherwise the flat
+    {path: array} dict is returned. Returns (tree_or_flat, metadata)."""
+    with np.load(path, allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    flat, meta = _unpack(flat)
+    if like is None:
+        return flat, meta
+    return assemble(flat, like), meta
+
+
+def load_checkpoint_bytes(data: bytes, like: PyTree | None = None
+                          ) -> tuple[PyTree | dict[str, np.ndarray],
+                                     dict | None]:
+    """``load_checkpoint`` for in-memory npz bytes (the output of
+    ``dump_checkpoint_bytes``)."""
+    import io
+
+    with np.load(io.BytesIO(data), allow_pickle=False) as z:
+        flat = {k: z[k] for k in z.files}
+    flat, meta = _unpack(flat)
     if like is None:
         return flat, meta
     return assemble(flat, like), meta

@@ -9,7 +9,10 @@ import jax.numpy as jnp
 
 from repro.kernels.attention.kernel import flash_attention_pallas
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _on_tpu() -> bool:
+    # trace-time, not import-time: see repro.kernels.lstm.ops._on_tpu
+    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -32,6 +35,6 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     out = flash_attention_pallas(
         qf, kf, vf, causal=causal, window=window, block_q=block_q,
         block_k=block_k, q_offset=q_offset, kv_valid=Skv,
-        interpret=not _ON_TPU)
+        interpret=not _on_tpu())
     out = out.reshape(B, Hq, Sq + pad_q, D).transpose(0, 2, 1, 3)
     return out[:, :Sq]

@@ -9,7 +9,10 @@ import jax.numpy as jnp
 
 from repro.kernels.evl.kernel import LANES, evl_pallas
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _on_tpu() -> bool:
+    # trace-time, not import-time: see repro.kernels.lstm.ops._on_tpu
+    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("beta0", "beta1", "gamma",
@@ -30,7 +33,7 @@ def evl_loss_fused(u, v, beta0: float, beta1: float, gamma: float = 2.0,
     v2 = jnp.zeros((total,), jnp.float32).at[:n].set(
         v.reshape(-1).astype(jnp.float32)).reshape(-1, LANES)
     out = evl_pallas(u2, v2, beta0=beta0, beta1=beta1, gamma=gamma,
-                     interpret=not _ON_TPU)
+                     interpret=not _on_tpu())
     flat = out.reshape(-1)[:n]
     mask = jnp.ones((n,), jnp.float32)
     if reduce == "mean":

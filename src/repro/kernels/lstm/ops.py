@@ -7,7 +7,13 @@ import jax.numpy as jnp
 
 from repro.kernels.lstm.kernel import lstm_cell_pallas
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _on_tpu() -> bool:
+    # resolved at TRACE time, not import time: the backend may be
+    # configured (jax.config / env) after this module is imported, and a
+    # stale import-time snapshot would run the kernel in interpret mode
+    # on a real TPU (or worse, compiled mode off one)
+    return jax.default_backend() == "tpu"
 
 
 @jax.jit
@@ -29,5 +35,5 @@ def lstm_cell_fused(x, h, c, wx, wh, b):
         wx = jnp.pad(wx, ((0, pad_i), (0, 0)))
     h_new, c_new = lstm_cell_pallas(x, h, c, wx, wh, b[None, :],
                                     block_b=block_b,
-                                    interpret=not _ON_TPU)
+                                    interpret=not _on_tpu())
     return h_new[:B], c_new[:B]

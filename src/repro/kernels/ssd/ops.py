@@ -10,7 +10,10 @@ import jax.numpy as jnp
 from repro.kernels.ssd.kernel import ssd_pallas
 from repro.kernels.ssd.ref import ssd_chunk_ref
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _on_tpu() -> bool:
+    # trace-time, not import-time: see repro.kernels.lstm.ops._on_tpu
+    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
@@ -26,7 +29,7 @@ def ssd_scan_fused(xd, a, B_, C_, chunk: int = 128):
         B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
         C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
     y, state = ssd_pallas(xd, a, B_, C_, chunk=chunk,
-                          interpret=not _ON_TPU)
+                          interpret=not _on_tpu())
     return y[:, :L], state
 
 
@@ -34,7 +37,7 @@ def ssd_chunk_fused(xd, a, B_, C_, state):
     """Single-chunk single-(batch,head) entry point (tests)."""
     y, new_state = ssd_pallas(
         xd[None, :, None, :], a[None, :, None], B_[None], C_[None],
-        chunk=xd.shape[0], interpret=not _ON_TPU)
+        chunk=xd.shape[0], interpret=not _on_tpu())
     # ssd_pallas starts from zero state; fold the provided state like the
     # reference does: y += C @ state^T * exp(cumsum a); state' folds decay.
     cum = jnp.cumsum(a)

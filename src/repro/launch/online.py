@@ -15,13 +15,19 @@ swap count, staleness at serve time, and per-version request counts.
 With ``--shards N`` the serving side is the sharded mesh: the publisher
 publishes into the swap-propagation swarm's primary registry and every
 shard's replica pulls the new weights within ``--max-skew`` versions,
-while all shards keep draining traffic.
+while all shards keep draining traffic. With ``--processes`` the mesh
+shards are separate OS processes behind the socket transport
+(``repro.serving.transport``): each publish ships a serialized
+checkpoint to every worker under the same skew bound.
 
     PYTHONPATH=src python -m repro.launch.online --ticker AAPL \
         --workers 3 --iterations 600 --requests 400
 
     PYTHONPATH=src python -m repro.launch.online --shards 4 \
         --iterations 300 --requests 200
+
+    PYTHONPATH=src python -m repro.launch.online --shards 2 --processes \
+        --iterations 200 --requests 100
 """
 
 from __future__ import annotations
@@ -52,6 +58,9 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="serve through a sharded mesh with this many "
                     "EngineShard workers (1 = single engine)")
+    ap.add_argument("--processes", action="store_true",
+                    help="with --shards > 1: one OS process per shard "
+                    "over the socket transport")
     ap.add_argument("--max-skew", type=int, default=1,
                     help="mesh staleness bound: versions a shard may lag "
                     "the primary before a publish forces its pull")
@@ -71,8 +80,9 @@ def main(argv: list[str] | None = None) -> None:
     from repro.data import load_stock, make_windows, train_test_split
     from repro.models.rnn import init_rnn
     from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
-                               ServingEngine, ShardedServingEngine,
-                               Telemetry, WeightPublisher)
+                               MultiProcessServingEngine, ServingEngine,
+                               ShardedServingEngine, Telemetry,
+                               WeightPublisher)
     from repro.training.loop import train_rnn_local_sgd
 
     import jax
@@ -99,7 +109,15 @@ def main(argv: list[str] | None = None) -> None:
                          max_wait_ms=args.max_wait_ms,
                          length_buckets=(CONFIG.window,))
     mesh = args.shards > 1
-    if mesh:
+    if mesh and args.processes:
+        engine = MultiProcessServingEngine(registry, bcfg,
+                                           n_shards=args.shards,
+                                           max_skew=args.max_skew)
+        # publish through the mesh facade: each publish ships a
+        # serialized checkpoint to every worker process under the
+        # skew bound, atomically with the primary swap
+        publish_target, pub_telemetry = engine, None
+    elif mesh:
         engine = ShardedServingEngine(registry, bcfg,
                                       n_shards=args.shards,
                                       max_skew=args.max_skew)
@@ -162,8 +180,9 @@ def main(argv: list[str] | None = None) -> None:
         # served (and --save'd) model is never staler than the trained one
         publisher.flush()
         if mesh:
-            engine.swarm.propagate(key)     # shards converge to the final
-            # version before the engine stops
+            # shards converge to the final version before the engine
+            # stops (swarm pulls in-process, checkpoint pushes across)
+            (engine if args.processes else engine.swarm).propagate(key)
         wall = time.time() - t0
         snap = engine.snapshot() if mesh else engine.telemetry.snapshot()
     if trainer_err:

@@ -10,6 +10,10 @@ many-client traffic trace against it.
     # the same trace over a 4-shard serving mesh
     PYTHONPATH=src python -m repro.launch.serve --shards 4 --requests 512
 
+    # the mesh over OS processes (one EngineShard per process, socket
+    # transport between router and workers)
+    PYTHONPATH=src python -m repro.launch.serve --shards 2 --processes
+
     # host a REAL trained checkpoint (from `-m repro.launch.train
     # --save ckpt.npz`) and score its extreme alerts against the
     # synthetic labels
@@ -67,6 +71,10 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--shards", type=int, default=1,
                     help="serve through a sharded mesh with this many "
                     "EngineShard workers (1 = single engine)")
+    ap.add_argument("--processes", action="store_true",
+                    help="with --shards > 1: run each shard as its own "
+                    "OS process behind the socket transport "
+                    "(repro.serving.transport) instead of a thread")
     ap.add_argument("--max-skew", type=int, default=1,
                     help="mesh swap-propagation staleness bound "
                     "(versions a shard may lag the primary)")
@@ -82,6 +90,7 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     from repro.serving import (BatcherConfig, ModelRegistry,
+                               MultiProcessServingEngine,
                                RecurrentSessionRunner, ServingEngine,
                                SessionCache, ShardedServingEngine, Telemetry,
                                build_lstm_forecaster, build_zoo_forecaster)
@@ -121,7 +130,11 @@ def main(argv: list[str] | None = None) -> None:
                         length_buckets=tuple(sorted(
                             {p.shape[0] for p in payloads})))
     lengths = tuple({p.shape[0] for p in payloads})
-    if args.shards > 1:
+    if args.shards > 1 and args.processes:
+        engine = MultiProcessServingEngine(registry, cfg,
+                                           n_shards=args.shards,
+                                           max_skew=args.max_skew)
+    elif args.shards > 1:
         engine = ShardedServingEngine(registry, cfg, n_shards=args.shards,
                                       max_skew=args.max_skew)
     else:
@@ -141,6 +154,25 @@ def main(argv: list[str] | None = None) -> None:
         wall = time.time() - t0
         snap = (engine.snapshot() if args.shards > 1
                 else engine.telemetry.snapshot())
+        if args.sessions and fc.feature_dim and args.shards > 1 \
+                and args.processes:
+            # sessions live in the worker processes' shard-local caches:
+            # each step is routed to the client's owning worker
+            streams = _traffic_datasets(min(args.clients, 8), fc.window,
+                                        args.seed + 1)
+            t0s = time.time()
+            n_steps = 0
+            for step in range(fc.window):
+                for c, ds in enumerate(streams):
+                    engine.step(args.model, f"client-{c}", ds.x[0][step])
+                    n_steps += 1
+            wall_s = time.time() - t0s
+            by_worker = {sid: st["cache"]["sessions"]
+                         for sid, st in engine.shard_stats().items()}
+            print(f"sessions (worker-resident): {n_steps} O(1) steps in "
+                  f"{wall_s*1e3:.1f} ms "
+                  f"({n_steps/max(wall_s,1e-9):.0f} steps/s); "
+                  f"resident by worker {by_worker}")
 
     alert_mask = np.asarray([p >= args.alert_threshold
                              for _, p in results], dtype=bool)
@@ -164,7 +196,8 @@ def main(argv: list[str] | None = None) -> None:
               f"{precision:.3f}  recall {recall:.3f}  (tp={tp} fp={fp} "
               f"fn={fn}, base rate {float(np.mean(labels != 0)):.3f})")
 
-    if args.sessions and fc.feature_dim:
+    if args.sessions and fc.feature_dim and not (args.shards > 1
+                                                 and args.processes):
         if args.shards > 1:
             # fleet budget = clients * shards: each shard's slice can
             # hold every demo client, so hash collisions onto one shard

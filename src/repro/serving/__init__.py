@@ -29,6 +29,11 @@ Layout (DESIGN: one concern per module):
                     publishes worker-averaged params as new versions
                     without dropping in-flight requests (swarm-aware:
                     publishing into a ``ShardSwarm`` fans out fleet-wide);
+- ``transport.py``  multi-process mesh: each shard an ``EngineShard`` in
+                    its own OS process behind a length-prefixed msgpack
+                    socket protocol; weight pushes ship serialized
+                    checkpoints under the same ``max_skew`` bound, live
+                    join/leave migrates session carries across processes;
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
                     cache hit-rate, swap count, staleness at serve time,
                     per-version request counts, cross-shard ``merge``.
@@ -45,6 +50,8 @@ from repro.serving.sessions import (RecurrentSessionRunner, SessionCache,
                                     ShardedSessionCache)
 from repro.serving.swarm import ShardSwarm
 from repro.serving.telemetry import Telemetry
+from repro.serving.transport import (MultiProcessServingEngine, RemoteShard,
+                                     spawn_shard)
 
 __all__ = [
     "BatcherConfig",
@@ -52,8 +59,10 @@ __all__ = [
     "EngineShard",
     "LSTMForecaster",
     "ModelRegistry",
+    "MultiProcessServingEngine",
     "RecurrentSessionRunner",
     "RegistryEntry",
+    "RemoteShard",
     "ServingEngine",
     "SessionCache",
     "ShardSwarm",
@@ -64,5 +73,6 @@ __all__ = [
     "ZooForecaster",
     "build_lstm_forecaster",
     "build_zoo_forecaster",
+    "spawn_shard",
     "stop_the_world_swap",
 ]

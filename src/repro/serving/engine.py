@@ -53,10 +53,18 @@ class BatcherConfig:
                                1 << (self.max_batch.bit_length() - 1))
 
     def bucket_len(self, t: int) -> int:
+        if not self.length_buckets:
+            return _next_pow2(max(t, 8))
         for b in sorted(self.length_buckets):
             if t <= b:
                 return b
-        return t if self.length_buckets else _next_pow2(max(t, 8))
+        # longer than every configured bucket: clamp to the largest one
+        # instead of emitting an uncompiled shape (the raw length used to
+        # escape the fixed compile set and recompile on the serving hot
+        # path — ``warmup`` never warms such shapes). ``submit`` truncates
+        # the payload to its newest ``bucket`` rows; the LSTM is causal,
+        # so those rows are exactly what the clamped window serves.
+        return max(self.length_buckets)
 
     def bucket_batch(self, n: int) -> int:
         if not self.pad_batch:
@@ -65,13 +73,15 @@ class BatcherConfig:
 
 
 class _Request:
-    __slots__ = ("payload", "length", "future", "t_enq")
+    __slots__ = ("payload", "length", "future", "t_enq", "client_id")
 
-    def __init__(self, payload: np.ndarray, t_enq: float):
+    def __init__(self, payload: np.ndarray, t_enq: float,
+                 client_id: str | None = None):
         self.payload = payload
         self.length = payload.shape[0]
         self.future: Future = Future()
         self.t_enq = t_enq
+        self.client_id = client_id
 
 
 class EngineShard:
@@ -128,9 +138,9 @@ class EngineShard:
                client_id: str | None = None) -> Future:
         """Enqueue one window ([T, F] features or [T] token ids); returns
         a Future resolving to (forecast, p_extreme) scalars.
-        ``client_id`` is accepted for API parity with the sharded mesh
-        (which routes on it); a single shard serves every client, so it
-        is ignored here."""
+        ``client_id`` rides along into per-client telemetry attribution
+        (the sharded mesh additionally routes on it; a single shard
+        serves every client)."""
         payload = np.asarray(window)
         fc = self.registry.get(model_key)
         want_ndim = 2 if fc.feature_dim else 1
@@ -140,7 +150,12 @@ class EngineShard:
                 f"{model_key!r} expects windows of shape "
                 f"{'[T>=1, ' + str(fc.feature_dim) + ']' if fc.feature_dim else '[T>=1]'}"
                 f", got {payload.shape}")
-        req = _Request(payload, time.perf_counter())
+        bucket = self.config.bucket_len(payload.shape[0])
+        if payload.shape[0] > bucket:
+            # over-long window clamped to the largest length bucket: keep
+            # the newest rows (causal model) so the compile set stays fixed
+            payload = payload[-bucket:]
+        req = _Request(payload, time.perf_counter(), client_id=client_id)
         with self._state_lock:
             if not self._running:
                 raise RuntimeError("engine is not running (use start() or a "
@@ -227,11 +242,14 @@ class EngineShard:
         self.telemetry.record_batch(len(reqs), bucket_b)
         self.telemetry.record_requests([now - r.t_enq for r in reqs],
                                        version=version,
-                                       staleness_s=staleness)
+                                       staleness_s=staleness,
+                                       client_ids=[r.client_id
+                                                   for r in reqs])
         for i, r in enumerate(reqs):
             # attribution before set_result: a client that wakes on the
             # result always sees which model version produced it
             r.future.model_version = version
+            r.future.client_id = r.client_id
             r.future.set_result((float(forecast[i]), float(p_extreme[i])))
 
     def _worker(self) -> None:

@@ -76,6 +76,37 @@ def _compiled_rnn(cfg: RNNConfig):
             return y, _fused_alert(jnp.abs(y), u, xi, scale, active,
                                    gamma), carry
 
+        def replay(params, window, carry, xi, scale, active, gamma):
+            # one lax.scan over the SAME fused per-step computation the
+            # session path runs (``step`` above, alert head included), so
+            # a cache-miss replay is ONE dispatch instead of O(window)
+            # host round trips. The scan is fully unrolled with
+            # optimization barriers at each step's boundary: inside a
+            # rolled loop body XLA selects instructions differently (FMA
+            # contraction, fusion shapes) than in the standalone step
+            # program, which breaks the session cache's bitwise
+            # step==replay promise in the low bits — unrolled
+            # barrier-isolated per-step subgraphs reproduce the
+            # standalone step's compilation context exactly (window
+            # lengths are bounded by cfg.window, so the unrolled
+            # programs stay small).
+            def body(c, x_t):
+                x_t, c = jax.lax.optimization_barrier((x_t, c))
+                y, p, c2 = step(params, x_t, c, xi, scale, active, gamma)
+                y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
+                return c2, (y, p, c2)
+
+            carry, (ys, ps, _cs) = jax.lax.scan(
+                body, carry, jnp.swapaxes(window, 0, 1),
+                unroll=window.shape[1])
+            # EVERY per-step output — y, p, and the intermediate carries
+            # — is returned live (callers take [-1] / the final carry):
+            # were any of them dead code, XLA would prune parts of the
+            # earlier iterations and re-fuse what remains differently
+            # from the standalone step program, breaking bitwise parity
+            # (measured: stacking y/p alone is not enough)
+            return ys, ps, _cs, carry
+
         # gamma is static: gev_log_cdf branches on it in Python, and it
         # is a per-deployment constant (one compile per distinct value)
         fns = {
@@ -83,6 +114,7 @@ def _compiled_rnn(cfg: RNNConfig):
             "step": jax.jit(partial(rnn_step, cfg=cfg)),
             "predict": jax.jit(predict, static_argnames=("gamma",)),
             "fused_step": jax.jit(step, static_argnames=("gamma",)),
+            "replay": jax.jit(replay, static_argnames=("gamma",)),
         }
         _RNN_COMPILED[cfg] = fns
     return fns
@@ -193,16 +225,21 @@ class LSTMForecaster:
         return np.asarray(y), np.asarray(p), carry
 
     def replay(self, window, carry=None):
-        """Full-window recompute through the *same* compiled step function
-        the session path uses (this is what a cache miss executes), so
-        cached incremental serving is bitwise-identical to it."""
+        """Full-window recompute through the *same* per-step math the
+        session path uses (this is what a cache miss executes), so cached
+        incremental serving is bitwise-identical to it — as ONE jitted
+        ``lax.scan`` dispatch, not a Python loop syncing the device every
+        timestep (O(window) host round trips on every cache miss and
+        swap re-prime)."""
         window = jnp.asarray(window, jnp.float32)
         if carry is None:
             carry = self.init_carry(window.shape[0])
-        y = p = None
-        for t in range(window.shape[1]):
-            y, p, carry = self.step(window[:, t, :], carry)
-        return y, p, carry
+        if window.shape[1] == 0:
+            return None, None, carry
+        ys, ps, _, carry = self._fns["replay"](self.params, window, carry,
+                                               *self._tail_args(),
+                                               gamma=float(self.gamma))
+        return np.asarray(ys[-1]), np.asarray(ps[-1]), carry
 
     # -- calibration -------------------------------------------------------
     def calibrate(self, windows, quantile: float = 0.95) -> "LSTMForecaster":

@@ -21,7 +21,9 @@ from typing import Any, NamedTuple
 
 import jax
 
-from repro.checkpoint.io import assemble, load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (assemble, dump_checkpoint_bytes,
+                                 load_checkpoint, load_checkpoint_bytes,
+                                 save_checkpoint)
 from repro.models.rnn import RNNConfig, init_rnn
 from repro.serving.forecaster import LSTMForecaster, ZooForecaster
 
@@ -176,7 +178,8 @@ class ModelRegistry:
             return len(self._entries)
 
     # -- persistence -------------------------------------------------------
-    def save(self, key: str, path: str) -> None:
+    def _save_meta(self, key: str):
+        """(forecaster, checkpoint metadata) for the hosted ``key``."""
         entry = self.get_entry(key)
         fc = entry.forecaster
         meta: dict = {"kind": fc.kind, "tail": fc.tail, "gamma": fc.gamma,
@@ -190,22 +193,31 @@ class ModelRegistry:
             meta["arch"] = name[:-len("-smoke")] if meta["reduced"] else name
         else:
             raise ValueError(f"cannot persist forecaster kind {fc.kind!r}")
+        return fc, meta
+
+    def save(self, key: str, path: str) -> None:
+        fc, meta = self._save_meta(key)
         save_checkpoint(path, fc.params, metadata=meta)
 
-    def load(self, path: str, key: str | None = None):
-        """Rebuild a forecaster from a checkpoint and (optionally)
-        register it under ``key`` at the saved version (or the next
-        monotone version if the key has already moved past it). Returns
-        the forecaster."""
-        flat, meta = load_checkpoint(path)
+    def save_bytes(self, key: str) -> bytes:
+        """The hosted model as in-memory checkpoint bytes (config, EVT
+        calibration and version ride along) — what the mesh transport
+        ships to shard worker processes on publish and join."""
+        fc, meta = self._save_meta(key)
+        return dump_checkpoint_bytes(fc.params, metadata=meta)
+
+    def _rebuild(self, flat, meta, origin: str, device_put: bool = False):
         if not meta or "kind" not in meta:
-            raise ValueError(f"{path}: not a serving checkpoint (no kind "
+            raise ValueError(f"{origin}: not a serving checkpoint (no kind "
                              "metadata)")
         kind = meta["kind"]
         if kind == "lstm":
             cfg = _rnn_cfg_from_meta(meta["cfg"])
             like = init_rnn(jax.random.PRNGKey(0), cfg)
-            fc = LSTMForecaster(cfg=cfg, params=assemble(flat, like),
+            params = assemble(flat, like)
+            if device_put:
+                params = jax.device_put(params)
+            fc = LSTMForecaster(cfg=cfg, params=params,
                                 tail=meta.get("tail"),
                                 eps=tuple(meta.get("eps", (0.01, 0.01))),
                                 gamma=meta.get("gamma", 5.0))
@@ -218,12 +230,18 @@ class ModelRegistry:
             if meta.get("reduced"):
                 acfg = reduce_cfg(acfg)
             like = build_model(acfg).init(jax.random.PRNGKey(0))
-            fc = ZooForecaster(cfg=acfg, params=assemble(flat, like),
+            params = assemble(flat, like)
+            if device_put:
+                params = jax.device_put(params)
+            fc = ZooForecaster(cfg=acfg, params=params,
                                tail=meta.get("tail"),
                                gamma=meta.get("gamma", 5.0))
         else:
-            raise ValueError(f"{path}: unknown forecaster kind {kind!r}")
+            raise ValueError(f"{origin}: unknown forecaster kind {kind!r}")
         fc.version = int(meta.get("version", 0))
+        return fc
+
+    def _register_loaded(self, fc, key: str | None):
         if key is not None:
             with self._lock:
                 cur = self._entries.get(key)
@@ -234,3 +252,22 @@ class ModelRegistry:
                 v = self._publish_locked(key, fc, saved)
             self._notify(key, v)
         return fc
+
+    def load(self, path: str, key: str | None = None):
+        """Rebuild a forecaster from a checkpoint and (optionally)
+        register it under ``key`` at the saved version (or the next
+        monotone version if the key has already moved past it). Returns
+        the forecaster."""
+        flat, meta = load_checkpoint(path)
+        return self._register_loaded(self._rebuild(flat, meta, path), key)
+
+    def load_bytes(self, data: bytes, key: str | None = None,
+                   device_put: bool = False):
+        """``load`` for in-memory checkpoint bytes (``save_bytes``
+        output). ``device_put=True`` re-materializes the parameters on
+        the local default device — what a shard worker process does when
+        it receives a weight push over the transport."""
+        flat, meta = load_checkpoint_bytes(data)
+        return self._register_loaded(
+            self._rebuild(flat, meta, "<bytes>", device_put=device_put),
+            key)

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import hashlib
 import itertools
+import threading
 
 import numpy as np
 
@@ -76,6 +77,14 @@ class ShardedServingEngine:
     ``WeightPublisher`` handed this engine's ``.swarm`` (or the plain
     registry itself) — propagate to every shard within the swarm's
     staleness bound while all shards keep draining their queues.
+
+    Membership is LIVE: ``add_shard`` builds a worker over a fresh swarm
+    replica, pulls the hosted weights and warms its compile set BEFORE
+    the router sends it traffic; ``remove_shard`` takes a shard out of
+    the router first, then drains its queue (nothing is dropped) and
+    hands its session-cache clients to the surviving owners. Router,
+    worker set, swarm replicas and attached session caches stay in
+    lockstep — mutate membership through these methods, not the router.
     """
 
     def __init__(self, registry, config: BatcherConfig | None = None,
@@ -87,32 +96,54 @@ class ShardedServingEngine:
         else:
             self.swarm = ShardSwarm(n_shards, primary=registry,
                                     max_skew=max_skew, transfer=transfer)
-        self.n_shards = self.swarm.n_shards
         self.config = config or BatcherConfig()
-        self.shards = [EngineShard(self.swarm.registry_for(i), self.config,
-                                   Telemetry(), shard_id=i)
-                       for i in range(self.n_shards)]
+        self.shards: dict[int, EngineShard] = {
+            sid: EngineShard(self.swarm.registry_for(sid), self.config,
+                             Telemetry(), shard_id=sid)
+            for sid in self.swarm.shard_ids}
         # pulls into shard i count as swaps on shard i's telemetry
-        self.swarm.telemetries = [s.telemetry for s in self.shards]
-        self.router = ConsistentRouter(range(self.n_shards))
+        self.swarm.telemetries = {sid: s.telemetry
+                                  for sid, s in self.shards.items()}
+        self.router = ConsistentRouter(self.shards)
         # one round-robin counter per (model, length-bucket) group, so a
         # burst within one group cycles every shard (dict setdefault and
         # itertools.count are both atomic under the GIL)
         self._anon_counters: dict[str, itertools.count] = {}
         self._propagate_interval_s = propagate_interval_s
+        # serializes routing against membership changes: a submit never
+        # sees a shard that left the router, a removed worker never sees
+        # a late submit
+        self._membership_lock = threading.Lock()
+        # serializes whole add_shard/remove_shard operations (the
+        # membership lock is only held for their router/worker-set
+        # mutations, so traffic keeps flowing during the slow parts)
+        self._admin_lock = threading.RLock()
+        self._session_caches: list = []   # caches kept in membership sync
+        self._warm_plan: dict[str, tuple | None] = {}
+        self._running = False
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def shard_ids(self) -> list[int]:
+        return sorted(self.shards)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "ShardedServingEngine":
         # attach first: publishes that happened while stopped reach the
         # replicas before any shard serves a request
         self.swarm.attach()
-        for shard in self.shards:
+        for shard in list(self.shards.values()):
             shard.start()
+        self._running = True
         self.swarm.start_background(self._propagate_interval_s)
         return self
 
     def stop(self) -> None:
-        for shard in self.shards:
+        self._running = False
+        for shard in list(self.shards.values()):
             shard.stop()
         self.swarm.stop_background()
         # a stopped mesh must not keep pulling weights into its replicas
@@ -135,24 +166,110 @@ class ShardedServingEngine:
         request is session-affine (consistent-hashed); without one it
         spreads round-robin within its (model, length-bucket) group."""
         payload = np.asarray(window)
-        if client_id is not None:
-            sid = self.router.shard_for(str(client_id))
-        else:
-            group = f"{model_key}|{self.config.bucket_len(payload.shape[0])}"
-            counter = self._anon_counters.setdefault(group,
-                                                     itertools.count())
-            ids = self.router.shard_ids
-            sid = ids[next(counter) % len(ids)]
-        return self._shard(sid).submit(model_key, payload)
+        with self._membership_lock:
+            if client_id is not None:
+                sid = self.router.shard_for(str(client_id))
+            else:
+                group = \
+                    f"{model_key}|{self.config.bucket_len(payload.shape[0])}"
+                counter = self._anon_counters.setdefault(group,
+                                                         itertools.count())
+                ids = self.router.shard_ids
+                sid = ids[next(counter) % len(ids)]
+            return self._shard(sid).submit(model_key, payload,
+                                           client_id=client_id)
 
     def _shard(self, sid: int) -> EngineShard:
-        if not 0 <= sid < self.n_shards:
+        shard = self.shards.get(sid)
+        if shard is None:
             raise KeyError(
-                f"router returned shard {sid} but this mesh has "
-                f"{self.n_shards} workers — the worker set is pinned at "
-                f"construction; live shard join/leave is a ROADMAP "
-                f"follow-on")
-        return self.shards[sid]
+                f"router returned shard {sid} but this mesh has no such "
+                f"worker (have {sorted(self.shards)}) — change membership "
+                f"through add_shard/remove_shard, which keep the router "
+                f"and the worker set in lockstep, not by mutating the "
+                f"router directly")
+        return shard
+
+    # -- live membership ---------------------------------------------------
+    def add_shard(self, shard_id: int | None = None) -> int:
+        """Grow the mesh by one worker. The joining shard pulls the
+        hosted weights into a fresh swarm replica and warms its compile
+        set first; only then does the router start assigning it traffic
+        (and attached session caches migrate exactly the clients the
+        rendezvous hash re-homes onto it). Returns the new shard id."""
+        self._admin_lock.acquire()
+        try:
+            return self._add_shard_locked(shard_id)
+        finally:
+            self._admin_lock.release()
+
+    def _add_shard_locked(self, shard_id: int | None) -> int:
+        with self._membership_lock:
+            sid = (max(self.shards) + 1 if self.shards else 0) \
+                if shard_id is None else int(shard_id)
+            if sid in self.shards:
+                raise ValueError(f"shard {sid} already exists")
+        replica = self.swarm.add_replica(sid)     # weights pulled here
+        shard = EngineShard(replica, self.config, Telemetry(),
+                            shard_id=sid)
+        try:
+            if self._running:
+                shard.start()
+            # warm every program the hot path can hit on this worker
+            # (mostly jit-cache hits: programs are shared per model
+            # config) BEFORE it takes traffic
+            for model_key, lengths in list(self._warm_plan.items()):
+                shard.warmup(model_key, lengths=lengths)
+            with self._membership_lock:
+                self.shards[sid] = shard
+                if self.swarm.telemetries is not None:
+                    self.swarm.telemetries[sid] = shard.telemetry
+                for cache in self._session_caches:
+                    cache.add_shard(sid)  # adds sid to the shared router
+                self.router.add_shard(sid)  # idempotent after the caches
+        except Exception:
+            # roll the half-joined shard back out: nothing may keep
+            # routing to it or pulling weights into its replica
+            with self._membership_lock:
+                self.shards.pop(sid, None)
+                if self.swarm.telemetries is not None:
+                    self.swarm.telemetries.pop(sid, None)
+                if sid in self.router.shard_ids \
+                        and len(self.router.shard_ids) > 1:
+                    self.router.remove_shard(sid)
+            for cache in self._session_caches:
+                if sid in cache.shards:
+                    try:
+                        cache.remove_shard(sid)
+                    except (KeyError, ValueError):
+                        pass
+            shard.stop()
+            self.swarm.remove_replica(sid)
+            raise
+        return sid
+
+    def remove_shard(self, shard_id: int) -> None:
+        """Shrink the mesh by one worker: the router stops assigning it
+        traffic first, then its queue drains (no request is dropped) and
+        attached session caches hand its clients' carries to the new
+        owner shards."""
+        sid = int(shard_id)
+        with self._admin_lock:
+            with self._membership_lock:
+                if sid not in self.shards:
+                    raise KeyError(f"no shard {sid}; have "
+                                   f"{sorted(self.shards)}")
+                if len(self.shards) == 1:
+                    raise ValueError("cannot remove the last shard")
+                self.router.remove_shard(sid)
+                shard = self.shards.pop(sid)
+            # membership lock released: the departing worker finishes
+            # every request already queued on it (zero drops) while
+            # traffic keeps flowing to the survivors
+            shard.stop()
+            for cache in self._session_caches:
+                cache.remove_shard(sid)  # migrates its clients' carries
+            self.swarm.remove_replica(sid)
 
     def predict(self, model_key: str, window,
                 timeout: float | None = 30.0,
@@ -165,15 +282,20 @@ class ShardedServingEngine:
         """Warm every shard's compile set. Compiled programs are shared
         process-wide per model config, so the first shard pays the
         compiles and the rest are cache hits; returns the number of
-        programs the hot path can hit (per shard)."""
+        programs the hot path can hit (per shard). The warm plan is
+        remembered: a shard joining later warms the same programs before
+        taking traffic."""
         self.swarm.propagate(model_key)   # every replica hosts the key
+        self._warm_plan[model_key] = tuple(lengths) if lengths else None
+        # snapshot: a shard joining mid-warmup must not break iteration
         return max(shard.warmup(model_key, lengths=lengths)
-                   for shard in self.shards)
+                   for shard in list(self.shards.values()))
 
     # -- observation -------------------------------------------------------
     @property
     def shard_telemetries(self) -> list[Telemetry]:
-        return [shard.telemetry for shard in self.shards]
+        shards = dict(self.shards)       # snapshot vs live membership
+        return [shards[sid].telemetry for sid in sorted(shards)]
 
     def snapshot(self) -> dict:
         """Fleet-wide telemetry: per-shard counters merged by
@@ -194,8 +316,11 @@ class ShardedServingEngine:
     def session_cache(self, **kwargs):
         """A ``ShardedSessionCache`` whose client -> shard map is THIS
         mesh's router, so a client's carry lives on the shard its
-        requests are routed to."""
+        requests are routed to. The cache is kept in membership sync:
+        ``add_shard``/``remove_shard`` on this engine migrate its
+        sessions along with the routing."""
         from repro.serving.sessions import ShardedSessionCache
 
-        return ShardedSessionCache(n_shards=self.n_shards,
-                                   router=self.router, **kwargs)
+        cache = ShardedSessionCache(router=self.router, **kwargs)
+        self._session_caches.append(cache)
+        return cache

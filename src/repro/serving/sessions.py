@@ -15,8 +15,11 @@ history start a fresh session from zero state (or raise, with
 ``SessionCache`` instances keyed by a consistent hash of the client id
 (the same rendezvous hash the request router uses, so a client's carry
 lives on the shard its requests land on). LRU/TTL state and locks are
-shard-local: session traffic on one shard never contends with another,
-and a shard leaving takes exactly its own clients' carries with it.
+shard-local: session traffic on one shard never contends with another.
+Membership is LIVE: ``add_shard``/``remove_shard`` follow the router's
+assignment laws — only the clients the rendezvous hash moves (to an
+arriving shard, or off a departing one) are migrated, carries intact,
+and the fleet budget is re-split over the new shard set.
 """
 
 from __future__ import annotations
@@ -24,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import warnings
 from collections import OrderedDict
 from typing import Any
 
@@ -62,6 +66,8 @@ class SessionCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.oversize_admissions = 0   # carries bigger than max_bytes
+        self._warned_oversize = False
 
     def __len__(self) -> int:
         with self._lock:
@@ -99,27 +105,111 @@ class SessionCache:
     def put(self, client_id: str, carry, nbytes: int,
             version: int = 0) -> None:
         evicted = 0
+        warn_oversize = False
         with self._lock:
             now = self._clock()
             old = self._sessions.pop(client_id, None)
             if old is not None:
                 self.nbytes_in_use -= old.nbytes
+            if self.max_bytes is not None and nbytes > self.max_bytes:
+                # a single carry bigger than the whole byte budget: it is
+                # admitted (evicting it would silently restart the
+                # client's stream from zero state) but the cache sits
+                # over budget until normal LRU pressure reclaims it —
+                # warn once and surface ``over_budget`` in stats()
+                # instead of doing that silently
+                self.oversize_admissions += 1
+                if not self._warned_oversize:
+                    self._warned_oversize = True
+                    warn_oversize = True
             s = _Session(carry=carry, nbytes=nbytes, last_used=now,
                          created=old.created if old else now,
                          steps=(old.steps + 1) if old else 1,
                          version=version)
             self._sessions[client_id] = s
             self.nbytes_in_use += nbytes
-            while len(self._sessions) > self.max_sessions or (
-                    self.max_bytes is not None
-                    and self.nbytes_in_use > self.max_bytes
-                    and len(self._sessions) > 1):
-                _, victim = self._sessions.popitem(last=False)
-                self.nbytes_in_use -= victim.nbytes
-                self.evictions += 1
-                evicted += 1
+            evicted = self._evict_over_locked()
+        if warn_oversize:
+            warnings.warn(
+                f"session carry for {client_id!r} is {nbytes} bytes, over "
+                f"the cache's max_bytes={self.max_bytes}: admitted, but "
+                f"the cache is over budget until it is evicted "
+                f"(stats()['over_budget'] tracks this)",
+                RuntimeWarning, stacklevel=2)
         if evicted and self.telemetry is not None:
             self.telemetry.record_eviction(evicted)
+
+    def put_new(self, client_id: str, carry, nbytes: int,
+                version: int = 0) -> bool:
+        """Insert only if absent, atomically — the migration path. A
+        carry arriving from a departing shard must never clobber a
+        fresher one a concurrent step already wrote to the new owner.
+        Returns whether the carry was installed."""
+        with self._lock:
+            if client_id in self._sessions:
+                return False
+            now = self._clock()
+            self._sessions[client_id] = _Session(
+                carry=carry, nbytes=nbytes, last_used=now, created=now,
+                steps=1, version=version)
+            self.nbytes_in_use += nbytes
+            evicted = self._evict_over_locked()
+        if evicted and self.telemetry is not None:
+            self.telemetry.record_eviction(evicted)
+        return True
+
+    def _evict_over_locked(self) -> int:
+        """Evict LRU entries until within the session/byte budgets (a
+        lone over-budget session is kept — see ``put``)."""
+        evicted = 0
+        while len(self._sessions) > self.max_sessions or (
+                self.max_bytes is not None
+                and self.nbytes_in_use > self.max_bytes
+                and len(self._sessions) > 1):
+            _, victim = self._sessions.popitem(last=False)
+            self.nbytes_in_use -= victim.nbytes
+            self.evictions += 1
+            evicted += 1
+        return evicted
+
+    _KEEP = object()               # resize sentinel: leave a budget as-is
+
+    def resize(self, max_sessions=None, max_bytes=_KEEP) -> int:
+        """Change the budgets (fleet re-split on membership change),
+        evicting LRU entries down to the new limits. ``max_bytes=None``
+        removes the byte budget; omit it to keep the current one.
+        Returns #evicted."""
+        with self._lock:
+            if max_sessions is not None:
+                if max_sessions < 1:
+                    raise ValueError("max_sessions must be >= 1")
+                self.max_sessions = max_sessions
+            if max_bytes is not SessionCache._KEEP:
+                self.max_bytes = max_bytes
+            evicted = self._evict_over_locked()
+        if evicted and self.telemetry is not None:
+            self.telemetry.record_eviction(evicted)
+        return evicted
+
+    def clients(self) -> list[str]:
+        """Ids of the currently cached sessions (LRU -> MRU order)."""
+        with self._lock:
+            return list(self._sessions)
+
+    def export(self, client_ids=None) -> list[tuple[str, Any, int, int]]:
+        """Remove and return ``(client_id, carry, nbytes, version)``
+        tuples — for ``client_ids`` (missing ids skipped), or every
+        session when None. This is the migration path: a shard handing
+        its clients to the new owners on membership change."""
+        with self._lock:
+            ids = list(self._sessions) if client_ids is None \
+                else [c for c in client_ids if c in self._sessions]
+            out = []
+            for cid in ids:
+                s = self._sessions.pop(cid)
+                self.nbytes_in_use -= s.nbytes
+                out.append((cid, s.carry, s.nbytes, s.version))
+            return out
 
     def drop(self, client_id: str) -> bool:
         with self._lock:
@@ -150,6 +240,9 @@ class SessionCache:
                 "misses": self.misses,
                 "hit_rate": self.hits / lookups if lookups else 0.0,
                 "evictions": self.evictions,
+                "over_budget": (self.max_bytes is not None
+                                and self.nbytes_in_use > self.max_bytes),
+                "oversize_admissions": self.oversize_admissions,
             }
 
 
@@ -158,54 +251,136 @@ class ShardedSessionCache:
     caches, routed by a consistent hash of the client id.
 
     ``max_sessions`` / ``max_bytes`` are FLEET budgets, split exactly
-    over shards (remainders go to the first shards, so the fleet total
-    never exceeds the budget); eviction is shard-local LRU (a hot shard
-    evicts its own LRU client even while another shard has room — the
-    price of lock-free-across-shards operation). Pass the mesh's
+    over shards (remainders go to the lowest shard ids, so the fleet
+    total never exceeds the budget); eviction is shard-local LRU (a hot
+    shard evicts its own LRU client even while another shard has room —
+    the price of lock-free-across-shards operation). Pass the mesh's
     ``router`` so session shards coincide with serving shards, or omit
-    it for a standalone sharded cache."""
+    it for a standalone sharded cache.
+
+    Membership is a live view of the router: ``add_shard`` /
+    ``remove_shard`` migrate exactly the clients the rendezvous hash
+    moves (carries intact) and re-split the fleet budget — the
+    assignment laws the router is property-tested for extend to the
+    cached sessions."""
 
     def __init__(self, n_shards: int = 2, max_sessions: int = 4096,
                  max_bytes: int | None = None, ttl_s: float | None = None,
                  telemetry: Telemetry | None = None, clock=time.monotonic,
                  router=None):
-        if n_shards < 1:
+        if router is None and n_shards < 1:
             raise ValueError("n_shards must be >= 1")
-        self.n_shards = n_shards
         self.router = router if router is not None \
             else ConsistentRouter(range(n_shards))
-        bad = [s for s in self.router.shard_ids
-               if not 0 <= s < n_shards]
-        if bad:
-            raise ValueError(
-                f"router shard ids {bad} are outside this cache's "
-                f"0..{n_shards - 1} shard range")
         self.telemetry = telemetry
-        if max_sessions < n_shards:
+        self.max_sessions_fleet = max_sessions
+        self.max_bytes_fleet = max_bytes
+        self.ttl_s = ttl_s
+        self._clock = clock
+        self._members_lock = threading.Lock()
+        ids = self.router.shard_ids
+        if max_sessions < len(ids):
             raise ValueError(
                 f"max_sessions={max_sessions} must be >= n_shards="
-                f"{n_shards} (every shard needs at least one slot)")
+                f"{len(ids)} (every shard needs at least one slot)")
+        self.shards: dict[int, SessionCache] = {
+            sid: SessionCache(
+                max_sessions=self._split(max_sessions, i, len(ids)),
+                max_bytes=(None if max_bytes is None
+                           else self._split(max_bytes, i, len(ids))),
+                ttl_s=ttl_s, telemetry=telemetry, clock=clock)
+            for i, sid in enumerate(ids)}
 
-        def split(total: int, i: int) -> int:
-            return total // n_shards + (1 if i < total % n_shards else 0)
+    @staticmethod
+    def _split(total: int, i: int, n: int) -> int:
+        return total // n + (1 if i < total % n else 0)
 
-        self.shards = [SessionCache(
-            max_sessions=split(max_sessions, i),
-            max_bytes=None if max_bytes is None else split(max_bytes, i),
-            ttl_s=ttl_s, telemetry=telemetry, clock=clock)
-            for i in range(n_shards)]
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    # -- live membership ---------------------------------------------------
+    def _resplit_locked(self) -> None:
+        n = len(self.shards)
+        for i, sid in enumerate(sorted(self.shards)):
+            self.shards[sid].resize(
+                max_sessions=self._split(self.max_sessions_fleet, i, n),
+                max_bytes=(None if self.max_bytes_fleet is None
+                           else self._split(self.max_bytes_fleet, i, n)))
+
+    def add_shard(self, shard_id: int) -> None:
+        """Open a shard-local cache for ``shard_id`` (adding it to the
+        router if the caller has not already) and migrate exactly the
+        clients the rendezvous hash re-homes onto it, carries intact."""
+        sid = int(shard_id)
+        with self._members_lock:
+            if sid in self.shards:
+                return
+            if self.max_sessions_fleet < len(self.shards) + 1:
+                raise ValueError(
+                    f"fleet max_sessions={self.max_sessions_fleet} cannot "
+                    f"give shard {sid} a slot (already {len(self.shards)} "
+                    f"shards)")
+            self.shards[sid] = SessionCache(
+                max_sessions=1, ttl_s=self.ttl_s, telemetry=self.telemetry,
+                clock=self._clock)
+            if sid not in self.router.shard_ids:
+                self.router.add_shard(sid)
+            self._resplit_locked()
+            # minimal disruption: only clients the new shard WINS move;
+            # insert-if-absent so a fresher carry a concurrent step
+            # already wrote to the new shard is never clobbered
+            for old_sid, cache in list(self.shards.items()):
+                if old_sid == sid:
+                    continue
+                moving = [c for c in cache.clients()
+                          if self.router.shard_for(c) == sid]
+                for cid, carry, nbytes, version in cache.export(moving):
+                    self.shards[sid].put_new(cid, carry, nbytes,
+                                             version=version)
+
+    def remove_shard(self, shard_id: int) -> None:
+        """Close ``shard_id``'s cache (removing it from the router if the
+        caller has not already) and hand its clients — and only its
+        clients — to their new owner shards, carries intact.
+
+        A ``get`` racing the migration window can still miss (the carry
+        is in flight between shards); a re-homed client that keeps
+        streaming through the change should supply its history on a
+        miss (standard consistent-hashing cache semantics — the session
+        runner replays it through the same compiled step). ``put`` is
+        loss-proof: one landing in a just-removed shard's cache detects
+        the change and re-routes itself."""
+        sid = int(shard_id)
+        with self._members_lock:
+            if sid not in self.shards:
+                raise KeyError(f"no session shard {sid}; have "
+                               f"{sorted(self.shards)}")
+            if len(self.shards) == 1:
+                raise ValueError("cannot remove the last session shard")
+            if sid in self.router.shard_ids:
+                self.router.remove_shard(sid)
+            departing = self.shards.pop(sid)
+            self._resplit_locked()
+            for cid, carry, nbytes, version in departing.export():
+                # insert-if-absent: a concurrent step may already have
+                # written a fresher carry on the new owner
+                self.shards[self.router.shard_for(cid)].put_new(
+                    cid, carry, nbytes, version=version)
 
     def shard_for(self, client_id: str) -> int:
         return self.router.shard_for(str(client_id))
 
     def _shard(self, client_id: str) -> SessionCache:
         sid = self.shard_for(client_id)
-        if not 0 <= sid < self.n_shards:      # router mutated after init
+        cache = self.shards.get(sid)
+        if cache is None:                     # router mutated directly
             raise KeyError(
-                f"router returned shard {sid} for {client_id!r} but this "
-                f"cache has {self.n_shards} shards — the shard set is "
-                f"pinned at construction")
-        return self.shards[sid]
+                f"router maps {client_id!r} to shard {sid} but this cache "
+                f"has no such shard — change membership through "
+                f"add_shard/remove_shard (or the owning mesh), not by "
+                f"mutating the router")
+        return cache
 
     # -- SessionCache API, routed ------------------------------------------
     def get(self, client_id: str):
@@ -216,47 +391,62 @@ class ShardedSessionCache:
 
     def put(self, client_id: str, carry, nbytes: int,
             version: int = 0) -> None:
-        self._shard(client_id).put(client_id, carry, nbytes,
-                                   version=version)
+        while True:
+            sid = self.shard_for(client_id)
+            cache = self._shard(client_id)
+            cache.put(client_id, carry, nbytes, version=version)
+            if self.shards.get(sid) is cache \
+                    and self.shard_for(client_id) == sid:
+                return
+            # membership changed mid-put: the entry may sit in a cache
+            # that was just removed (its export already ran) or that no
+            # longer owns the client — never lose the carry silently;
+            # pull it back and re-route
+            cache.drop(client_id)
 
     def drop(self, client_id: str) -> bool:
         return self._shard(client_id).drop(client_id)
 
     def __len__(self) -> int:
-        return sum(len(s) for s in self.shards)
+        return sum(len(s) for s in list(self.shards.values()))
 
     def __contains__(self, client_id: str) -> bool:
         return client_id in self._shard(client_id)
 
     @property
     def hits(self) -> int:
-        return sum(s.hits for s in self.shards)
+        return sum(s.hits for s in list(self.shards.values()))
 
     @property
     def misses(self) -> int:
-        return sum(s.misses for s in self.shards)
+        return sum(s.misses for s in list(self.shards.values()))
 
     @property
     def evictions(self) -> int:
-        return sum(s.evictions for s in self.shards)
+        return sum(s.evictions for s in list(self.shards.values()))
 
     @property
     def nbytes_in_use(self) -> int:
-        return sum(s.nbytes_in_use for s in self.shards)
+        return sum(s.nbytes_in_use for s in list(self.shards.values()))
 
     def stats(self) -> dict:
         """Fleet aggregate plus per-shard session/byte occupancy."""
-        shard_stats = [s.stats() for s in self.shards]
+        shards = dict(self.shards)       # snapshot vs live membership
+        shard_stats = {sid: shards[sid].stats() for sid in sorted(shards)}
         lookups = self.hits + self.misses
         return {
-            "sessions": sum(st["sessions"] for st in shard_stats),
-            "nbytes_in_use": sum(st["nbytes_in_use"] for st in shard_stats),
+            "sessions": sum(st["sessions"] for st in shard_stats.values()),
+            "nbytes_in_use": sum(st["nbytes_in_use"]
+                                 for st in shard_stats.values()),
             "hits": self.hits,
             "misses": self.misses,
             "hit_rate": self.hits / lookups if lookups else 0.0,
             "evictions": self.evictions,
+            "over_budget": any(st["over_budget"]
+                               for st in shard_stats.values()),
             "shards": len(self.shards),
-            "sessions_by_shard": [st["sessions"] for st in shard_stats],
+            "sessions_by_shard": [st["sessions"]
+                                  for st in shard_stats.values()],
         }
 
 
@@ -289,6 +479,14 @@ class RecurrentSessionRunner:
         self._nbytes = fc.carry_nbytes(1)
         self.reprimes = 0            # carries replayed onto new weights
         self.carried_across_swap = 0  # carries reused without history
+        window = getattr(fc, "window", None)
+        if window and getattr(fc, "feature_dim", 0):
+            import numpy as np
+
+            # compile the full-window replay program HERE, off the
+            # serving path — otherwise the first cache miss / swap
+            # re-prime pays the jit compile at serve time
+            fc.replay(np.zeros((1, window, fc.feature_dim), np.float32))
 
     def _resolve(self):
         fc = self._provider() if self._provider is not None \
@@ -317,14 +515,24 @@ class RecurrentSessionRunner:
         x_t = np.asarray(x_t, np.float32)
         if x_t.ndim == 1:
             x_t = x_t[None, :]
+        hist = None
+        if history is not None:
+            hist = np.asarray(history, np.float32)
+            window = getattr(fc, "window", None)
+            if window and hist.shape[0] > window:
+                # clamp to the newest `window` steps: the serving
+                # contract replays window prefixes (the model is causal
+                # over a sliding window), and an unbounded set of
+                # history lengths would compile one replay program per
+                # distinct length
+                hist = hist[-window:]
         entry = self.cache.get_entry(client_id)
         carry = None
         stamp = version
         if entry is not None:
             carry, carry_version = entry
             if carry_version != version:
-                if history is not None:
-                    hist = np.asarray(history, np.float32)
+                if hist is not None:
                     _, _, carry = fc.replay(hist[None])
                     self.reprimes += 1
                     if self.cache.telemetry is not None:
@@ -337,8 +545,7 @@ class RecurrentSessionRunner:
                     self.carried_across_swap += 1
                     stamp = carry_version
         if carry is None:
-            if history is not None:
-                hist = np.asarray(history, np.float32)
+            if hist is not None:
                 _, _, carry = fc.replay(hist[None])
             elif self.on_miss == "error":
                 raise KeyError(

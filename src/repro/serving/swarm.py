@@ -62,8 +62,12 @@ class ShardSwarm:
             fetch, and what lets shard flushes execute concurrently
             when multiple (real or forced-host) devices exist;
             "auto" picks "device" iff more than one device is visible.
-        telemetries: optional per-shard ``Telemetry`` list; a pull into
+        telemetries: optional ``{shard_id: Telemetry}`` map; a pull into
             shard i records one swap on ``telemetries[i]``.
+
+    Membership is live: ``add_replica`` seeds a new shard's registry
+    from the primary (the joining shard pulls weights before taking
+    traffic) and ``remove_replica`` drops a departing shard's registry.
     """
 
     def __init__(self, n_shards: int, primary: ModelRegistry | None = None,
@@ -82,8 +86,8 @@ class ShardSwarm:
             transfer = "device" if len(jax.local_devices()) > 1 \
                 else "reference"
         self.primary = primary if primary is not None else ModelRegistry()
-        self.replicas = [ModelRegistry() for _ in range(n_shards)]
-        self.n_shards = n_shards
+        self.replicas: dict[int, ModelRegistry] = {
+            sid: ModelRegistry() for sid in range(n_shards)}
         self.max_skew = max_skew
         self.telemetries = telemetries
         self._transfer = transfer
@@ -102,6 +106,37 @@ class ShardSwarm:
             for key, _ in self.primary.entries():
                 self._pull_lagging_locked(key, force=True)
         self.attach()
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def shard_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self.replicas)
+
+    # -- live membership ---------------------------------------------------
+    def add_replica(self, shard_id: int) -> ModelRegistry:
+        """Open a replica registry for a joining shard and pull every
+        hosted key into it (the join-time weight fetch, BEFORE the shard
+        takes traffic). Returns the new replica."""
+        sid = int(shard_id)
+        with self._lock:
+            if sid in self.replicas:
+                raise ValueError(f"shard {sid} already has a replica")
+            self.replicas[sid] = ModelRegistry()
+            for key in self.primary.keys():
+                self._pull_locked(sid, key, self.primary.get_entry(key))
+            return self.replicas[sid]
+
+    def remove_replica(self, shard_id: int) -> None:
+        """Drop a departing shard's replica registry (no-op if absent —
+        the mesh may remove a shard it already detached)."""
+        with self._lock:
+            self.replicas.pop(int(shard_id), None)
+            if self.telemetries is not None:
+                self.telemetries.pop(int(shard_id), None)
 
     # -- primary subscription lifecycle ------------------------------------
     def attach(self) -> "ShardSwarm":
@@ -171,7 +206,7 @@ class ShardSwarm:
     def _pull_lagging_locked(self, key: str, force: bool = False) -> int:
         entry = self.primary.get_entry(key)
         pulled = 0
-        for sid, replica in enumerate(self.replicas):
+        for sid, replica in self.replicas.items():
             have = replica.version(key) if key in replica else None
             behind = have is None or entry.version - have > self.max_skew
             if force:
@@ -207,7 +242,7 @@ class ShardSwarm:
         if moved:
             # only real copies count: reference pulls share buffers
             self.bytes_pulled += _params_nbytes(params)
-        if self.telemetries is not None:
+        if self.telemetries is not None and sid in self.telemetries:
             self.telemetries[sid].record_swap()
 
     def _transfer_params(self, params: PyTree, sid: int) -> PyTree:
@@ -247,7 +282,7 @@ class ShardSwarm:
         with self._lock:
             vec: dict = {"primary": self.primary.version(key)
                          if key in self.primary else 0}
-            for sid, replica in enumerate(self.replicas):
+            for sid, replica in sorted(self.replicas.items()):
                 vec[sid] = replica.version(key) if key in replica else 0
             return vec
 

@@ -40,6 +40,12 @@ class _Reservoir:
 class Telemetry:
     """Counters + reservoirs for one serving engine (or one model)."""
 
+    # per-client attribution tracks at most this many distinct client
+    # ids (like the reservoirs, memory must stay bounded on a
+    # long-running engine); requests from clients beyond the cap are
+    # counted in ``untracked_client_requests``
+    MAX_TRACKED_CLIENTS = 4096
+
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
         self._lock = threading.Lock()
@@ -54,6 +60,8 @@ class Telemetry:
         self.swaps = 0             # weight hot-swaps observed (cumulative)
         self.reprimes = 0          # session carries re-primed after a swap
         self.requests_by_version: dict[int, int] = {}
+        self.requests_by_client: dict[str, int] = {}
+        self.untracked_client_requests = 0
         self._latency = _Reservoir()
         self._staleness = _Reservoir()   # model age at serve time (s)
         self._batch_sizes = _Reservoir()
@@ -71,11 +79,14 @@ class Telemetry:
                 self._staleness.add(staleness_s)
 
     def record_requests(self, latencies_s, version: int | None = None,
-                        staleness_s: float | None = None) -> None:
+                        staleness_s: float | None = None,
+                        client_ids=None) -> None:
         """Record one flush's worth of requests under a single lock
         acquisition (the micro-batcher calls this once per flush instead
         of ``record_request`` per row — less lock churn on the hot
-        path). All rows share the flush's version/staleness."""
+        path). All rows share the flush's version/staleness;
+        ``client_ids`` (optional, one per row, None entries for anonymous
+        requests) feed per-client attribution."""
         with self._lock:
             for lat in latencies_s:
                 self.requests += 1
@@ -86,6 +97,17 @@ class Telemetry:
                 self.requests_by_version[version] = \
                     self.requests_by_version.get(version, 0) \
                     + len(latencies_s)
+            if client_ids:
+                for cid in client_ids:
+                    if cid is None:
+                        continue
+                    if cid in self.requests_by_client or \
+                            len(self.requests_by_client) \
+                            < self.MAX_TRACKED_CLIENTS:
+                        self.requests_by_client[cid] = \
+                            self.requests_by_client.get(cid, 0) + 1
+                    else:
+                        self.untracked_client_requests += 1
 
     def record_swap(self, n: int = 1) -> None:
         with self._lock:
@@ -141,6 +163,10 @@ class Telemetry:
                 "staleness_p50_s": self._staleness.percentile(50),
                 "staleness_p95_s": self._staleness.percentile(95),
                 "requests_by_version": dict(self.requests_by_version),
+                "requests_by_client": dict(self.requests_by_client),
+                "unique_clients": len(self.requests_by_client),
+                "untracked_client_requests":
+                    self.untracked_client_requests,
             }
 
     def reset_clock(self) -> None:
@@ -156,6 +182,8 @@ class Telemetry:
             self.real_slots = 0
             self.padded_slots = 0
             self.requests_by_version = {}
+            self.requests_by_client = {}
+            self.untracked_client_requests = 0
             self._latency = _Reservoir()
             self._staleness = _Reservoir()
             self._batch_sizes = _Reservoir()
@@ -176,8 +204,10 @@ class Telemetry:
         stale: list[float] = []
         totals = {"requests": 0, "batches": 0, "real_slots": 0,
                   "padded_slots": 0, "cache_hits": 0, "cache_misses": 0,
-                  "cache_evictions": 0, "swaps": 0, "reprimes": 0}
+                  "cache_evictions": 0, "swaps": 0, "reprimes": 0,
+                  "untracked_client_requests": 0}
         by_version: dict[int, int] = {}
+        by_client: dict[str, int] = {}
         by_shard: list[int] = []
         elapsed = 1e-9
         for tel in telemetries:
@@ -188,6 +218,8 @@ class Telemetry:
                 by_shard.append(tel.requests)
                 for v, n in tel.requests_by_version.items():
                     by_version[v] = by_version.get(v, 0) + n
+                for c, n in tel.requests_by_client.items():
+                    by_client[c] = by_client.get(c, 0) + n
                 lat.extend(tel._latency._buf)
                 stale.extend(tel._staleness._buf)
         lookups = totals["cache_hits"] + totals["cache_misses"]
@@ -212,6 +244,10 @@ class Telemetry:
             "staleness_p50_s": _percentile(stale, 50),
             "staleness_p95_s": _percentile(stale, 95),
             "requests_by_version": by_version,
+            "requests_by_client": by_client,
+            "unique_clients": len(by_client),
+            "untracked_client_requests":
+                totals["untracked_client_requests"],
         }
 
     @staticmethod

@@ -1,0 +1,798 @@
+"""Socket transport for the serving mesh: each shard is an
+``EngineShard`` (over its own replica ``ModelRegistry``, with a
+shard-local ``SessionCache``) running in its OWN OS process, connected
+to the router process over a TCP socket — the multi-node half of the
+paper's distributed story applied to serving (training already
+distributes via async local SGD; this distributes the forecast fleet).
+
+``MultiProcessServingEngine`` mirrors the in-process
+``ShardedServingEngine`` API (``submit`` / ``predict`` / ``warmup`` /
+``add_shard`` / ``remove_shard`` / ``snapshot`` / ``version_vector``)
+and keeps the same guarantees across process boundaries:
+
+- weight publishes against the primary registry are PUSHED to each
+  worker as serialized checkpoints (``ModelRegistry.save_bytes`` ->
+  ``load_bytes`` with ``jax.device_put`` on the receiving side) under
+  the ``max_skew`` staleness bound — every ``version_vector`` sample is
+  taken under the same lock the push path holds, so the bound is
+  observable atomically, exactly like ``ShardSwarm``;
+- membership is live: a joining shard receives every hosted model and
+  warms its compile set BEFORE the router assigns it traffic; a leaving
+  shard is taken out of the router first, drains its queue (zero
+  drops), and hands its session carries back for migration to the new
+  owner shards;
+- session affinity: ``step`` routes a client's streaming state to the
+  worker process owning that client, where a shard-local
+  ``SessionCache`` + ``RecurrentSessionRunner`` serve it O(1).
+
+Wire format (length-prefixed msgpack frames; see README):
+
+    frame    := uint32_be payload_length ++ msgpack(payload)
+    payload  := {"op": str, "id": int, ...}   # replies echo "id"
+    ndarray  := {"nd": true, "dtype": str, "shape": [int...],
+                 "data": bytes}
+    weights  := npz checkpoint bytes (repro.checkpoint.io), so config,
+                EVT calibration and model version ride along
+
+Ops: ``publish`` / ``submit`` / ``step`` / ``warmup`` / ``stats`` /
+``restore`` / ``extract`` / ``reset`` / ``drain`` / ``bye``. Replies
+are ``result`` (forecast rows), ``ok`` (control) or ``error``.
+Responses may arrive out of order — ``submit`` results resolve futures
+by id as the worker's micro-batcher flushes them.
+"""
+
+from __future__ import annotations
+
+import itertools
+import multiprocessing as mp
+import os
+import socket
+import struct
+import threading
+from concurrent.futures import Future
+
+import msgpack
+import numpy as np
+
+from repro.serving.engine import BatcherConfig
+from repro.serving.router import ConsistentRouter
+from repro.serving.telemetry import _percentile
+
+_HDR = struct.Struct(">I")
+
+
+# -- framing ---------------------------------------------------------------
+
+def pack_array(a) -> dict:
+    a = np.ascontiguousarray(a)
+    return {"nd": True, "dtype": a.dtype.str, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def unpack_array(d: dict) -> np.ndarray:
+    return np.frombuffer(bytearray(d["data"]),
+                         dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+class Connection:
+    """Length-prefixed msgpack frames over one socket; writes are
+    locked (results are sent from flush-worker callbacks concurrently
+    with control replies)."""
+
+    def __init__(self, sock: socket.socket):
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._sock = sock
+        self._rfile = sock.makefile("rb")
+        self._wlock = threading.Lock()
+
+    def send(self, msg: dict) -> None:
+        data = msgpack.packb(msg, use_bin_type=True)
+        with self._wlock:
+            self._sock.sendall(_HDR.pack(len(data)) + data)
+
+    def recv(self) -> dict | None:
+        """One frame, or None on EOF/closed connection."""
+        try:
+            hdr = self._rfile.read(_HDR.size)
+            if len(hdr) < _HDR.size:
+                return None
+            (n,) = _HDR.unpack(hdr)
+            data = self._rfile.read(n)
+            if len(data) < n:
+                return None
+            # strict_map_key=False: telemetry maps are keyed by int
+            # model versions
+            return msgpack.unpackb(data, raw=False, strict_map_key=False)
+        except (OSError, ValueError):
+            return None
+
+    def close(self) -> None:
+        try:
+            self._rfile.close()
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def _pack_carry(carry) -> list:
+    """An LSTM carry — a tuple of per-layer (h, c) arrays — as frames."""
+    return [[pack_array(np.asarray(h)), pack_array(np.asarray(c))]
+            for h, c in carry]
+
+
+def _unpack_carry(packed):
+    import jax.numpy as jnp
+
+    return tuple((jnp.asarray(unpack_array(h)), jnp.asarray(unpack_array(c)))
+                 for h, c in packed)
+
+
+# -- worker process --------------------------------------------------------
+
+def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
+                 max_sessions: int) -> None:
+    """Entry point of one shard worker process (``spawn`` context): an
+    ``EngineShard`` over a local replica registry plus a shard-local
+    session cache, serving one router connection until ``bye``/EOF."""
+    # heavy imports happen HERE, in the child, after spawn
+    import jax  # noqa: F401  (initializes the child's own backend)
+
+    from repro.serving.engine import EngineShard
+    from repro.serving.registry import ModelRegistry
+    from repro.serving.sessions import (RecurrentSessionRunner,
+                                        SessionCache)
+    from repro.serving.telemetry import Telemetry
+
+    registry = ModelRegistry()
+    telemetry = Telemetry()
+    shard = EngineShard(registry, config, telemetry, shard_id=shard_id)
+    cache = SessionCache(max_sessions=max_sessions)
+    runners: dict[str, RecurrentSessionRunner] = {}
+
+    srv = socket.create_server((host, 0))
+    pipe.send(srv.getsockname()[1])
+    pipe.close()
+    sock, _ = srv.accept()
+    srv.close()
+    conn = Connection(sock)
+    shard.start()
+    draining = False
+
+    def _send_result(rid, fut) -> None:
+        try:
+            y, p = fut.result()
+            conn.send({"op": "result", "id": rid, "y": y, "p": p,
+                       "version": getattr(fut, "model_version", None)})
+        except Exception as e:  # noqa: BLE001 — fail the request, not the worker
+            conn.send({"op": "error", "id": rid,
+                       "message": f"{type(e).__name__}: {e}"})
+
+    while True:
+        msg = conn.recv()
+        if msg is None:
+            break
+        op, rid = msg.get("op"), msg.get("id")
+        try:
+            if op == "publish":
+                repeat = msg["model"] in registry
+                registry.load_bytes(bytes(msg["ckpt"]), key=msg["model"],
+                                    device_put=True)
+                if repeat:           # pushes count as swaps, like swarm
+                    telemetry.record_swap()     # pulls do in-process
+                conn.send({"op": "ok", "id": rid,
+                           "version": registry.version(msg["model"])})
+            elif op == "submit":
+                if draining:
+                    raise RuntimeError("shard is draining")
+                fut = shard.submit(msg["model"], unpack_array(msg["window"]),
+                                   client_id=msg.get("client"))
+                # resolves on the flush worker thread, out of order
+                fut.add_done_callback(
+                    lambda f, rid=rid: _send_result(rid, f))
+            elif op == "step":
+                key = msg["model"]
+                runner = runners.get(key)
+                if runner is None:
+                    runner = runners.setdefault(key, RecurrentSessionRunner(
+                        lambda key=key: registry.get(key), cache))
+                hist = (unpack_array(msg["history"])
+                        if msg.get("history") is not None else None)
+                y, p = runner.step(msg["client"], unpack_array(msg["x"]),
+                                   history=hist)
+                conn.send({"op": "result", "id": rid, "y": y, "p": p,
+                           "version": None})
+            elif op == "warmup":
+                lens = (tuple(msg["lengths"]) if msg.get("lengths")
+                        else None)
+                conn.send({"op": "ok", "id": rid,
+                           "programs": shard.warmup(msg["model"],
+                                                    lengths=lens)})
+            elif op == "restore":
+                # insert-if-absent: a migrated carry must never clobber
+                # a fresher one a concurrent step already wrote here
+                installed = sum(
+                    cache.put_new(s["client"], _unpack_carry(s["carry"]),
+                                  s["nbytes"], version=s["version"])
+                    for s in msg["sessions"])
+                conn.send({"op": "ok", "id": rid,
+                           "installed": installed})
+            elif op == "extract":
+                out = [{"client": cid, "carry": _pack_carry(carry),
+                        "nbytes": nbytes, "version": version}
+                       for cid, carry, nbytes, version
+                       in cache.export(msg.get("clients"))]
+                conn.send({"op": "ok", "id": rid, "sessions": out})
+            elif op == "stats":
+                conn.send({
+                    "op": "ok", "id": rid, "pid": os.getpid(),
+                    "telemetry": telemetry.snapshot(),
+                    "latency_s": list(telemetry._latency._buf),
+                    "staleness_s": list(telemetry._staleness._buf),
+                    "cache": cache.stats(),
+                    "clients": cache.clients(),
+                    "versions": {k: registry.version(k)
+                                 for k in registry.keys()}})
+            elif op == "reset":
+                telemetry.reset_clock()
+                conn.send({"op": "ok", "id": rid})
+            elif op == "drain":
+                draining = True
+                shard.stop()         # drains the queue: every queued
+                # request's result frame is sent before this returns
+                out = [{"client": cid, "carry": _pack_carry(carry),
+                        "nbytes": nbytes, "version": version}
+                       for cid, carry, nbytes, version in cache.export()]
+                conn.send({"op": "ok", "id": rid, "sessions": out})
+            elif op == "bye":
+                draining = True
+                # drain BEFORE acking: every queued request's result
+                # frame hits the socket (FIFO) ahead of the goodbye, so
+                # a router that stops with submits in flight still
+                # resolves them — parity with the thread mesh's stop()
+                shard.stop()
+                conn.send({"op": "ok", "id": rid})
+                break
+            else:
+                raise ValueError(f"unknown op {op!r}")
+        except Exception as e:  # noqa: BLE001 — fail the op, not the worker
+            conn.send({"op": "error", "id": rid,
+                       "message": f"{type(e).__name__}: {e}"})
+    shard.stop()
+    conn.close()
+
+
+# -- router-side proxy -----------------------------------------------------
+
+class RemoteShard:
+    """Client proxy for one shard worker process: the ``EngineShard``
+    submit surface plus the transport control ops, demultiplexing
+    out-of-order replies onto per-request futures."""
+
+    def __init__(self, shard_id: int, process, conn: Connection):
+        self.shard_id = shard_id
+        self.process = process
+        self.versions: dict[str, int] = {}   # acked published versions
+        self._conn = conn
+        self._pending: dict[int, Future] = {}
+        self._plock = threading.Lock()
+        self._ids = itertools.count(1)
+        self._reader = threading.Thread(
+            target=self._read_loop, name=f"transport-proxy-{shard_id}",
+            daemon=True)
+        self._reader.start()
+
+    def _read_loop(self) -> None:
+        while True:
+            msg = self._conn.recv()
+            if msg is None:
+                with self._plock:
+                    pending, self._pending = self._pending, {}
+                for fut in pending.values():
+                    if not fut.done():
+                        fut.set_exception(ConnectionError(
+                            f"shard {self.shard_id} connection closed"))
+                return
+            with self._plock:
+                fut = self._pending.pop(msg.get("id"), None)
+            if fut is None:
+                continue
+            if msg["op"] == "error":
+                fut.set_exception(RuntimeError(
+                    f"shard {self.shard_id}: {msg['message']}"))
+            elif msg["op"] == "result":
+                fut.model_version = msg.get("version")
+                fut.set_result((msg["y"], msg["p"]))
+            else:
+                fut.set_result(msg)
+
+    def _request(self, msg: dict) -> Future:
+        rid = next(self._ids)
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        with self._plock:
+            self._pending[rid] = fut
+        msg["id"] = rid
+        try:
+            self._conn.send(msg)
+        except OSError as e:
+            with self._plock:
+                self._pending.pop(rid, None)
+            raise ConnectionError(
+                f"shard {self.shard_id} send failed: {e}") from e
+        return fut
+
+    def _call(self, msg: dict, timeout: float = 60.0) -> dict:
+        return self._request(msg).result(timeout=timeout)
+
+    # -- EngineShard surface ----------------------------------------------
+    def submit(self, model_key: str, window, client_id=None) -> Future:
+        return self._request({"op": "submit", "model": model_key,
+                              "client": client_id,
+                              "window": pack_array(np.asarray(window))})
+
+    def step(self, model_key: str, client_id: str, x_t, history=None):
+        msg = {"op": "step", "model": model_key, "client": client_id,
+               "x": pack_array(np.asarray(x_t, np.float32))}
+        if history is not None:
+            msg["history"] = pack_array(np.asarray(history, np.float32))
+        return self._call(msg)
+
+    def warmup(self, model_key: str, lengths=None) -> int:
+        return self._call({"op": "warmup", "model": model_key,
+                           "lengths": list(lengths) if lengths else None},
+                          timeout=300.0)["programs"]
+
+    # -- transport control -------------------------------------------------
+    def publish(self, model_key: str, ckpt: bytes) -> int:
+        v = self._call({"op": "publish", "model": model_key,
+                        "ckpt": ckpt}, timeout=300.0)["version"]
+        self.versions[model_key] = v
+        return v
+
+    def stats(self) -> dict:
+        return self._call({"op": "stats"})
+
+    def reset_clock(self) -> None:
+        self._call({"op": "reset"})
+
+    def restore(self, sessions: list[dict]) -> int:
+        """Install migrated session carries (insert-if-absent, one
+        frame for the whole batch); returns how many were installed."""
+        return self._call({"op": "restore",
+                           "sessions": sessions})["installed"]
+
+    def extract(self, clients) -> list[dict]:
+        return self._call({"op": "extract",
+                           "clients": list(clients)})["sessions"]
+
+    def drain(self) -> list[dict]:
+        """Stop accepting work, finish the queue (every queued request
+        resolves first), and return the worker's session carries for
+        migration."""
+        return self._call({"op": "drain"}, timeout=300.0)["sessions"]
+
+    def close(self, timeout: float = 60.0) -> None:
+        try:
+            # the bye ack arrives after the worker drains its queue, so
+            # every in-flight submit future resolves before the socket
+            # goes away
+            self._call({"op": "bye"}, timeout=timeout)
+        except Exception:  # noqa: BLE001 — already gone is fine
+            pass
+        self._conn.close()
+        self.process.join(timeout)
+        if self.process.is_alive():
+            self.process.terminate()
+            self.process.join(timeout)
+
+
+def spawn_shard(shard_id: int, config: BatcherConfig | None = None,
+                ctx=None, host: str = "127.0.0.1",
+                max_sessions: int = 4096,
+                spawn_timeout_s: float = 180.0) -> RemoteShard:
+    """Start one shard worker process and connect to it. The child binds
+    an ephemeral port and reports it back over a pipe before accepting
+    the router's connection."""
+    ctx = ctx or mp.get_context("spawn")
+    parent_pipe, child_pipe = ctx.Pipe()
+    proc = ctx.Process(target=_worker_main,
+                       args=(child_pipe, shard_id,
+                             config or BatcherConfig(), host, max_sessions),
+                       name=f"shard-worker-{shard_id}", daemon=True)
+    proc.start()
+    child_pipe.close()
+    if not parent_pipe.poll(spawn_timeout_s):
+        proc.terminate()
+        raise TimeoutError(
+            f"shard worker {shard_id} did not report a port within "
+            f"{spawn_timeout_s}s")
+    port = parent_pipe.recv()
+    parent_pipe.close()
+    sock = socket.create_connection((host, port), timeout=30.0)
+    return RemoteShard(shard_id, proc, Connection(sock))
+
+
+# -- the multi-process mesh ------------------------------------------------
+
+class MultiProcessServingEngine:
+    """The sharded serving mesh over OS processes: the
+    ``ShardedServingEngine`` API, with every shard an ``EngineShard``
+    worker process behind the socket transport.
+
+    ``registry`` is the PRIMARY (defaults to a fresh ``ModelRegistry``):
+    publishes against it — ``register`` / ``swap`` / ``load``, e.g. a
+    ``WeightPublisher`` — are serialized via the checkpoint machinery
+    and pushed to every worker whose acked version lags more than
+    ``max_skew``, with a convergence sweep available via ``propagate``.
+    Routing (client-affine + anonymous round-robin) and live membership
+    behave exactly like the in-process mesh.
+    """
+
+    def __init__(self, registry=None, config: BatcherConfig | None = None,
+                 n_shards: int = 2, max_skew: int = 1,
+                 max_sessions: int = 4096, host: str = "127.0.0.1"):
+        from repro.serving.registry import ModelRegistry
+
+        if n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if max_skew < 0:
+            raise ValueError("max_skew must be >= 0")
+        self.registry = registry if registry is not None else ModelRegistry()
+        self.config = config or BatcherConfig()
+        self.max_skew = max_skew
+        self.router = ConsistentRouter(range(n_shards))
+        self.workers: dict[int, RemoteShard] = {}
+        self.pulls = 0               # weight pushes to workers
+        self.bytes_pulled = 0        # serialized checkpoint bytes shipped
+        self._host = host
+        self._max_sessions = max_sessions
+        self._ctx = mp.get_context("spawn")
+        # push lock: publishes/pushes and version_vector — samples are
+        # taken under it, so the skew bound is observable atomically.
+        # route lock: submit/step routing. SEPARATE locks so a weight
+        # push (serialize + synchronous worker acks) never stalls the
+        # request intake; membership mutations take BOTH, always push
+        # lock first (fixed order -> no deadlock).
+        self._lock = threading.RLock()
+        self._route_lock = threading.RLock()
+        self._admin_lock = threading.RLock()
+        self._anon_counters: dict[str, itertools.count] = {}
+        self._warm_plan: dict[str, tuple | None] = {}
+        self._attached = False
+        self._stopped_versions: dict[int, dict] = {}
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.workers) or len(self.router.shard_ids)
+
+    @property
+    def shard_ids(self) -> list[int]:
+        return sorted(self.workers)
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "MultiProcessServingEngine":
+        with self._admin_lock:
+            spawned = {sid: spawn_shard(sid, self.config, self._ctx,
+                                        self._host, self._max_sessions)
+                       for sid in self.router.shard_ids
+                       if sid not in self.workers}
+            with self._lock, self._route_lock:
+                self.workers.update(spawned)
+            with self._lock:
+                for key in self.registry.keys():
+                    self._push_locked(key, force=True)
+                if not self._attached:
+                    self.registry.subscribe(self._on_publish)
+                    self._attached = True
+        return self
+
+    def stop(self) -> None:
+        with self._admin_lock:
+            with self._lock, self._route_lock:
+                if self._attached:
+                    self.registry.unsubscribe(self._on_publish)
+                    self._attached = False
+                workers, self.workers = dict(self.workers), {}
+                # keep the fleet's last acked versions observable after
+                # the processes are gone (version_vector post-stop)
+                self._stopped_versions = {sid: dict(w.versions)
+                                          for sid, w in workers.items()}
+            for worker in workers.values():
+                worker.close()
+
+    def __enter__(self) -> "MultiProcessServingEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- registry facade (WeightPublisher-compatible) ----------------------
+    # Publishing THROUGH the mesh holds the push lock across the primary
+    # publish and the worker pushes, so the skew bound is atomic in every
+    # ``version_vector`` sample (like ``ShardSwarm``'s facade). Publishes
+    # made directly against ``self.registry`` still propagate, one
+    # subscription notify later.
+    def register(self, key: str, forecaster, version: int | None = None):
+        with self._lock:
+            self.registry.register(key, forecaster, version)
+            if not self._attached:   # no callback fired: push inline
+                self._push_locked(key)
+            return forecaster
+
+    def swap(self, key: str, forecaster, version: int | None = None) -> int:
+        with self._lock:
+            v = self.registry.swap(key, forecaster, version)
+            if not self._attached:
+                self._push_locked(key)
+            return v
+
+    def get(self, key: str):
+        return self.registry.get(key)
+
+    def get_entry(self, key: str):
+        return self.registry.get_entry(key)
+
+    def version(self, key: str) -> int:
+        return self.registry.version(key)
+
+    def keys(self) -> list[str]:
+        return self.registry.keys()
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.registry
+
+    # -- weight propagation ------------------------------------------------
+    def _on_publish(self, key: str, version: int) -> None:
+        # facade publishes arrive with the RLock already held on this
+        # thread, so the push is atomic with the publish; direct primary
+        # publishes take it here
+        with self._lock:
+            self._push_locked(key)
+
+    def _push_locked(self, key: str, force: bool = False) -> int:
+        entry = self.registry.get_entry(key)
+        blob = None
+        pushed = 0
+        for worker in self.workers.values():
+            have = worker.versions.get(key)
+            behind = have is None or entry.version - have > self.max_skew
+            if force:
+                behind = have is None or have < entry.version
+            if behind:
+                if blob is None:     # serialize once per push round
+                    blob = self.registry.save_bytes(key)
+                worker.publish(key, blob)      # synchronous ack
+                self.pulls += 1
+                self.bytes_pulled += len(blob)
+                pushed += 1
+        return pushed
+
+    def propagate(self, key: str | None = None) -> int:
+        """Push every worker up to the primary's newest version for
+        ``key`` (or all keys); returns the number of pushes."""
+        with self._lock:
+            keys = [key] if key is not None else self.registry.keys()
+            return sum(self._push_locked(k, force=True) for k in keys)
+
+    def version_vector(self, key: str) -> dict:
+        """Atomic fleet snapshot {"primary": v, sid: acked_v, ...} —
+        taken under the push lock, so the ``max_skew`` bound holds in
+        every vector this returns."""
+        with self._lock:
+            vec: dict = {"primary": self.registry.version(key)
+                         if key in self.registry else 0}
+            acked = ({sid: w.versions for sid, w in self.workers.items()}
+                     if self.workers else self._stopped_versions)
+            for sid, versions in sorted(acked.items()):
+                vec[sid] = versions.get(key, 0)
+            return vec
+
+    def skew(self, key: str) -> int:
+        vec = self.version_vector(key)
+        shard_vs = [v for k, v in vec.items() if k != "primary"]
+        return max(shard_vs) - min(shard_vs) if shard_vs else 0
+
+    def staleness(self, key: str) -> int:
+        vec = self.version_vector(key)
+        shard_vs = [v for k, v in vec.items() if k != "primary"]
+        return vec["primary"] - min(shard_vs) if shard_vs else 0
+
+    # -- client API --------------------------------------------------------
+    def shard_for(self, client_id: str) -> int:
+        return self.router.shard_for(str(client_id))
+
+    def _worker(self, sid: int) -> RemoteShard:
+        worker = self.workers.get(sid)
+        if worker is None:
+            raise KeyError(
+                f"router returned shard {sid} but this mesh has no such "
+                f"worker (have {sorted(self.workers)}) — change "
+                f"membership through add_shard/remove_shard")
+        return worker
+
+    def submit(self, model_key: str, window, client_id=None) -> Future:
+        payload = np.asarray(window)
+        with self._route_lock:
+            if client_id is not None:
+                sid = self.router.shard_for(str(client_id))
+            else:
+                group = \
+                    f"{model_key}|{self.config.bucket_len(payload.shape[0])}"
+                counter = self._anon_counters.setdefault(group,
+                                                         itertools.count())
+                ids = self.router.shard_ids
+                sid = ids[next(counter) % len(ids)]
+            return self._worker(sid).submit(model_key, payload,
+                                            client_id=client_id)
+
+    def predict(self, model_key: str, window, timeout: float | None = 60.0,
+                client_id=None):
+        return self.submit(model_key, window,
+                           client_id=client_id).result(timeout=timeout)
+
+    def step(self, model_key: str, client_id: str, x_t, history=None):
+        """One O(1) streaming step, served by the worker process owning
+        ``client_id`` (its shard-local session cache holds the carry)."""
+        with self._route_lock:
+            worker = self._worker(self.router.shard_for(str(client_id)))
+        return worker.step(model_key, str(client_id), x_t, history=history)
+
+    def warmup(self, model_key: str, lengths=None) -> int:
+        self.propagate(model_key)
+        self._warm_plan[model_key] = tuple(lengths) if lengths else None
+        # snapshot: a shard joining mid-warmup must not break iteration
+        return max(worker.warmup(model_key, lengths=lengths)
+                   for worker in list(self.workers.values()))
+
+    def reset_clock(self) -> None:
+        for worker in list(self.workers.values()):
+            worker.reset_clock()
+
+    # -- live membership ---------------------------------------------------
+    def add_shard(self, shard_id: int | None = None) -> int:
+        """Grow the fleet by one worker PROCESS: it receives every
+        hosted model (pulling weights) and warms its compile set before
+        the router assigns it traffic. Returns the new shard id."""
+        with self._admin_lock:
+            with self._lock:
+                sid = (max(self.workers) + 1 if self.workers else 0) \
+                    if shard_id is None else int(shard_id)
+                if sid in self.workers:
+                    raise ValueError(f"shard {sid} already exists")
+            # the slow part (process spawn, weight push, jit warmup)
+            # happens while traffic keeps flowing to the current fleet
+            worker = spawn_shard(sid, self.config, self._ctx, self._host,
+                                 self._max_sessions)
+            try:
+                for key in self.registry.keys():
+                    blob = self.registry.save_bytes(key)
+                    worker.publish(key, blob)
+                    self.pulls += 1
+                    self.bytes_pulled += len(blob)
+                for model_key, lengths in list(self._warm_plan.items()):
+                    worker.warmup(model_key, lengths=lengths)
+            except Exception:
+                worker.close()
+                raise
+            with self._lock, self._route_lock:
+                self.workers[sid] = worker
+                for key in self.registry.keys():
+                    self._push_locked(key, force=True)  # catch up any
+                    # publish that raced the spawn, before taking traffic
+                self.router.add_shard(sid)
+            # migrate exactly the sessions the new shard wins, OUTSIDE
+            # the locks (per-session RPCs must not stall the fleet's
+            # intake): restores are insert-if-absent, so a fresher
+            # carry written by a concurrent step always wins
+            for old_sid, old_worker in list(self.workers.items()):
+                if old_sid == sid:
+                    continue
+                owned = [c for c in old_worker.stats()["clients"]
+                         if self.router.shard_for(c) == sid]
+                sessions = old_worker.extract(owned) if owned else []
+                if sessions:
+                    worker.restore(sessions)
+            return sid
+
+    def remove_shard(self, shard_id: int) -> None:
+        """Shrink the fleet by one worker process: the router stops
+        assigning it traffic, its queue drains (zero drops), and its
+        session carries migrate to the surviving owners."""
+        sid = int(shard_id)
+        with self._admin_lock:
+            with self._lock, self._route_lock:
+                if sid not in self.workers:
+                    raise KeyError(f"no shard {sid}; have "
+                                   f"{sorted(self.workers)}")
+                if len(self.workers) == 1:
+                    raise ValueError("cannot remove the last shard")
+                self.router.remove_shard(sid)
+                worker = self.workers.pop(sid)
+            # lock released: traffic flows to survivors while the
+            # departing worker finishes its queue
+            sessions = worker.drain()
+            by_owner: dict[int, list] = {}
+            for session in sessions:
+                by_owner.setdefault(
+                    self.router.shard_for(session["client"]),
+                    []).append(session)
+            for owner_sid, batch in by_owner.items():
+                self.workers[owner_sid].restore(batch)
+            worker.close()
+
+    # -- observation -------------------------------------------------------
+    def shard_stats(self) -> dict[int, dict]:
+        """Raw per-worker stats (telemetry snapshot, cache stats, hosted
+        versions, resident session clients, worker pid)."""
+        workers = dict(self.workers)     # snapshot vs live membership
+        return {sid: workers[sid].stats() for sid in sorted(workers)}
+
+    def snapshot(self) -> dict:
+        """Fleet-wide telemetry in the same shape as
+        ``Telemetry.merge`` (``Telemetry.format`` accepts it), pooled
+        from the worker processes' snapshots, plus transport counters."""
+        stats = self.shard_stats()
+        lat: list[float] = []
+        stale: list[float] = []
+        totals = {"requests": 0, "batches": 0, "real_slots": 0,
+                  "padded_slots": 0, "swaps": 0, "reprimes": 0}
+        by_version: dict[int, int] = {}
+        by_client: dict[str, int] = {}
+        by_shard: list[int] = []
+        elapsed = 1e-9
+        hits = misses = evictions = 0
+        for sid, st in stats.items():
+            tel = st["telemetry"]
+            by_shard.append(tel["requests"])
+            totals["requests"] += tel["requests"]
+            totals["batches"] += tel["batches"]
+            totals["swaps"] += tel["swaps"]
+            totals["reprimes"] += tel["reprimes"]
+            # occupancy reconstructed from the means the snapshot keeps
+            totals["real_slots"] += int(round(
+                tel["mean_batch"] * tel["batches"]))
+            occ = tel["batch_occupancy"]
+            totals["padded_slots"] += int(round(
+                tel["mean_batch"] * tel["batches"] / occ)) if occ else 0
+            elapsed = max(elapsed, tel["requests"]
+                          / max(tel["throughput_rps"], 1e-9))
+            for v, n in tel["requests_by_version"].items():
+                v = int(v)
+                by_version[v] = by_version.get(v, 0) + n
+            for c, n in tel.get("requests_by_client", {}).items():
+                by_client[c] = by_client.get(c, 0) + n
+            lat.extend(st["latency_s"])
+            stale.extend(st["staleness_s"])
+            hits += st["cache"]["hits"]
+            misses += st["cache"]["misses"]
+            evictions += st["cache"]["evictions"]
+        lookups = hits + misses
+        return {
+            "shards": len(stats),
+            "requests": totals["requests"],
+            "requests_by_shard": by_shard,
+            "batches": totals["batches"],
+            "throughput_rps": totals["requests"] / elapsed,
+            "p50_ms": _percentile(lat, 50) * 1e3,
+            "p95_ms": _percentile(lat, 95) * 1e3,
+            "p99_ms": _percentile(lat, 99) * 1e3,
+            "mean_batch": (totals["real_slots"] / totals["batches"]
+                           if totals["batches"] else 0.0),
+            "batch_occupancy": (totals["real_slots"]
+                                / totals["padded_slots"]
+                                if totals["padded_slots"] else 0.0),
+            "cache_hit_rate": hits / lookups if lookups else 0.0,
+            "cache_evictions": evictions,
+            "swaps": totals["swaps"],
+            "reprimes": totals["reprimes"],
+            "staleness_p50_s": _percentile(stale, 50),
+            "staleness_p95_s": _percentile(stale, 95),
+            "requests_by_version": by_version,
+            "requests_by_client": by_client,
+            "unique_clients": len(by_client),
+            "pulls": self.pulls,
+            "bytes_pulled": self.bytes_pulled,
+        }

@@ -74,6 +74,36 @@ def test_lstm_kernel_in_model():
     np.testing.assert_allclose(h1, h2, rtol=1e-5, atol=1e-6)
 
 
+def test_lstm_kernel_resolves_backend_at_trace_time(monkeypatch):
+    """Regression: the ops wrappers used to snapshot
+    ``jax.default_backend()`` at IMPORT time, so a backend configured
+    after import served the wrong ``interpret`` flag forever. The flag
+    is now resolved when the wrapper traces."""
+    from repro.kernels.lstm import ops as lstm_ops
+
+    captured = {}
+
+    def fake_pallas(x, h, c, wx, wh, b, block_b=8, interpret=None):
+        captured["interpret"] = interpret
+        return h, c
+
+    monkeypatch.setattr(lstm_ops, "lstm_cell_pallas", fake_pallas)
+    monkeypatch.setattr(lstm_ops.jax, "default_backend", lambda: "tpu")
+    lstm_ops.lstm_cell_fused.clear_cache()    # force a fresh trace
+    try:
+        x = jnp.zeros((2, 5), jnp.float32)
+        h = c = jnp.zeros((2, 8), jnp.float32)
+        wx = jnp.zeros((5, 32), jnp.float32)
+        wh = jnp.zeros((8, 32), jnp.float32)
+        b = jnp.zeros((32,), jnp.float32)
+        lstm_ops.lstm_cell_fused(x, h, c, wx, wh, b)
+        # the backend patched in AFTER import must win at trace time
+        assert captured["interpret"] is False
+    finally:
+        # drop the traces built against the patched backend/kernel
+        lstm_ops.lstm_cell_fused.clear_cache()
+
+
 # ---------------------------------------------------- flash attention ----
 
 @pytest.mark.parametrize("B,S,Hq,Hkv,D", [

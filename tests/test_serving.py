@@ -125,9 +125,46 @@ def test_batch_bucketing_quantizes_shapes():
     assert cfg.bucket_len(9) == 16
     assert cfg.bucket_len(16) == 16
     assert cfg.bucket_len(20) == 32
-    assert cfg.bucket_len(40) == 40            # beyond buckets: own group
+    assert cfg.bucket_len(40) == 32            # beyond buckets: clamped
     assert cfg.bucket_batch(3) == 4
     assert cfg.bucket_batch(32) == 32
+
+
+def test_overlong_window_clamps_to_largest_bucket(registry, forecaster):
+    """Regression: a request longer than every configured length bucket
+    used to keep its raw length — a shape outside the fixed compile set
+    (never warmed), recompiling on the serving hot path. It is now
+    clamped to the largest bucket, serving the newest rows (the LSTM is
+    causal, so those rows ARE the clamped window's forecast)."""
+    cfg = BatcherConfig(max_batch=4, max_wait_ms=5.0,
+                        length_buckets=(12, 20))
+    # every length the hot path can see maps into the configured buckets
+    assert {cfg.bucket_len(t) for t in (1, 12, 19, 20, 21, 64)} <= {12, 20}
+    long_window = _windows(1, t=33, seed=9)[0]
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(12, 20))
+        y_got, p_got = eng.predict("m", long_window, timeout=10.0)
+    # the served result is exactly the truncated-window prediction
+    y_ref, p_ref = forecaster.predict(long_window[None, -20:])
+    np.testing.assert_array_equal(y_got, y_ref[0])
+    np.testing.assert_array_equal(p_got, p_ref[0])
+
+
+def test_client_id_threads_through_to_telemetry(registry):
+    """Regression: per-client attribution must survive into the flush
+    telemetry and the resolved future."""
+    cfg = BatcherConfig(max_batch=4, max_wait_ms=2.0, length_buckets=(20,))
+    with ServingEngine(registry, cfg) as eng:
+        futs = [eng.submit("m", w, client_id=f"c{i % 2}")
+                for i, w in enumerate(_windows(4))]
+        futs.append(eng.submit("m", _windows(1)[0]))      # anonymous
+        for f in futs:
+            f.result(timeout=10.0)
+    assert futs[0].client_id == "c0" and futs[1].client_id == "c1"
+    assert futs[-1].client_id is None
+    snap = eng.telemetry.snapshot()
+    assert snap["requests_by_client"] == {"c0": 2, "c1": 2}
+    assert snap["unique_clients"] == 2
 
 
 def test_non_pow2_max_batch_rounds_down(registry):
@@ -154,6 +191,36 @@ def test_non_pow2_max_batch_rounds_down(registry):
         assert len([f.result(timeout=10.0) for f in futs]) == 4
     snap = eng.telemetry.snapshot()
     assert snap["mean_batch"] == 4.0 and snap["batch_occupancy"] == 1.0
+
+
+def test_replay_is_one_dispatch_not_a_step_loop(forecaster):
+    """Regression: ``replay`` used to loop Python-side over ``step``,
+    syncing the device O(window) times per cache miss / swap re-prime.
+    It is now a single jitted lax.scan dispatch — and still bitwise
+    equal to the step loop (the session cache's contract)."""
+    w = _windows(1, seed=13)[0]
+    calls = {"n": 0}
+    real_step = forecaster.step
+
+    def counting_step(x_t, carry):
+        calls["n"] += 1
+        return real_step(x_t, carry)
+
+    forecaster.step = counting_step
+    try:
+        y_scan, p_scan, carry_scan = forecaster.replay(w[None])
+    finally:
+        forecaster.step = real_step
+    assert calls["n"] == 0                     # no per-step host loop
+    # bitwise equivalence against the explicit step loop
+    carry = forecaster.init_carry(1)
+    for t in range(CFG.window):
+        y_loop, p_loop, carry = forecaster.step(w[None, t], carry)
+    np.testing.assert_array_equal(y_loop, y_scan)
+    np.testing.assert_array_equal(p_loop, p_scan)
+    for (h1, c1), (h2, c2) in zip(carry, carry_scan):
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
 
 
 # -- session cache ---------------------------------------------------------
@@ -184,6 +251,28 @@ def test_session_cache_ttl_and_bytes():
     cache.put("c", "C", 16)                    # 8 + 16 > 20 -> evict LRU (b)
     assert cache.get("b") is None
     assert cache.nbytes_in_use == 16
+
+
+def test_oversize_carry_warns_and_surfaces_over_budget():
+    """Regression: a single carry larger than max_bytes used to evict
+    every other session and then sit over budget forever, silently. It
+    still gets admitted (rejecting it would silently restart the
+    client's stream), but now warns and surfaces the state in stats()."""
+    cache = SessionCache(max_sessions=8, max_bytes=20)
+    cache.put("a", "A", 8)
+    assert cache.stats()["over_budget"] is False
+    with pytest.warns(RuntimeWarning, match="over budget"):
+        cache.put("big", "B", 64)
+    st = cache.stats()
+    assert st["over_budget"] is True
+    assert st["oversize_admissions"] == 1
+    assert cache.nbytes_in_use == 64 and len(cache) == 1
+    # a later normal put reclaims the oversize entry via plain LRU: the
+    # cache returns under budget (nothing "forever" about it any more)
+    cache.put("c", "C", 8)
+    assert cache.get("big") is None
+    assert cache.stats()["over_budget"] is False
+    assert cache.nbytes_in_use == 8
 
 
 def test_session_carry_matches_full_window_recompute(forecaster):

@@ -90,15 +90,105 @@ def test_mesh_anonymous_requests_spread(forecaster):
     assert counts == [16, 16]
 
 
-def test_mesh_pins_worker_set(forecaster):
-    """Mutating the router after construction fails loudly instead of
-    mis-routing (live membership change is a ROADMAP follow-on)."""
+def test_mesh_rejects_router_mutation_without_worker(forecaster):
+    """Membership changes go through add_shard/remove_shard; mutating
+    the router directly leaves a shard id with no worker behind it,
+    which must fail loudly instead of mis-routing."""
     with _mesh(forecaster, n_shards=2) as mesh:
         mesh.router.add_shard(7)
         bad = next(cid for cid in (f"c{i}" for i in range(64))
                    if mesh.router.shard_for(cid) == 7)
         with pytest.raises(KeyError):
             mesh.submit("m", _windows(1)[0], client_id=bad)
+
+
+# -- live membership -------------------------------------------------------
+
+def test_mesh_add_shard_serves_new_clients(forecaster):
+    """A joining shard pulls weights + warms BEFORE taking traffic, then
+    serves exactly the clients the rendezvous hash moves to it."""
+    with _mesh(forecaster, n_shards=2) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        before = {f"c{i}": mesh.shard_for(f"c{i}") for i in range(64)}
+        sid = mesh.add_shard()
+        assert sid == 2 and sorted(mesh.shards) == [0, 1, 2]
+        # the new replica already hosts the model at the primary version
+        vec = mesh.version_vector("m")
+        assert vec[sid] == vec["primary"]
+        # minimal disruption: clients either stay put or move to the
+        # new shard
+        moved = []
+        for cid, old in before.items():
+            now = mesh.shard_for(cid)
+            assert now in (old, sid)
+            if now == sid:
+                moved.append(cid)
+        assert moved                      # 64 clients: some must move
+        mesh.reset_clock()
+        for cid in moved[:4]:
+            mesh.predict("m", _windows(1)[0], client_id=cid, timeout=30.0)
+        assert mesh.shards[sid].telemetry.requests == len(moved[:4])
+
+
+def test_mesh_remove_shard_drains_and_rehomes(forecaster):
+    """Removing a shard mid-traffic: queued requests complete (zero
+    drops), only the departing shard's clients are re-homed."""
+    with _mesh(forecaster, n_shards=3) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        before = {f"c{i}": mesh.shard_for(f"c{i}") for i in range(48)}
+        futs = [mesh.submit("m", w, client_id=f"c{i}")
+                for i, w in enumerate(_windows(48, seed=3))]
+        victim = 1
+        mesh.remove_shard(victim)
+        results = [f.result(timeout=30.0) for f in futs]   # none dropped
+        assert len(results) == 48
+        assert all(np.isfinite(y) and 0.0 <= p <= 1.0 for y, p in results)
+        for cid, old in before.items():
+            now = mesh.shard_for(cid)
+            if old != victim:
+                assert now == old         # survivors keep their clients
+            else:
+                assert now != victim
+        # more traffic serves fine on the shrunken mesh
+        assert mesh.predict("m", _windows(1)[0], client_id="c0",
+                            timeout=30.0)
+        mesh.remove_shard(mesh.shard_ids[0])      # down to one shard
+        with pytest.raises(ValueError):
+            mesh.remove_shard(mesh.shard_ids[0])  # never below one
+
+
+def test_mesh_membership_migrates_session_carries(forecaster):
+    """Session caches attached via ``session_cache()`` follow membership
+    changes: a departing shard's clients keep their carries (migrated to
+    the new owners), unmoved clients are untouched."""
+    from repro.serving import RecurrentSessionRunner
+
+    with _mesh(forecaster, n_shards=3) as mesh:
+        cache = mesh.session_cache(max_sessions=64)
+        runner = RecurrentSessionRunner(forecaster, cache)
+        w = _windows(8, seed=9)
+        half = CFG.window // 2
+        for c in range(8):
+            for t in range(half):
+                runner.step(f"s{c}", w[c][t])
+        owners = {f"s{c}": cache.shard_for(f"s{c}") for c in range(8)}
+        victim = owners["s0"]
+        mesh.remove_shard(victim)
+        # every session survived the membership change, on its new owner
+        for c in range(8):
+            assert f"s{c}" in cache
+            assert cache.shard_for(f"s{c}") == (
+                owners[f"s{c}"] if owners[f"s{c}"] != victim
+                else cache.shard_for(f"s{c}"))
+        # streams continue bitwise-uninterrupted (carries moved, not
+        # rebuilt): finish each stream and compare to a clean replay
+        finals = {}
+        for c in range(8):
+            for t in range(half, CFG.window):
+                finals[c] = runner.step(f"s{c}", w[c][t])
+        for c in range(8):
+            y_ref, p_ref, _ = forecaster.replay(w[c][None])
+            assert finals[c] == (float(y_ref[0]), float(p_ref[0]))
 
 
 def test_zoo_forecaster_with_params_shares_compiled_forward():
@@ -335,7 +425,7 @@ def test_calibration_flip_reuses_compiled_program():
 
 def test_sharded_session_cache_respects_fleet_budget():
     cache = ShardedSessionCache(n_shards=3, max_sessions=4)
-    assert [s.max_sessions for s in cache.shards] == [2, 1, 1]
+    assert [cache.shards[i].max_sessions for i in range(3)] == [2, 1, 1]
     for i in range(32):                       # hammer one fleet of puts
         cache.put(f"c{i}", i, 8)
     assert len(cache) <= 4                    # never over the fleet budget

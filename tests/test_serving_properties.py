@@ -21,7 +21,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.models.rnn import RNNConfig, init_rnn
 from repro.serving import (BatcherConfig, ConsistentRouter, LSTMForecaster,
-                           RecurrentSessionRunner, SessionCache, ShardSwarm)
+                           ModelRegistry, RecurrentSessionRunner,
+                           SessionCache, ShardSwarm, ShardedServingEngine,
+                           ShardedSessionCache)
 
 CFG = RNNConfig(input_dim=3, hidden=8, num_layers=1, fc_dims=(4,),
                 window=8, evl_head=True)
@@ -145,6 +147,94 @@ def test_routing_minimal_disruption_on_join(client_ids, n_shards):
     router.add_shard(n_shards)
     for cid, old in before.items():
         assert router.shard_for(cid) in (old, n_shards)
+
+
+# -- live membership: the assignment laws extend to the full stack --------
+
+@given(_CLIENT_IDS, st.data())
+@settings(deadline=None)
+def test_sharded_cache_membership_assignment_laws(client_ids, data):
+    """Across interleaved add_shard/remove_shard on a live
+    ``ShardedSessionCache``, only the departing/arriving shards' clients
+    move — and every cached carry survives every change, retrievable
+    with its original value and version stamp."""
+    cache = ShardedSessionCache(n_shards=3, max_sessions=256)
+    for i, cid in enumerate(client_ids):
+        cache.put(cid, f"carry-{cid}", 8, version=i)
+    next_sid = 3
+    for _ in range(data.draw(st.integers(1, 6))):
+        owners = {cid: cache.shard_for(cid) for cid in client_ids}
+        if len(cache.shards) > 1 and data.draw(st.booleans()):
+            victim = data.draw(st.sampled_from(sorted(cache.shards)))
+            cache.remove_shard(victim)
+            for cid, old in owners.items():
+                new = cache.shard_for(cid)
+                if old != victim:
+                    assert new == old            # survivors keep clients
+                else:
+                    assert new != victim         # victims are re-homed
+        else:
+            sid = next_sid
+            next_sid += 1
+            cache.add_shard(sid)
+            for cid, old in owners.items():
+                assert cache.shard_for(cid) in (old, sid)
+        # the fleet budget is re-split, never exceeded
+        assert sum(s.max_sessions for s in cache.shards.values()) <= 256
+        # migration is lossless: every carry still lives on its
+        # (possibly new) owner shard
+        for i, cid in enumerate(client_ids):
+            assert cache.get_entry(cid) == (f"carry-{cid}", i)
+            assert cid in cache.shards[cache.shard_for(cid)]
+
+
+class _StubForecaster:
+    """Minimal forecaster for engine-level membership laws: token-shaped
+    windows, instant predict (no jax on the property-test hot path)."""
+
+    feature_dim = 0
+    window = 8
+    version = 1
+    published_at = None
+
+    def predict(self, x, lens):
+        n = len(x)
+        return (np.zeros((n,), np.float32), np.zeros((n,), np.float32))
+
+
+@given(_CLIENT_IDS, st.data())
+@settings(deadline=None)
+def test_mesh_membership_assignment_laws(client_ids, data):
+    """Interleaved add_shard/remove_shard on a LIVE ShardedServingEngine:
+    routing keeps the assignment laws, and every client is still served
+    (on its possibly-new shard) after each change."""
+    reg = ModelRegistry()
+    reg.register("m", _StubForecaster())
+    mesh = ShardedServingEngine(
+        reg, BatcherConfig(max_batch=4, max_wait_ms=1.0,
+                           length_buckets=(8,)), n_shards=2)
+    with mesh:
+        for _ in range(data.draw(st.integers(1, 4))):
+            owners = {cid: mesh.shard_for(cid) for cid in client_ids}
+            if mesh.n_shards > 1 and data.draw(st.booleans()):
+                victim = data.draw(st.sampled_from(mesh.shard_ids))
+                mesh.remove_shard(victim)
+                for cid, old in owners.items():
+                    new = mesh.shard_for(cid)
+                    if old != victim:
+                        assert new == old
+                    else:
+                        assert new != victim
+            else:
+                sid = mesh.add_shard()
+                for cid, old in owners.items():
+                    assert mesh.shard_for(cid) in (old, sid)
+            # router and worker set stay in lockstep
+            assert sorted(mesh.router.shard_ids) == mesh.shard_ids
+        futs = [mesh.submit("m", np.zeros((8,), np.int32), client_id=cid)
+                for cid in client_ids[:8]]
+        for f in futs:
+            assert f.result(timeout=10.0) == (0.0, 0.0)
 
 
 # -- swap-propagation staleness bound --------------------------------------
