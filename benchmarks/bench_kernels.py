@@ -1,7 +1,14 @@
 """Kernel micro-benchmarks: Pallas (interpret mode on CPU — correctness
 path) vs the pure-jnp reference, at paper-relevant shapes. On-CPU wall
 time is NOT a TPU performance claim; the derived column carries the
-allclose max-error vs the oracle, which is the meaningful number here."""
+allclose max-error vs the oracle, which is the meaningful number here.
+
+The ``dispatch`` phase re-measures the two LSTM-cell implementations
+across a (batch, hidden) grid on the CURRENT backend and emits the
+winner per shape — the measurements behind the default table in
+``repro.kernels.dispatch``. ``--tune-out PATH`` persists the measured
+rules as a table JSON (point ``REPRO_DISPATCH_TABLE`` at it, or
+``dispatch.load_table`` it, to serve from the re-tuned table)."""
 
 from __future__ import annotations
 
@@ -14,7 +21,48 @@ from benchmarks.common import row, timed
 RNG = np.random.default_rng(0)
 
 
-def main() -> None:
+def _tune_dispatch(smoke: bool, tune_out: str | None) -> None:
+    from repro.kernels import dispatch
+    from repro.kernels.lstm.ops import lstm_cell_fused as pallas_cell
+    from repro.kernels.lstm.ref import lstm_cell_ref
+
+    backend = jax.default_backend()
+    grid = [(8, 64)] if smoke else [(1, 64), (8, 64), (32, 64), (8, 128)]
+    xla_cell = jax.jit(lstm_cell_ref)
+    rules = []
+    for B, H in grid:
+        I = 5
+        x = jnp.asarray(RNG.standard_normal((B, I)).astype(np.float32))
+        h = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+        c = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+        wx = jnp.asarray(0.1 * RNG.standard_normal((I, 4 * H)), jnp.float32)
+        wh = jnp.asarray(0.1 * RNG.standard_normal((H, 4 * H)), jnp.float32)
+        b = jnp.asarray(0.1 * RNG.standard_normal(4 * H), jnp.float32)
+        _, us_xla = timed(lambda: jax.block_until_ready(
+            xla_cell(x, h, c, wx, wh, b)))
+        _, us_pal = timed(lambda: jax.block_until_ready(
+            pallas_cell(x, h, c, wx, wh, b)))
+        compiled = backend == "tpu"     # elsewhere the kernel interprets
+        winner = "pallas" if us_pal < us_xla and compiled else "xla"
+        row(f"kernels/dispatch_b{B}_h{H}", min(us_xla, us_pal),
+            f"xla_us={us_xla:.1f};"
+            f"pallas_us={us_pal:.1f}{'' if compiled else '(interpret)'};"
+            f"winner={winner};backend={backend}")
+        if winner == "pallas":
+            rules.append({"min_batch": B, "min_hidden": H,
+                          "impl": "pallas"})
+    if tune_out:
+        # keep only the weakest floor per impl: rules are monotone
+        if rules:
+            rules = [min(rules, key=lambda r: (r["min_batch"],
+                                               r["min_hidden"]))]
+        dispatch.set_rules("lstm_cell", backend, rules)
+        dispatch.save_table(tune_out)
+        print(f"# wrote dispatch table for backend={backend} "
+              f"-> {tune_out}", flush=True)
+
+
+def main(smoke: bool = False, tune_out: str | None = None) -> None:
     # LSTM cell at the paper's model size
     B, I, H = 32, 5, 64
     x = jnp.asarray(RNG.standard_normal((B, I)).astype(np.float32))
@@ -68,6 +116,17 @@ def main() -> None:
     err = float(jnp.max(jnp.abs(y1 - y2)))
     row("kernels/ssd_256", us, f"max_err={err:.2e}")
 
+    # Pallas-vs-XLA dispatch measurements (backend-local)
+    _tune_dispatch(smoke, tune_out)
+
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced dispatch-tune grid (CI smoke)")
+    ap.add_argument("--tune-out", default=None, metavar="PATH",
+                    help="write the measured dispatch table JSON here")
+    args = ap.parse_args()
+    main(smoke=args.smoke, tune_out=args.tune_out)

@@ -1,12 +1,20 @@
 """Serving throughput/latency across micro-batcher settings (ISSUE 1
 acceptance: the dynamic batcher must sustain >= 5x the throughput of
-batch-size-1 serving on the reduced paper LSTM config).
+batch-size-1 serving on the reduced paper LSTM config), plus the
+multi-session DECODE phase (ISSUE 5 acceptance: the batched decode path
+must sustain >= 2x the streaming-step throughput of the per-session
+dispatch loop at >= 8 concurrent sessions — hard-asserted under
+``--smoke``).
 
-Rows: ``serve/<config>,us_per_request,rps=..;p95_ms=..;occ=..`` plus a
-final ``serve/speedup_vs_batch1`` row with the headline multiple.
+Rows: ``serve/<config>,us_per_request,rps=..;p95_ms=..;occ=..``, a
+``serve/speedup_vs_batch1`` row with the headline multiple, then
+``serve/decode_*`` rows for the streaming phase and
+``serve/decode_speedup_vs_loop`` with the decode multiple.
 """
 
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
@@ -29,12 +37,16 @@ def _configs(window: int):
     ]
 
 
-def main(n_requests: int = 512) -> None:
+def main(n_requests: int = 512, smoke: bool = False) -> None:
     import jax
 
     from repro.models.rnn import init_rnn
-    from repro.serving import (LSTMForecaster, ModelRegistry, ServingEngine,
-                               Telemetry)
+    from repro.serving import (LSTMForecaster, ModelRegistry,
+                               RecurrentSessionRunner, ServingEngine,
+                               SessionCache, Telemetry)
+
+    if smoke:
+        n_requests = min(n_requests, 128)
 
     # reduced paper config: same topology (2 LSTM + 3 FC, window 20),
     # smaller widths so the bench isolates serving overhead
@@ -50,7 +62,10 @@ def main(n_requests: int = 512) -> None:
     windows = rng.standard_normal(
         (n_requests, cfg.window, 5)).astype(np.float32) * 0.02
     rps = {}
-    for name, bcfg in _configs(cfg.window):
+    configs = _configs(cfg.window)
+    if smoke:
+        configs = [c for c in configs if c[0] in ("batch1", "micro32_w2ms")]
+    for name, bcfg in configs:
         with ServingEngine(reg, bcfg, telemetry=Telemetry()) as eng:
             eng.warmup("m", lengths=(cfg.window,))
             eng.telemetry.reset_clock()
@@ -68,6 +83,82 @@ def main(n_requests: int = 512) -> None:
     row("serve/speedup_vs_batch1", 0.0,
         f"{speedup:.1f}x{' (>=5x OK)' if speedup >= 5.0 else ' (BELOW 5x)'}")
 
+    # -- decode phase: multi-session streaming steps -----------------------
+    # N resident sessions each advance one observation per tick. The
+    # baseline dispatches one fused step per session per tick (the
+    # pre-batched hot path); the batched decode path gathers all N
+    # carries and flushes each tick as ceil(N/decode_width) fused
+    # dispatches. Identical math, bitwise-equal outputs (tested in
+    # tests/) — this phase measures only the dispatch amortization.
+    n_sessions = 8 if smoke else 64
+    n_ticks = 25 if smoke else 100
+    xs = rng.standard_normal(
+        (n_ticks, n_sessions, 5)).astype(np.float32) * 0.02
+    fc.warm_decode()
+
+    def _loop_phase():
+        runner = RecurrentSessionRunner(
+            fc, SessionCache(max_sessions=n_sessions))
+        t0 = time.perf_counter()
+        for t in range(n_ticks):
+            for s in range(n_sessions):
+                runner.step(f"s{s}", xs[t, s])
+        return n_ticks * n_sessions / (time.perf_counter() - t0)
+
+    def _batched_phase():
+        runner = RecurrentSessionRunner(
+            fc, SessionCache(max_sessions=n_sessions))
+        t0 = time.perf_counter()
+        for t in range(n_ticks):
+            runner.step_many([(f"s{s}", xs[t, s], None)
+                              for s in range(n_sessions)])
+        return n_ticks * n_sessions / (time.perf_counter() - t0)
+
+    loop_sps = _loop_phase()
+    batched_sps = _batched_phase()
+    row("serve/decode_per_session_loop", 1e6 / max(loop_sps, 1e-9),
+        f"steps_per_s={loop_sps:.0f};sessions={n_sessions}")
+    row("serve/decode_batched", 1e6 / max(batched_sps, 1e-9),
+        f"steps_per_s={batched_sps:.0f};sessions={n_sessions};"
+        f"width={fc.decode_width}")
+
+    # and end-to-end through the engine's step flush grouping: every
+    # tick is submitted without waiting (the flush waves keep one
+    # client's steps ordered even when several ticks share a flush), so
+    # this measures pipelined streaming throughput, not max_wait
+    bcfg = next(c for n, c in _configs(cfg.window) if n == "micro64_w5ms")
+    with ServingEngine(reg, bcfg, telemetry=Telemetry()) as eng:
+        eng.warmup("m", lengths=(cfg.window,))
+        eng.telemetry.reset_clock()
+        t0 = time.perf_counter()
+        futs = [eng.submit_step("m", f"s{s}", xs[t, s])
+                for t in range(n_ticks) for s in range(n_sessions)]
+        for f in futs:
+            f.result(timeout=60.0)
+        engine_sps = n_ticks * n_sessions / (time.perf_counter() - t0)
+        snap = eng.telemetry.snapshot()
+    row("serve/decode_engine", 1e6 / max(engine_sps, 1e-9),
+        f"steps_per_s={engine_sps:.0f};flushes={snap['step_batches']};"
+        f"mean_step_batch={snap['mean_step_batch']:.1f};"
+        f"step_p95_ms={snap['step_p95_ms']:.2f}")
+
+    decode_speedup = batched_sps / max(loop_sps, 1e-9)
+    ok = decode_speedup >= 2.0
+    row("serve/decode_speedup_vs_loop", 0.0,
+        f"{decode_speedup:.1f}x at {n_sessions} sessions"
+        f"{' (>=2x OK)' if ok else ' (BELOW 2x)'}")
+    if smoke:
+        assert ok, (
+            f"batched decode {decode_speedup:.2f}x at {n_sessions} "
+            f"sessions — the >=2x acceptance bar failed")
+
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced workload + hard >=2x decode assert")
+    ap.add_argument("--requests", type=int, default=512)
+    args = ap.parse_args()
+    main(n_requests=args.requests, smoke=args.smoke)

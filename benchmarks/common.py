@@ -1,16 +1,33 @@
 """Shared benchmark utilities. Output format: ``name,us_per_call,derived``
 CSV rows (one per measurement), where ``derived`` carries the
-benchmark-specific figure of merit (MSE, speedup, rounds, ...)."""
+benchmark-specific figure of merit (MSE, speedup, rounds, ...).
+
+Every ``row`` is also collected in memory so the harness
+(``benchmarks/run.py --json``) can persist each suite's phases to
+``BENCH_<suite>.json`` — the machine-readable perf trajectory carried
+across PRs as a CI artifact."""
 
 from __future__ import annotations
 
 import time
 
+_ROWS: list[dict] = []
+
 
 def row(name: str, us_per_call: float, derived) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append({"name": name, "us": round(float(us_per_call), 1),
+                  "metric": str(derived)})
     print(line, flush=True)
     return line
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows collected since the last drain (the
+    harness calls this at suite boundaries)."""
+    global _ROWS
+    rows, _ROWS = _ROWS, []
+    return rows
 
 
 def timed(fn, *args, repeat: int = 3, **kw):

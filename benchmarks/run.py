@@ -1,19 +1,24 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §8).
 Prints ``name,us_per_call,derived`` CSV. Select with ``--only <substr>``.
 ``--smoke`` runs benchmarks that support it with reduced workloads (the
-CI guard against benchmark drivers silently rotting).
+CI guard against benchmark drivers silently rotting). ``--json`` also
+writes each suite's rows to ``BENCH_<suite>.json`` (per-phase
+name/us/metric) so the perf trajectory persists across PRs — CI uploads
+them as artifacts.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
 
 from benchmarks import (bench_communication, bench_extreme, bench_hotswap,
                         bench_kernels, bench_prediction, bench_roofline,
-                        bench_serving, bench_serving_mesh, bench_speedup)
+                        bench_serving, bench_serving_mesh, bench_speedup,
+                        common)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -38,12 +43,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced workloads where the benchmark supports "
                     "a `smoke` parameter")
+    ap.add_argument("--json", action="store_true",
+                    help="write each suite's rows to BENCH_<suite>.json "
+                    "(per-phase name/us/metric)")
     args = ap.parse_args()
     failures = 0
     for name, mod in ALL:
         if args.only and args.only not in name:
             continue
         print(f"# --- {name} ---", flush=True)
+        common.drain_rows()               # suite boundary: fresh collector
+        ok = True
         try:
             if args.smoke and \
                     "smoke" in inspect.signature(mod.main).parameters:
@@ -53,6 +63,13 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             failures += 1
+            ok = False
+        if args.json:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump({"suite": name, "ok": ok, "smoke": args.smoke,
+                           "rows": common.drain_rows()}, f, indent=2)
+            print(f"# wrote {path}", flush=True)
     sys.exit(1 if failures else 0)
 
 

@@ -5,6 +5,12 @@ Each kernel package ships:
     ops.py    — jit'd public wrapper (interpret=True fallback on CPU)
     ref.py    — pure-jnp oracle used by the allclose test sweeps
 
+``dispatch.py`` owns the Pallas-vs-XLA decision per (backend, op,
+shape): a benchmark-backed rule table resolved at trace time, re-tunable
+via ``bench_kernels --tune-out`` / ``REPRO_DISPATCH_TABLE`` and
+overridable with ``REPRO_KERNEL_IMPL``. Model code calls the dispatched
+ops (e.g. ``dispatch.lstm_cell``) so train and serve resolve alike.
+
 Kernels:
     evl       — fused Extreme Value Loss (paper eq. 6)
     lstm      — fused LSTM cell (paper's 2-layer LSTM hot loop)

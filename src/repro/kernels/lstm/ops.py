@@ -16,11 +16,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@jax.jit
-def lstm_cell_fused(x, h, c, wx, wh, b):
+def lstm_cell_padded(x, h, c, wx, wh, b):
     """Drop-in fused version of ``repro.models.rnn.lstm_cell`` signature:
     (params dict unpacked) -> (h', c'). Pads batch to a sublane multiple
-    and the input feature dim to 8."""
+    and the input feature dim to 8. Un-jitted so the dispatch layer can
+    inline it into larger programs; ``lstm_cell_fused`` below is the
+    jitted standalone entry."""
     B, I = x.shape
     H = h.shape[-1]
     block_b = 8
@@ -37,3 +38,6 @@ def lstm_cell_fused(x, h, c, wx, wh, b):
                                     block_b=block_b,
                                     interpret=not _on_tpu())
     return h_new[:B], c_new[:B]
+
+
+lstm_cell_fused = jax.jit(lstm_cell_padded)

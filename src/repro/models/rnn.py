@@ -2,8 +2,11 @@
 sliding window 20, for stock prediction, plus an extreme-event indicator
 head (sigmoid) for the EVL experiments.
 
-Functional LSTM built on ``jax.lax.scan``; the fused cell also exists as a
-Pallas kernel (``repro.kernels.lstm``) validated against ``lstm_cell``.
+Functional LSTM built on ``jax.lax.scan``. The per-step cell routes
+through ``repro.kernels.dispatch``, which picks the fused Pallas kernel
+(``repro.kernels.lstm``) or the plain XLA lowering per (backend, batch,
+hidden) at trace time — train-time ``rnn_features`` and the serving
+``step``/``replay`` paths therefore resolve identically.
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.layers import dense_init
 
 PyTree = Any
@@ -44,16 +48,10 @@ def init_lstm_layer(key, in_dim: int, hidden: int, dtype):
 
 
 def lstm_cell(p, x_t, h, c):
-    """Fused LSTM cell: x_t [B, I]; h, c [B, H] -> (h', c')."""
-    gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
-    i, f, g, o = jnp.split(gates, 4, axis=-1)
-    i = jax.nn.sigmoid(i)
-    f = jax.nn.sigmoid(f)
-    g = jnp.tanh(g)
-    o = jax.nn.sigmoid(o)
-    c_new = f * c + i * g
-    h_new = o * jnp.tanh(c_new)
-    return h_new, c_new
+    """Fused LSTM cell: x_t [B, I]; h, c [B, H] -> (h', c'). Dispatch-
+    routed: the kernel table picks Pallas or XLA for this (backend,
+    batch, hidden) while the surrounding program traces."""
+    return dispatch.lstm_cell(x_t, h, c, p["wx"], p["wh"], p["b"])
 
 
 def lstm_layer_apply(p, xs):
@@ -143,6 +141,41 @@ def init_rnn_carry(params: PyTree, batch: int, dtype=jnp.float32):
         (jnp.zeros((batch, lp["wh"].shape[0]), dtype),
          jnp.zeros((batch, lp["wh"].shape[0]), dtype))
         for lp in params["lstm"])
+
+
+def stack_rnn_carries(carries, pad_to: int | None = None):
+    """Stack per-session carries (each ``init_rnn_carry(params, 1)``
+    shaped) into one batched carry: N x ([1, H], [1, H]) per layer ->
+    ([N, H], [N, H]) per layer. ``pad_to`` right-pads the batch dim with
+    zero rows (the decode lane's fixed width) in the same concatenate —
+    one op per tensor, and the stacked buffer is freshly allocated, so
+    the caller owns it (donation-safe)."""
+    n = len(carries)
+    pad = (pad_to - n) if pad_to is not None else 0
+    if pad < 0:
+        raise ValueError(f"cannot pad {n} carries to width {pad_to}")
+    out = []
+    for layer in range(len(carries[0])):
+        parts_h = [c[layer][0] for c in carries]
+        parts_c = [c[layer][1] for c in carries]
+        if pad:
+            z = jnp.zeros((pad,) + tuple(parts_h[0].shape[1:]),
+                          parts_h[0].dtype)
+            parts_h = parts_h + [z]
+            parts_c = parts_c + [z]
+        out.append((jnp.concatenate(parts_h, axis=0),
+                    jnp.concatenate(parts_c, axis=0)))
+    return tuple(out)
+
+
+def split_rnn_carry(carry, n: int | None = None):
+    """Inverse of ``stack_rnn_carries``: a batched carry -> list of
+    batch-1 per-session carries (first ``n`` rows; padding rows beyond
+    ``n`` are dropped)."""
+    batch = carry[0][0].shape[0]
+    n = batch if n is None else n
+    return [tuple((h[i:i + 1], c[i:i + 1]) for h, c in carry)
+            for i in range(n)]
 
 
 def rnn_step(params: PyTree, x_t, carries, cfg: RNNConfig):

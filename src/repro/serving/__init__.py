@@ -8,7 +8,9 @@ Layout (DESIGN: one concern per module):
                     padding, flush on max-batch or max-wait, jit-cached
                     per-bucket apply so the hot path never recompiles);
                     ``EngineShard`` is one worker, ``ServingEngine`` the
-                    single-shard special case;
+                    single-shard special case; ``submit_step`` queues
+                    streaming session steps, flushed as ONE fused decode
+                    dispatch per batch (the batched decode path);
 - ``router.py``     consistent-hash (rendezvous) routing of client ids to
                     shards + ``ShardedServingEngine``, the mesh of
                     per-shard ``EngineShard`` workers behind the same
@@ -18,7 +20,10 @@ Layout (DESIGN: one concern per module):
                     staleness skew (version vector per shard);
 - ``sessions.py``   per-client recurrent carry cache (LRU + TTL + byte
                     accounting) making each streaming step O(1);
-                    ``ShardedSessionCache`` shards it by client id;
+                    ``RecurrentSessionRunner.step_many`` gathers N
+                    session carries into one fused decode dispatch and
+                    scatters them back (bitwise-equal to per-session
+                    steps); ``ShardedSessionCache`` shards by client id;
 - ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
                     interface over the paper LSTM and every zoo arch,
                     with the EVT tail alert head;

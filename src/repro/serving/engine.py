@@ -13,6 +13,12 @@ single-shard special case that keeps the original public API. The
 sharded mesh in ``repro.serving.router`` runs several ``EngineShard``
 workers side by side (each over its own registry replica) and routes
 requests between them.
+
+Streaming sessions ride the same queue: ``submit_step`` enqueues one
+observation for a client's resident session, and the worker flushes
+every queued step for a model as ONE fused decode dispatch per
+decode-lane chunk (gather carries -> fused step+alert -> scatter back)
+instead of one jit dispatch per client — the batched decode path.
 """
 
 from __future__ import annotations
@@ -84,6 +90,28 @@ class _Request:
         self.client_id = client_id
 
 
+class _StepRequest:
+    """One streaming step: a single feature vector for a session whose
+    carry lives in the shard's session cache. Grouped per model and
+    flushed as ONE fused decode dispatch (``RecurrentSessionRunner.
+    step_many``), not one dispatch per client."""
+
+    __slots__ = ("payload", "history", "future", "t_enq", "client_id")
+
+    def __init__(self, payload: np.ndarray, t_enq: float, client_id: str,
+                 history=None):
+        self.payload = payload
+        self.history = history
+        self.future: Future = Future()
+        self.t_enq = t_enq
+        self.client_id = client_id
+
+
+# pseudo length-bucket under which step requests group in the pending
+# map: one flush group per model, orthogonal to the window buckets
+_STEP_BUCKET = -1
+
+
 class EngineShard:
     """One serving worker: a request queue drained by a thread that
     groups, pads and dispatches micro-batches over a ``ModelRegistry``
@@ -91,17 +119,57 @@ class EngineShard:
     names the worker in thread names and mesh telemetry."""
 
     def __init__(self, registry, config: BatcherConfig | None = None,
-                 telemetry: Telemetry | None = None, shard_id: int = 0):
+                 telemetry: Telemetry | None = None, shard_id: int = 0,
+                 session_cache=None):
         self.registry = registry
         self.config = config or BatcherConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shard_id = shard_id
         self._queue: queue.Queue = queue.Queue()
-        self._pending: dict[tuple[str, int], list[_Request]] = {}
+        self._pending: dict[tuple[str, int], list] = {}
         self._running = False
         # makes submit's running-check + enqueue atomic w.r.t. stop()
         self._state_lock = threading.Lock()
         self._thread: threading.Thread | None = None
+        # streaming sessions: shard-local carry cache + one batched
+        # runner per hosted model, built lazily on the first step
+        self._session_cache = session_cache
+        self._runners: dict[str, object] = {}
+        self._runners_lock = threading.Lock()
+
+    @property
+    def sessions(self):
+        """The shard-local session cache (created on first use)."""
+        if self._session_cache is None:
+            with self._runners_lock:
+                if self._session_cache is None:
+                    from repro.serving.sessions import SessionCache
+
+                    self._session_cache = SessionCache(
+                        telemetry=self.telemetry)
+        return self._session_cache
+
+    def _step_runner(self, model_key: str):
+        runner = self._runners.get(model_key)
+        if runner is None:
+            cache = self.sessions   # resolve BEFORE taking the lock
+            with self._runners_lock:
+                runner = self._runners.get(model_key)
+                if runner is None:
+                    from repro.serving.sessions import \
+                        RecurrentSessionRunner
+
+                    # provider-backed: the runner re-resolves the
+                    # registry key each flush, so weight hot-swaps are
+                    # picked up without rebuilding the runner. Carries
+                    # are donated to the fused step (no-op on CPU): the
+                    # worker thread is the only toucher of this cache
+                    # while serving, so in-place consumption is safe
+                    runner = RecurrentSessionRunner(
+                        lambda: self.registry.get(model_key), cache=cache,
+                        donate_carries=True)
+                    self._runners[model_key] = runner
+        return runner
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "EngineShard":
@@ -168,6 +236,56 @@ class EngineShard:
         return self.submit(model_key, window,
                            client_id=client_id).result(timeout=timeout)
 
+    def submit_step(self, model_key: str, client_id: str, x_t,
+                    history=None) -> Future:
+        """Enqueue one streaming step for ``client_id``'s session:
+        ``x_t`` is a single [F] feature vector (the newest observation),
+        ``history`` an optional [T, F] window prefix replayed on a cache
+        miss. Steps for a model group into ONE fused decode dispatch per
+        flush — the batched Pallas/XLA decode path — instead of one
+        dispatch per client. Returns a Future resolving to
+        (forecast, p_extreme) scalars."""
+        fc = self.registry.get(model_key)
+        if not hasattr(fc, "step") or not fc.feature_dim:
+            raise ValueError(
+                f"{model_key!r} does not support incremental session "
+                f"serving (needs step/init_carry/replay and a feature "
+                f"dim)")
+        payload = np.asarray(x_t, np.float32)
+        if payload.ndim == 2 and payload.shape[0] == 1:
+            payload = payload[0]
+        if payload.shape != (fc.feature_dim,):
+            raise ValueError(
+                f"{model_key!r} expects step vectors of shape "
+                f"[{fc.feature_dim}], got {payload.shape}")
+        if history is not None:
+            # validate HERE, against this caller only: a malformed
+            # history that first blew up inside the flush would fail
+            # every other client's step sharing that fused batch
+            history = np.asarray(history, np.float32)
+            if history.ndim != 2 or history.shape[0] < 1 \
+                    or history.shape[1] != fc.feature_dim:
+                raise ValueError(
+                    f"history must be [T>=1, {fc.feature_dim}], got "
+                    f"{history.shape}")
+        if client_id is None:
+            raise ValueError("streaming steps require a client_id (the "
+                             "session key)")
+        req = _StepRequest(payload, time.perf_counter(), str(client_id),
+                           history=history)
+        with self._state_lock:
+            if not self._running:
+                raise RuntimeError("engine is not running (use start() or a "
+                                   "with-block)")
+            self._queue.put((model_key, req))
+        return req.future
+
+    def step(self, model_key: str, client_id: str, x_t, history=None,
+             timeout: float | None = 30.0):
+        """Blocking ``submit_step`` — one (forecast, p_extreme) tuple."""
+        return self.submit_step(model_key, client_id, x_t,
+                                history=history).result(timeout=timeout)
+
     def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
                ) -> int:
         """Compile every (pow2 batch) x (length bucket) apply the hot path
@@ -191,6 +309,12 @@ class EngineShard:
                     self._payload_shape(fc, t), self._payload_dtype(fc))] * b,
                     [t] * b, b, t))
                 n += 1
+        if hasattr(fc, "warm_decode") and fc.feature_dim:
+            # the streaming decode lane: single step, batched flush and
+            # miss-replay programs, plus the runner itself (its ctor
+            # pre-compiles the full-window replay) — all off the hot path
+            n += fc.warm_decode()
+            self._step_runner(model_key)
         return n
 
     # -- batching internals ------------------------------------------------
@@ -213,8 +337,40 @@ class EngineShard:
             out_len[i] = t
         return x, out_len
 
+    def _flush_steps(self, model_key: str, reqs: list[_StepRequest]) -> None:
+        """One batched decode flush: every queued step for ``model_key``
+        becomes one fused dispatch per decode-lane chunk via the
+        session runner's gather/scatter ``step_many``."""
+        reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
+        if not reqs:
+            return
+        try:
+            runner = self._step_runner(model_key)
+            fc = runner._resolve()
+            outs = runner.step_many([(r.client_id, r.payload, r.history)
+                                     for r in reqs])
+        except Exception as e:  # noqa: BLE001 — fail the steps, not the engine
+            for r in reqs:
+                r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        version = getattr(fc, "version", None)
+        # lane slots actually dispatched (waves for duplicate clients,
+        # each padded to the decode width) — counted by the runner at
+        # the dispatch decision, not re-derived here
+        padded = getattr(runner, "last_step_slots", len(reqs))
+        self.telemetry.record_step_batch([now - r.t_enq for r in reqs],
+                                         n_padded=padded)
+        for r, (y, p) in zip(reqs, outs):
+            r.future.model_version = version
+            r.future.client_id = r.client_id
+            r.future.set_result((y, p))
+
     def _flush(self, model_key: str, bucket_t: int,
                reqs: list[_Request]) -> None:
+        if bucket_t == _STEP_BUCKET:
+            self._flush_steps(model_key, reqs)
+            return
         # transition futures to RUNNING; drops client-cancelled requests
         # and guarantees the set_result/set_exception below cannot raise
         # InvalidStateError into the worker thread
@@ -264,7 +420,9 @@ class EngineShard:
                 except queue.Empty:
                     break
                 drained = True
-                key = (model_key, cfg.bucket_len(req.length))
+                key = (model_key,
+                       _STEP_BUCKET if isinstance(req, _StepRequest)
+                       else cfg.bucket_len(req.length))
                 self._pending.setdefault(key, []).append(req)
             now = time.perf_counter()
             # flush full groups and expired groups
@@ -290,7 +448,9 @@ class EngineShard:
                 model_key, req = self._queue.get(timeout=min(timeout, 0.05))
             except queue.Empty:
                 continue
-            key = (model_key, cfg.bucket_len(req.length))
+            key = (model_key,
+                   _STEP_BUCKET if isinstance(req, _StepRequest)
+                   else cfg.bucket_len(req.length))
             self._pending.setdefault(key, []).append(req)
 
 

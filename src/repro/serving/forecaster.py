@@ -22,7 +22,7 @@ so ``p_extreme`` is comparable across models hosted in one registry.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+import threading
 from typing import Any
 
 import jax
@@ -32,7 +32,8 @@ import numpy as np
 from repro.extreme.evt import fit_tail, gev_cdf, tail_probability
 from repro.extreme.indicators import indicator_sequence, quantile_thresholds
 from repro.models.rnn import (RNNConfig, init_rnn, init_rnn_carry,
-                              rnn_apply_padded, rnn_step)
+                              rnn_apply_padded, rnn_step, split_rnn_carry,
+                              stack_rnn_carries)
 
 PyTree = Any
 
@@ -46,6 +47,7 @@ PyTree = Any
 # micro-batch flush, no eager tail math on the serving hot path (which
 # is what lets concurrent mesh shards overlap their GIL-free compute).
 _RNN_COMPILED: dict[RNNConfig, dict[str, Any]] = {}
+_RNN_COMPILED_LOCK = threading.Lock()
 
 
 def _fused_alert(score, head, xi, scale, active, gamma):
@@ -62,62 +64,142 @@ def _fused_alert(score, head, xi, scale, active, gamma):
 
 
 def _compiled_rnn(cfg: RNNConfig):
+    """Compiled function set for ``cfg`` — double-checked lock, so
+    concurrent first lookups (shard-join warmup races) build the
+    wrappers exactly once instead of racing to the dict slot."""
     fns = _RNN_COMPILED.get(cfg)
     if fns is None:
-        # benign race under threads: worst case two identical jit wrappers
-        # are built and one wins the dict slot
-
-        def predict(params, x, lens, xi, scale, active, gamma):
-            y, u = rnn_apply_padded(params, x, lens, cfg=cfg)
-            return y, _fused_alert(jnp.abs(y), u, xi, scale, active, gamma)
-
-        def step(params, x_t, carry, xi, scale, active, gamma):
-            y, u, carry = rnn_step(params, x_t, carry, cfg=cfg)
-            return y, _fused_alert(jnp.abs(y), u, xi, scale, active,
-                                   gamma), carry
-
-        def replay(params, window, carry, xi, scale, active, gamma):
-            # one lax.scan over the SAME fused per-step computation the
-            # session path runs (``step`` above, alert head included), so
-            # a cache-miss replay is ONE dispatch instead of O(window)
-            # host round trips. The scan is fully unrolled with
-            # optimization barriers at each step's boundary: inside a
-            # rolled loop body XLA selects instructions differently (FMA
-            # contraction, fusion shapes) than in the standalone step
-            # program, which breaks the session cache's bitwise
-            # step==replay promise in the low bits — unrolled
-            # barrier-isolated per-step subgraphs reproduce the
-            # standalone step's compilation context exactly (window
-            # lengths are bounded by cfg.window, so the unrolled
-            # programs stay small).
-            def body(c, x_t):
-                x_t, c = jax.lax.optimization_barrier((x_t, c))
-                y, p, c2 = step(params, x_t, c, xi, scale, active, gamma)
-                y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
-                return c2, (y, p, c2)
-
-            carry, (ys, ps, _cs) = jax.lax.scan(
-                body, carry, jnp.swapaxes(window, 0, 1),
-                unroll=window.shape[1])
-            # EVERY per-step output — y, p, and the intermediate carries
-            # — is returned live (callers take [-1] / the final carry):
-            # were any of them dead code, XLA would prune parts of the
-            # earlier iterations and re-fuse what remains differently
-            # from the standalone step program, breaking bitwise parity
-            # (measured: stacking y/p alone is not enough)
-            return ys, ps, _cs, carry
-
-        # gamma is static: gev_log_cdf branches on it in Python, and it
-        # is a per-deployment constant (one compile per distinct value)
-        fns = {
-            "apply": jax.jit(partial(rnn_apply_padded, cfg=cfg)),
-            "step": jax.jit(partial(rnn_step, cfg=cfg)),
-            "predict": jax.jit(predict, static_argnames=("gamma",)),
-            "fused_step": jax.jit(step, static_argnames=("gamma",)),
-            "replay": jax.jit(replay, static_argnames=("gamma",)),
-        }
-        _RNN_COMPILED[cfg] = fns
+        with _RNN_COMPILED_LOCK:
+            fns = _RNN_COMPILED.get(cfg)
+            if fns is None:
+                fns = _build_rnn_fns(cfg)
+                _RNN_COMPILED[cfg] = fns
     return fns
+
+
+def _build_rnn_fns(cfg: RNNConfig):
+    def predict(params, x, lens, xi, scale, active, gamma):
+        y, u = rnn_apply_padded(params, x, lens, cfg=cfg)
+        return y, _fused_alert(jnp.abs(y), u, xi, scale, active, gamma)
+
+    def step(params, x_t, carry, xi, scale, active, gamma):
+        y, u, carry = rnn_step(params, x_t, carry, cfg=cfg)
+        return y, _fused_alert(jnp.abs(y), u, xi, scale, active,
+                               gamma), carry
+
+    def replay(params, window, carry, xi, scale, active, gamma):
+        # one lax.scan over the SAME fused per-step computation the
+        # session path runs (``step`` above, alert head included), so
+        # a cache-miss replay is ONE dispatch instead of O(window)
+        # host round trips. The scan is fully unrolled with
+        # optimization barriers at each step's boundary: inside a
+        # rolled loop body XLA selects instructions differently (FMA
+        # contraction, fusion shapes) than in the standalone step
+        # program, which breaks the session cache's bitwise
+        # step==replay promise in the low bits — unrolled
+        # barrier-isolated per-step subgraphs reproduce the
+        # standalone step's compilation context exactly (window
+        # lengths are bounded by cfg.window, so the unrolled
+        # programs stay small).
+        def body(c, x_t):
+            x_t, c = jax.lax.optimization_barrier((x_t, c))
+            y, p, c2 = step(params, x_t, c, xi, scale, active, gamma)
+            y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
+            return c2, (y, p, c2)
+
+        carry, (ys, ps, _cs) = jax.lax.scan(
+            body, carry, jnp.swapaxes(window, 0, 1),
+            unroll=window.shape[1])
+        # EVERY per-step output — y, p, and the intermediate carries
+        # — is returned live (callers take [-1] / the final carry):
+        # were any of them dead code, XLA would prune parts of the
+        # earlier iterations and re-fuse what remains differently
+        # from the standalone step program, breaking bitwise parity
+        # (measured: stacking y/p alone is not enough)
+        return ys, ps, _cs, carry
+
+    # -- decode lane -----------------------------------------------
+    # Every streaming step — single-session or a batched flush —
+    # executes the SAME barrier-isolated step subgraph at one fixed
+    # batch width. That is what makes batched-step == per-session
+    # step == replay hold BITWISE: XLA compiles the fused step
+    # differently at different batch shapes (measured: batch-N and
+    # batch-1 programs disagree in the low bits), but within one
+    # program each row's output is a pure function of that row, so
+    # padding rows can never perturb real sessions. The barriers
+    # isolate the width-W step subgraph from the surrounding
+    # pad/gather graph exactly like ``replay``'s per-step barriers
+    # do — all lane programs therefore share one compilation
+    # context for the step math.
+
+    def decode_step(params, x_t, carry, xi, scale, active, gamma,
+                    width):
+        # x_t [b, F], carry [b, H]-stacked, b <= width (static)
+        pad = width - x_t.shape[0]
+        xp = jnp.pad(x_t, ((0, pad), (0, 0)))
+        cp = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, pad), (0, 0))), carry)
+        xp, cp = jax.lax.optimization_barrier((xp, cp))
+        y, p, c2 = step(params, xp, cp, xi, scale, active, gamma)
+        y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
+        b = x_t.shape[0]
+        return y[:b], p[:b], jax.tree_util.tree_map(
+            lambda a: a[:b], c2)
+
+    def decode_many(params, x_t, carries, xi, scale, active, gamma):
+        # x_t [W, F]; carries: tuple of W per-session batch-1
+        # carries (padding slots hold zero carries). Per-session
+        # buffers go in and come out as separate jit args/results,
+        # so a batched flush is ONE dispatch with no eager
+        # gather/scatter ops around it.
+        stacked = stack_rnn_carries(carries)
+        xp, cp = jax.lax.optimization_barrier((x_t, stacked))
+        y, p, c2 = step(params, xp, cp, xi, scale, active, gamma)
+        y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
+        return y, p, tuple(split_rnn_carry(c2))
+
+    def decode_replay(params, window, carry, xi, scale, active,
+                      gamma, width):
+        # window [b, T, F], b <= width: replay at lane width so the
+        # unrolled per-step subgraphs match the decode steps'
+        pad = width - window.shape[0]
+        wp = jnp.pad(window, ((0, pad), (0, 0), (0, 0)))
+        cp = jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, pad), (0, 0))), carry)
+        ys, ps, cs, c2 = replay(params, wp, cp, xi, scale, active,
+                                gamma)
+        b = window.shape[0]
+        # the intermediate carries stay live in the output (sliced,
+        # like every other result) — pruning them re-fuses the
+        # earlier unrolled steps and breaks bitwise parity (see the
+        # measured note in ``replay`` above)
+        return (ys[:, :b], ps[:, :b],
+                jax.tree_util.tree_map(lambda a: a[:, :b], cs),
+                jax.tree_util.tree_map(lambda a: a[:b], c2))
+
+    # gamma is static: gev_log_cdf branches on it in Python, and it
+    # is a per-deployment constant (one compile per distinct value)
+    return {
+        "predict": jax.jit(predict, static_argnames=("gamma",)),
+        # NOTE: no standalone (non-lane) step program is exposed — every
+        # streaming step must go through the fixed-width decode lane
+        # below, or the bitwise step==replay==batched-step contract dies
+        "replay": jax.jit(replay, static_argnames=("gamma",)),
+        "decode_step": jax.jit(decode_step,
+                               static_argnames=("gamma", "width")),
+        "decode_many": jax.jit(decode_many,
+                               static_argnames=("gamma",)),
+        # the donating variant: per-session carry buffers handed to
+        # the lane are consumed in place (no copy into the stacked
+        # batch). Only safe when the caller exclusively owns them —
+        # the engine-internal runner does; see ``step_many`` — and
+        # only useful off-CPU (CPU donation is a no-op that warns)
+        "decode_many_donate": jax.jit(decode_many,
+                                      static_argnames=("gamma",),
+                                      donate_argnums=(2,)),
+        "decode_replay": jax.jit(decode_replay,
+                                 static_argnames=("gamma", "width")),
+    }
 
 
 def _alert_probability(score, tail: dict | None, gamma: float, head=None):
@@ -155,11 +237,23 @@ class LSTMForecaster:
     # publication time (for staleness-at-serve-time telemetry)
     version: int = 0
     published_at: float | None = None
+    # decode-lane width: EVERY streaming step/replay runs the fused step
+    # at this fixed batch width (padded; larger batches chunk), which is
+    # what keeps step == replay == batched-step bitwise-equal — XLA
+    # compiles different batch shapes differently, one shared width
+    # side-steps that. 8 = one TPU sublane tile; also the Pallas
+    # kernel's block_b.
+    decode_width: int = 8
     kind: str = dataclasses.field(default="lstm", init=False)
 
     def __post_init__(self):
+        if self.decode_width < 1:
+            raise ValueError(
+                f"decode_width must be >= 1, got {self.decode_width}")
         self._fns = _compiled_rnn(self.cfg)
-        self._apply, self._step = self._fns["apply"], self._fns["step"]
+        # one zero per-session carry, shared by every padding slot of a
+        # partial batched flush (never donated — see step_many)
+        self._zero_session = init_rnn_carry(self.params, 1)
 
     # -- batched serving ---------------------------------------------------
     @property
@@ -216,13 +310,68 @@ class LSTMForecaster:
 
     def step(self, x_t, carry):
         """One O(1) streaming step: x_t [B, F]. Returns
-        (forecast [B], p_extreme [B], new_carry) — one fused dispatch,
-        like ``predict``."""
+        (forecast [B], p_extreme [B], new_carry) — one fused dispatch
+        through the decode lane (the step runs padded at
+        ``decode_width``; batches beyond the width chunk)."""
         x_t = jnp.asarray(x_t, jnp.float32)
-        y, p, carry = self._fns["fused_step"](self.params, x_t, carry,
-                                              *self._tail_args(),
-                                              gamma=float(self.gamma))
+        B = x_t.shape[0]
+        W = self.decode_width
+        if B > W:
+            ys, ps, carries = [], [], []
+            for lo in range(0, B, W):
+                chunk = jax.tree_util.tree_map(lambda a: a[lo:lo + W],
+                                               carry)
+                y, p, c2 = self.step(x_t[lo:lo + W], chunk)
+                ys.append(y), ps.append(p), carries.append(c2)
+            stacked = jax.tree_util.tree_map(
+                lambda *leaves: jnp.concatenate(leaves, axis=0), *carries)
+            return np.concatenate(ys), np.concatenate(ps), stacked
+        y, p, carry = self._fns["decode_step"](self.params, x_t, carry,
+                                               *self._tail_args(),
+                                               gamma=float(self.gamma),
+                                               width=W)
         return np.asarray(y), np.asarray(p), carry
+
+    def step_many(self, xs, carries, donate: bool = False):
+        """Batched streaming step for N independent sessions: xs [N, F],
+        ``carries`` a list of N batch-1 carries (one per session, as the
+        session cache holds them). Returns (forecast [N], p_extreme [N],
+        new_carries list) in ceil(N / decode_width) fused dispatches —
+        per-session buffers travel as jit arguments/results, so the
+        gather/scatter around the lane costs no extra dispatches.
+
+        ``donate=True`` additionally donates the input carry buffers to
+        the lane (they are consumed — no copy into the stacked batch).
+        Only pass it when the caller exclusively owns every carry: the
+        engine-internal runner does (one worker thread, cache exported
+        only after drain); carries that a concurrent reader could still
+        hand out (live-membership migration) must NOT be donated. On CPU
+        donation is skipped (XLA:CPU implements it as a warn + copy)."""
+        xs = np.asarray(xs, np.float32)
+        N = len(carries)
+        W = self.decode_width
+        donate = donate and jax.default_backend() != "cpu"
+        fn = self._fns["decode_many_donate" if donate else "decode_many"]
+        ys, ps, out = [], [], []
+        for lo in range(0, N, W):
+            chunk = list(carries[lo:lo + W])
+            n = len(chunk)
+            if n < W:
+                # padding slots: the shared zero carry (fresh buffers
+                # when donating — a buffer may be donated only once)
+                pad = [init_rnn_carry(self.params, 1) for _ in
+                       range(W - n)] if donate \
+                    else [self._zero_session] * (W - n)
+                chunk.extend(pad)
+            x = np.zeros((W, xs.shape[1]), np.float32)
+            x[:n] = xs[lo:lo + n]
+            y, p, sessions = fn(self.params, x, tuple(chunk),
+                                *self._tail_args(),
+                                gamma=float(self.gamma))
+            ys.append(np.asarray(y)[:n])
+            ps.append(np.asarray(p)[:n])
+            out.extend(sessions[:n])
+        return np.concatenate(ys), np.concatenate(ps), out
 
     def replay(self, window, carry=None):
         """Full-window recompute through the *same* per-step math the
@@ -230,16 +379,48 @@ class LSTMForecaster:
         incremental serving is bitwise-identical to it — as ONE jitted
         ``lax.scan`` dispatch, not a Python loop syncing the device every
         timestep (O(window) host round trips on every cache miss and
-        swap re-prime)."""
+        swap re-prime). Runs at the decode-lane width, padded, like
+        every step."""
         window = jnp.asarray(window, jnp.float32)
+        B = window.shape[0]
         if carry is None:
-            carry = self.init_carry(window.shape[0])
+            carry = self.init_carry(B)
         if window.shape[1] == 0:
             return None, None, carry
-        ys, ps, _, carry = self._fns["replay"](self.params, window, carry,
-                                               *self._tail_args(),
-                                               gamma=float(self.gamma))
+        W = self.decode_width
+        if B > W:
+            ys, ps, carries = [], [], []
+            for lo in range(0, B, W):
+                chunk = jax.tree_util.tree_map(lambda a: a[lo:lo + W],
+                                               carry)
+                y, p, c2 = self.replay(window[lo:lo + W], chunk)
+                ys.append(y), ps.append(p), carries.append(c2)
+            stacked = jax.tree_util.tree_map(
+                lambda *leaves: jnp.concatenate(leaves, axis=0), *carries)
+            return np.concatenate(ys), np.concatenate(ps), stacked
+        ys, ps, _, carry = self._fns["decode_replay"](
+            self.params, window, carry, *self._tail_args(),
+            gamma=float(self.gamma), width=W)
         return np.asarray(ys[-1]), np.asarray(ps[-1]), carry
+
+    def warm_decode(self) -> int:
+        """Compile the decode-lane programs (single step, batched flush
+        in both its plain and donating variants, full-window replay) off
+        the serving path. Returns #programs the streaming hot path can
+        hit."""
+        F = self.feature_dim
+        W = self.decode_width
+        self.step(np.zeros((1, F), np.float32), self.init_carry(1))
+        self.step_many(np.zeros((W, F), np.float32),
+                       [self.init_carry(1) for _ in range(W)])
+        # the donating variant is what the engine's runner dispatches
+        # off-CPU — it must be compiled here too, not on the first
+        # flush (on CPU this resolves to the plain program: cache hit)
+        self.step_many(np.zeros((W, F), np.float32),
+                       [self.init_carry(1) for _ in range(W)],
+                       donate=True)
+        self.replay(np.zeros((1, self.window, F), np.float32))
+        return 4
 
     # -- calibration -------------------------------------------------------
     def calibrate(self, windows, quantile: float = 0.95) -> "LSTMForecaster":

@@ -269,6 +269,17 @@ class ShardedServingEngine:
             shard.stop()
             for cache in self._session_caches:
                 cache.remove_shard(sid)  # migrates its clients' carries
+            # engine-internal streaming sessions re-home too, carries
+            # intact — safe to export here: the worker has drained, so
+            # no step flush is in flight on them. (A shard JOINING the
+            # mesh takes no carries — its clients miss and rebuild from
+            # history, standard consistent-hash cache semantics.)
+            if shard._session_cache is not None:
+                for cid, carry, nbytes, version in shard.sessions.export():
+                    target = self.shards.get(self.router.shard_for(cid))
+                    if target is not None:
+                        target.sessions.put_new(cid, carry, nbytes,
+                                                version=version)
             self.swarm.remove_replica(sid)
 
     def predict(self, model_key: str, window,
@@ -276,6 +287,26 @@ class ShardedServingEngine:
                 client_id: str | None = None):
         return self.submit(model_key, window,
                            client_id=client_id).result(timeout=timeout)
+
+    def submit_step(self, model_key: str, client_id: str, x_t,
+                    history=None):
+        """Enqueue one streaming step on the shard that owns
+        ``client_id`` (steps are always session-affine: the client's
+        carry lives in that shard's session cache). Steps flush as one
+        fused decode dispatch per shard — see ``EngineShard.
+        submit_step``."""
+        if client_id is None:
+            raise ValueError("streaming steps require a client_id (the "
+                             "session key)")
+        with self._membership_lock:
+            sid = self.router.shard_for(str(client_id))
+            return self._shard(sid).submit_step(model_key, client_id, x_t,
+                                                history=history)
+
+    def step(self, model_key: str, client_id: str, x_t, history=None,
+             timeout: float | None = 30.0):
+        return self.submit_step(model_key, client_id, x_t,
+                                history=history).result(timeout=timeout)
 
     def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
                ) -> int:

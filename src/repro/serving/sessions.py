@@ -3,7 +3,11 @@ requests so a streaming step is O(1) instead of O(window).
 
 ``SessionCache`` is model-agnostic (it stores opaque carries with byte
 accounting); ``RecurrentSessionRunner`` binds it to a forecaster that
-exposes ``init_carry`` / ``step`` / ``replay``. Eviction is LRU with an
+exposes ``init_carry`` / ``step`` / ``replay``. ``step_many`` is the
+batched decode path: N sessions' carries are gathered from the cache,
+advanced in one fused dispatch per decode-lane chunk (forecasters
+exposing ``step_many``), and scattered back — bitwise-equal to stepping
+each session alone. Eviction is LRU with an
 optional TTL and byte budget. A cache miss replays the client's window
 prefix through the same compiled step function the hot path uses, so —
 provided the client supplies its history on a miss — eviction never
@@ -465,12 +469,21 @@ class RecurrentSessionRunner:
     """
 
     def __init__(self, forecaster, cache: SessionCache | None = None,
-                 on_miss: str = "zeros"):
+                 on_miss: str = "zeros", donate_carries: bool = False):
         if callable(forecaster) and not hasattr(forecaster, "step"):
             self._provider = forecaster
         else:
             self._provider = None
             self.forecaster = forecaster
+        # donate_carries: batched steps hand the cached carry buffers to
+        # the fused program for in-place consumption (no copy into the
+        # stacked batch; no-op on CPU). ONLY safe when this runner's
+        # cache is touched by a single thread during serving — the
+        # engine-internal runner qualifies (one worker flushes, exports
+        # happen after drain); a cache shared with concurrent readers
+        # (live-membership migration) must keep the default.
+        self.donate_carries = donate_carries
+        self.last_step_slots = 0     # lane slots of the last step_many
         fc = self._resolve()
         if on_miss not in ("zeros", "error"):
             raise ValueError("on_miss must be 'zeros' or 'error'")
@@ -498,34 +511,11 @@ class RecurrentSessionRunner:
                     f"support incremental serving (missing {attr!r})")
         return fc
 
-    def step(self, client_id: str, x_t, history=None):
-        """One streaming step for ``client_id``. ``x_t`` is one feature
-        vector [F] (or [1, F]). On a cache miss the carry is rebuilt from
-        ``history`` ([T, F] window prefix, replayed through the same
-        compiled step the hot path uses). Without history, a miss starts
-        a fresh zero-state session — correct for a new client, but an
-        evicted client's forecasts silently restart from scratch, so
-        deployments where eviction is expected should pass history or
-        construct the runner with ``on_miss="error"``.
-        Returns (forecast, p_extreme) scalars."""
-        import numpy as np
-
-        fc = self._resolve()
-        version = getattr(fc, "version", 0)
-        x_t = np.asarray(x_t, np.float32)
-        if x_t.ndim == 1:
-            x_t = x_t[None, :]
-        hist = None
-        if history is not None:
-            hist = np.asarray(history, np.float32)
-            window = getattr(fc, "window", None)
-            if window and hist.shape[0] > window:
-                # clamp to the newest `window` steps: the serving
-                # contract replays window prefixes (the model is causal
-                # over a sliding window), and an unbounded set of
-                # history lengths would compile one replay program per
-                # distinct length
-                hist = hist[-window:]
+    def _resolve_carry(self, fc, client_id: str, hist, version: int):
+        """Carry-resolution shared by ``step`` and ``step_many``: cache
+        hit (with lazy re-prime when the weights hot-swapped under the
+        carry), else rebuild from history, else zero state / error.
+        Returns (carry, version stamp for the put-back)."""
         entry = self.cache.get_entry(client_id)
         carry = None
         stamp = version
@@ -552,6 +542,117 @@ class RecurrentSessionRunner:
                     f"no session for {client_id!r} and no history given")
             else:
                 carry = fc.init_carry(1)
+        return carry, stamp
+
+    def _clamp_history(self, fc, history):
+        if history is None:
+            return None
+        import numpy as np
+
+        hist = np.asarray(history, np.float32)
+        window = getattr(fc, "window", None)
+        if window and hist.shape[0] > window:
+            # clamp to the newest `window` steps: the serving
+            # contract replays window prefixes (the model is causal
+            # over a sliding window), and an unbounded set of
+            # history lengths would compile one replay program per
+            # distinct length
+            hist = hist[-window:]
+        return hist
+
+    def step(self, client_id: str, x_t, history=None):
+        """One streaming step for ``client_id``. ``x_t`` is one feature
+        vector [F] (or [1, F]). On a cache miss the carry is rebuilt from
+        ``history`` ([T, F] window prefix, replayed through the same
+        compiled step the hot path uses). Without history, a miss starts
+        a fresh zero-state session — correct for a new client, but an
+        evicted client's forecasts silently restart from scratch, so
+        deployments where eviction is expected should pass history or
+        construct the runner with ``on_miss="error"``.
+        Returns (forecast, p_extreme) scalars."""
+        import numpy as np
+
+        fc = self._resolve()
+        version = getattr(fc, "version", 0)
+        x_t = np.asarray(x_t, np.float32)
+        if x_t.ndim == 1:
+            x_t = x_t[None, :]
+        hist = self._clamp_history(fc, history)
+        carry, stamp = self._resolve_carry(fc, client_id, hist, version)
         y, p, carry = fc.step(x_t, carry)
         self.cache.put(client_id, carry, self._nbytes, version=stamp)
         return float(y[0]), float(p[0])
+
+    def step_many(self, items):
+        """Batched streaming step: ``items`` is a list of
+        ``(client_id, x_t, history)`` tuples (history may be None). All
+        sessions step in ONE fused dispatch per decode-lane chunk
+        (``forecaster.step_many``) instead of one dispatch per client —
+        carries are gathered from the cache, stepped stacked, and
+        scattered back, bitwise-identical to calling ``step`` per item
+        (the lane runs every path at one fixed batch width).
+
+        Duplicate client ids are legal: later occurrences run in a
+        follow-up wave so each step sees the carry its predecessor
+        wrote, preserving per-client stream order. Returns
+        ``[(forecast, p_extreme), ...]`` in item order. Requires the
+        forecaster to expose ``step_many``; per-session ``step`` is the
+        fallback."""
+        import numpy as np
+
+        fc = self._resolve()
+        self.last_step_slots = len(items)
+        if not items:
+            return []
+        if not hasattr(fc, "step_many"):
+            return [self.step(cid, x_t, history=h) for cid, x_t, h in items]
+        version = getattr(fc, "version", 0)
+        results: list = [None] * len(items)
+        # waves: index items so one client's steps never share a batch
+        waves: list[list[int]] = []
+        seen_at: dict[str, int] = {}
+        for idx, (cid, _x, _h) in enumerate(items):
+            wave = seen_at.get(cid, -1) + 1
+            seen_at[cid] = wave
+            if wave == len(waves):
+                waves.append([])
+            waves[wave].append(idx)
+        # decode-lane slots this call dispatches (each wave pads to the
+        # lane width, chunking beyond it) — the engine reads this for
+        # its occupancy telemetry, so the accounting lives with the
+        # dispatch decision instead of being re-derived
+        width = getattr(fc, "decode_width", None)
+        self.last_step_slots = sum(
+            (-(-len(w) // width) * width) if width else len(w)
+            for w in waves)
+        for wave in waves:
+            xs = np.zeros((len(wave), fc.feature_dim), np.float32)
+            carries, stamps = [], []
+            for row, idx in enumerate(wave):
+                cid, x_t, history = items[idx]
+                x_t = np.asarray(x_t, np.float32)
+                xs[row] = x_t[0] if x_t.ndim == 2 else x_t
+                hist = self._clamp_history(fc, history)
+                carry, stamp = self._resolve_carry(fc, cid, hist, version)
+                carries.append(carry)
+                stamps.append(stamp)
+            try:
+                ys, ps, new_carries = fc.step_many(
+                    xs, carries, donate=self.donate_carries)
+            except Exception:
+                if self.donate_carries:
+                    # the fused program may have consumed some of the
+                    # donated carry buffers before failing — a cache
+                    # entry pointing at a deleted buffer would poison
+                    # every later step for that client. Drop the wave's
+                    # sessions instead: clients re-prime from history
+                    # (or zeros) on their next step.
+                    for idx in wave:
+                        self.cache.drop(items[idx][0])
+                raise
+            for row, idx in enumerate(wave):
+                cid = items[idx][0]
+                self.cache.put(cid, new_carries[row], self._nbytes,
+                               version=stamps[row])
+                results[idx] = (float(ys[row]), float(ps[row]))
+        return results

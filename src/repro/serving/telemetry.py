@@ -62,9 +62,15 @@ class Telemetry:
         self.requests_by_version: dict[int, int] = {}
         self.requests_by_client: dict[str, int] = {}
         self.untracked_client_requests = 0
+        # batched decode path: streaming steps flushed as fused batches
+        self.step_requests = 0
+        self.step_batches = 0
+        self.step_real_slots = 0    # sessions stepped
+        self.step_padded_slots = 0  # decode-lane slots dispatched
         self._latency = _Reservoir()
         self._staleness = _Reservoir()   # model age at serve time (s)
         self._batch_sizes = _Reservoir()
+        self._step_latency = _Reservoir()
 
     # -- recording ---------------------------------------------------------
     def record_request(self, latency_s: float, version: int | None = None,
@@ -117,6 +123,22 @@ class Telemetry:
         with self._lock:
             self.reprimes += n
 
+    def record_step_batch(self, latencies_s, n_padded: int | None = None
+                          ) -> None:
+        """One batched streaming-step flush: per-step queue+serve
+        latencies under a single lock acquisition, plus decode-lane
+        occupancy (``n_padded`` = lane slots dispatched, defaults to the
+        real count)."""
+        latencies_s = list(latencies_s)
+        with self._lock:
+            self.step_batches += 1
+            self.step_requests += len(latencies_s)
+            self.step_real_slots += len(latencies_s)
+            self.step_padded_slots += (n_padded if n_padded is not None
+                                       else len(latencies_s))
+            for lat in latencies_s:
+                self._step_latency.add(lat)
+
     def record_batch(self, n_real: int, n_padded: int) -> None:
         with self._lock:
             self.batches += 1
@@ -167,6 +189,16 @@ class Telemetry:
                 "unique_clients": len(self.requests_by_client),
                 "untracked_client_requests":
                     self.untracked_client_requests,
+                "step_requests": self.step_requests,
+                "step_batches": self.step_batches,
+                "steps_per_s": self.step_requests / elapsed,
+                "mean_step_batch": (self.step_real_slots / self.step_batches
+                                    if self.step_batches else 0.0),
+                "step_occupancy": (self.step_real_slots
+                                   / self.step_padded_slots
+                                   if self.step_padded_slots else 0.0),
+                "step_p50_ms": self._step_latency.percentile(50) * 1e3,
+                "step_p95_ms": self._step_latency.percentile(95) * 1e3,
             }
 
     def reset_clock(self) -> None:
@@ -184,9 +216,14 @@ class Telemetry:
             self.requests_by_version = {}
             self.requests_by_client = {}
             self.untracked_client_requests = 0
+            self.step_requests = 0
+            self.step_batches = 0
+            self.step_real_slots = 0
+            self.step_padded_slots = 0
             self._latency = _Reservoir()
             self._staleness = _Reservoir()
             self._batch_sizes = _Reservoir()
+            self._step_latency = _Reservoir()
 
     @staticmethod
     def merge(telemetries) -> dict:
@@ -202,10 +239,13 @@ class Telemetry:
         telemetries = list(telemetries)
         lat: list[float] = []
         stale: list[float] = []
+        step_lat: list[float] = []
         totals = {"requests": 0, "batches": 0, "real_slots": 0,
                   "padded_slots": 0, "cache_hits": 0, "cache_misses": 0,
                   "cache_evictions": 0, "swaps": 0, "reprimes": 0,
-                  "untracked_client_requests": 0}
+                  "untracked_client_requests": 0, "step_requests": 0,
+                  "step_batches": 0, "step_real_slots": 0,
+                  "step_padded_slots": 0}
         by_version: dict[int, int] = {}
         by_client: dict[str, int] = {}
         by_shard: list[int] = []
@@ -222,6 +262,7 @@ class Telemetry:
                     by_client[c] = by_client.get(c, 0) + n
                 lat.extend(tel._latency._buf)
                 stale.extend(tel._staleness._buf)
+                step_lat.extend(tel._step_latency._buf)
         lookups = totals["cache_hits"] + totals["cache_misses"]
         return {
             "shards": len(telemetries),
@@ -248,6 +289,17 @@ class Telemetry:
             "unique_clients": len(by_client),
             "untracked_client_requests":
                 totals["untracked_client_requests"],
+            "step_requests": totals["step_requests"],
+            "step_batches": totals["step_batches"],
+            "steps_per_s": totals["step_requests"] / elapsed,
+            "mean_step_batch": (totals["step_real_slots"]
+                                / totals["step_batches"]
+                                if totals["step_batches"] else 0.0),
+            "step_occupancy": (totals["step_real_slots"]
+                               / totals["step_padded_slots"]
+                               if totals["step_padded_slots"] else 0.0),
+            "step_p50_ms": _percentile(step_lat, 50) * 1e3,
+            "step_p95_ms": _percentile(step_lat, 95) * 1e3,
         }
 
     @staticmethod
@@ -263,4 +315,10 @@ class Telemetry:
             line += (f" | {snap['swaps']} swaps, staleness p95 "
                      f"{snap['staleness_p95_s']:.2f} s, "
                      f"{len(snap['requests_by_version'])} versions served")
+        if snap.get("step_requests"):
+            line += (f" | {snap['step_requests']} steps in "
+                     f"{snap['step_batches']} fused flushes "
+                     f"({snap['steps_per_s']:.0f} steps/s, mean batch "
+                     f"{snap['mean_step_batch']:.1f}, step p95 "
+                     f"{snap['step_p95_ms']:.2f} ms)")
         return line

@@ -42,7 +42,11 @@ def test_evl_kernel_reductions():
 # --------------------------------------------------------------- LSTM ----
 
 @pytest.mark.parametrize("batch,in_dim,hidden", [
-    (1, 5, 64), (13, 5, 64), (32, 7, 32), (8, 16, 128)])
+    (1, 5, 64), (13, 5, 64), (32, 7, 32), (8, 16, 128),
+    # non-multiple-of-8 shapes: odd batch, odd feature dim, batch=1
+    # with a tiny feature dim, odd-everything — the wrapper's sublane
+    # padding must keep all of them exact
+    (3, 9, 24), (7, 3, 40), (1, 1, 8), (9, 11, 48), (5, 5, 16)])
 @pytest.mark.parametrize("dtype", [np.float32])
 def test_lstm_kernel_matches_ref(batch, in_dim, hidden, dtype):
     x = jnp.asarray(RNG.standard_normal((batch, in_dim)).astype(dtype))
@@ -102,6 +106,149 @@ def test_lstm_kernel_resolves_backend_at_trace_time(monkeypatch):
     finally:
         # drop the traces built against the patched backend/kernel
         lstm_ops.lstm_cell_fused.clear_cache()
+
+
+# ----------------------------------------------------------- dispatch ----
+
+def test_dispatch_default_table_cpu_picks_xla():
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    for batch, hidden in [(1, 8), (8, 64), (128, 256)]:
+        assert dispatch.resolve("lstm_cell", batch=batch, hidden=hidden,
+                                backend="cpu") == "xla"
+
+
+def test_dispatch_default_table_tpu_thresholds():
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    assert dispatch.resolve("lstm_cell", batch=8, hidden=64,
+                            backend="tpu") == "pallas"
+    assert dispatch.resolve("lstm_cell", batch=1, hidden=64,
+                            backend="tpu") == "xla"      # below batch floor
+    assert dispatch.resolve("lstm_cell", batch=8, hidden=4,
+                            backend="tpu") == "xla"      # below hidden floor
+
+
+def test_dispatch_unknown_op_and_backend_default_to_xla():
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    assert dispatch.resolve("nope", batch=64, hidden=64,
+                            backend="tpu") == "xla"
+    assert dispatch.resolve("lstm_cell", batch=64, hidden=64,
+                            backend="rocm") == "xla"     # "default" rules
+
+
+def test_dispatch_force_overrides_everything(monkeypatch):
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    with dispatch.force("pallas"):
+        assert dispatch.resolve("lstm_cell", batch=1, hidden=8,
+                                backend="cpu") == "pallas"
+    assert dispatch.resolve("lstm_cell", batch=1, hidden=8,
+                            backend="cpu") == "xla"      # restored
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "xla")
+    assert dispatch.resolve("lstm_cell", batch=64, hidden=64,
+                            backend="tpu") == "xla"
+    monkeypatch.setenv("REPRO_KERNEL_IMPL", "bogus")
+    with pytest.raises(ValueError):
+        dispatch.resolve("lstm_cell", batch=1, hidden=8)
+
+
+def test_dispatch_resolves_backend_at_trace_time(monkeypatch):
+    """Like the ops-wrapper regression: a backend configured after
+    import must win when ``resolve`` runs (i.e. when tracing)."""
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    monkeypatch.setattr(dispatch.jax, "default_backend", lambda: "tpu")
+    assert dispatch.resolve("lstm_cell", batch=8, hidden=64) == "pallas"
+
+
+def test_dispatch_table_save_load_roundtrip(tmp_path):
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    dispatch.set_rules("lstm_cell", "cpu",
+                       [{"min_batch": 4, "min_hidden": 0,
+                         "impl": "pallas"}])
+    path = str(tmp_path / "table.json")
+    dispatch.save_table(path)
+    dispatch.reset_table()
+    assert dispatch.resolve("lstm_cell", batch=4, hidden=8,
+                            backend="cpu") == "xla"
+    dispatch.load_table(path)
+    try:
+        assert dispatch.resolve("lstm_cell", batch=4, hidden=8,
+                                backend="cpu") == "pallas"
+        assert dispatch.resolve("lstm_cell", batch=2, hidden=8,
+                                backend="cpu") == "xla"
+        # merged over defaults: untouched backends keep their rules
+        assert dispatch.resolve("lstm_cell", batch=8, hidden=64,
+                                backend="tpu") == "pallas"
+    finally:
+        dispatch.reset_table()
+
+
+def test_dispatch_env_table_loads_lazily(tmp_path, monkeypatch):
+    from repro.kernels import dispatch
+    path = str(tmp_path / "env_table.json")
+    dispatch.set_rules("lstm_cell", "cpu",
+                       [{"min_batch": 1, "impl": "pallas"}])
+    dispatch.save_table(path)
+    dispatch.reset_table()
+    monkeypatch.setenv("REPRO_DISPATCH_TABLE", path)
+    try:
+        assert dispatch.resolve("lstm_cell", batch=1, hidden=8,
+                                backend="cpu") == "pallas"
+    finally:
+        dispatch.reset_table()
+
+
+def test_dispatched_cell_matches_ref_both_impls():
+    """The dispatch-routed cell is numerically the ref cell on the XLA
+    path (identical expression) and allclose on the forced Pallas
+    path — at a non-multiple-of-8 shape to exercise the padding."""
+    from repro.kernels import dispatch
+    dispatch.reset_table()
+    B, I, H = 3, 5, 24
+    x = jnp.asarray(RNG.standard_normal((B, I)).astype(np.float32))
+    h = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+    c = jnp.asarray(RNG.standard_normal((B, H)).astype(np.float32))
+    wx = jnp.asarray(0.1 * RNG.standard_normal((I, 4 * H)), jnp.float32)
+    wh = jnp.asarray(0.1 * RNG.standard_normal((H, 4 * H)), jnp.float32)
+    b = jnp.asarray(0.1 * RNG.standard_normal(4 * H), jnp.float32)
+    want = lstm_cell_ref(x, h, c, wx, wh, b)
+    got = dispatch.lstm_cell(x, h, c, wx, wh, b)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    with dispatch.force("pallas"):
+        got_p = dispatch.lstm_cell(x, h, c, wx, wh, b)
+    np.testing.assert_allclose(got_p[0], want[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_p[1], want[1], rtol=1e-5, atol=1e-6)
+
+
+def test_model_cell_routes_through_dispatch(monkeypatch):
+    """``models.rnn.lstm_cell`` consults the dispatch layer — forcing
+    Pallas must reach the kernel wrapper."""
+    from repro.kernels import dispatch
+    from repro.models import rnn as rnn_mod
+
+    called = {"n": 0}
+    real = dispatch.lstm_cell_padded
+
+    def spy(*args, **kw):
+        called["n"] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(dispatch, "lstm_cell_padded", spy)
+    p = {"wx": jnp.zeros((5, 64), jnp.float32),
+         "wh": jnp.zeros((16, 64), jnp.float32),
+         "b": jnp.zeros((64,), jnp.float32)}
+    x = jnp.zeros((2, 5), jnp.float32)
+    h = c = jnp.zeros((2, 16), jnp.float32)
+    rnn_mod.lstm_cell(p, x, h, c)          # cpu -> xla, no kernel call
+    assert called["n"] == 0
+    with dispatch.force("pallas"):
+        rnn_mod.lstm_cell(p, x, h, c)
+    assert called["n"] == 1
 
 
 # ---------------------------------------------------- flash attention ----

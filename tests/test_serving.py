@@ -223,6 +223,217 @@ def test_replay_is_one_dispatch_not_a_step_loop(forecaster):
         np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
 
 
+def test_compiled_rnn_builds_once_under_threads():
+    """Regression: ``_compiled_rnn`` used to tolerate a 'benign' race —
+    two threads could each build a full jit wrapper set for the same
+    config during shard-join warmup. Now double-checked-locked: exactly
+    one build, every thread gets the same object."""
+    import threading
+
+    from repro.serving import forecaster as fmod
+
+    cfg = RNNConfig(input_dim=5, hidden=12, num_layers=1, fc_dims=(6,),
+                    window=10, evl_head=True)   # fresh: not yet cached
+    fmod._RNN_COMPILED.pop(cfg, None)
+    builds = {"n": 0}
+    real_build = fmod._build_rnn_fns
+
+    def counting_build(c):
+        builds["n"] += 1
+        time.sleep(0.05)          # widen the race window
+        return real_build(c)
+
+    fmod._build_rnn_fns = counting_build
+    results = []
+    try:
+        barrier = threading.Barrier(8)
+
+        def hit():
+            barrier.wait()
+            results.append(fmod._compiled_rnn(cfg))
+
+        threads = [threading.Thread(target=hit) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    finally:
+        fmod._build_rnn_fns = real_build
+        fmod._RNN_COMPILED.pop(cfg, None)
+    assert builds["n"] == 1
+    assert all(r is results[0] for r in results)
+
+
+# -- batched decode path ---------------------------------------------------
+
+def test_batched_step_matches_sequential_bitwise(forecaster):
+    """The decode-lane contract: stepping N sessions as one batched
+    flush is BITWISE identical to stepping them one by one (both run
+    the same fixed-width compiled step)."""
+    n, T = 8, CFG.window
+    rng = np.random.default_rng(21)
+    xs = rng.standard_normal((T, n, 5)).astype(np.float32) * 0.02
+
+    seq = [forecaster.init_carry(1) for _ in range(n)]
+    seq_out = [None] * n
+    for t in range(T):
+        for i in range(n):
+            y, p, seq[i] = forecaster.step(xs[t, i:i + 1], seq[i])
+            seq_out[i] = (float(y[0]), float(p[0]))
+    bat = [forecaster.init_carry(1) for _ in range(n)]
+    for t in range(T):
+        ys, ps, bat = forecaster.step_many(xs[t], bat)
+    for i in range(n):
+        assert (float(ys[i]), float(ps[i])) == seq_out[i]
+        for (h1, c1), (h2, c2) in zip(seq[i], bat[i]):
+            np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+            np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_step_many_partial_and_chunked_flushes(forecaster):
+    """Batches that underfill (n < width) or overflow (n > width) the
+    decode lane still match per-session steps bitwise."""
+    rng = np.random.default_rng(5)
+    for n in (1, 3, 8, 13):
+        xs = rng.standard_normal((n, 5)).astype(np.float32) * 0.02
+        ys, ps, _ = forecaster.step_many(
+            xs, [forecaster.init_carry(1) for _ in range(n)])
+        assert ys.shape == (n,)
+        for i in range(n):
+            y1, p1, _ = forecaster.step(xs[i:i + 1],
+                                        forecaster.init_carry(1))
+            assert float(ys[i]) == float(y1[0])
+            assert float(ps[i]) == float(p1[0])
+
+
+def test_runner_step_many_matches_step(forecaster):
+    """Gather/scatter through the session cache: batched runner steps
+    equal sequential runner steps, carries land back per client."""
+    n, T = 6, 10
+    rng = np.random.default_rng(9)
+    xs = rng.standard_normal((T, n, 5)).astype(np.float32) * 0.02
+    r_seq = RecurrentSessionRunner(forecaster,
+                                   SessionCache(max_sessions=n))
+    r_bat = RecurrentSessionRunner(forecaster,
+                                   SessionCache(max_sessions=n))
+    for t in range(T):
+        seq = [r_seq.step(f"c{i}", xs[t, i]) for i in range(n)]
+        bat = r_bat.step_many([(f"c{i}", xs[t, i], None)
+                               for i in range(n)])
+        assert bat == seq
+    assert len(r_bat.cache) == n
+
+
+def test_runner_step_many_duplicate_clients_keep_stream_order(forecaster):
+    """Two steps for one client inside a single batched call must see
+    each other's carries (waves), exactly like two sequential steps."""
+    rng = np.random.default_rng(11)
+    x0, x1 = (rng.standard_normal((2, 5)).astype(np.float32) * 0.02)
+    r_seq = RecurrentSessionRunner(forecaster,
+                                   SessionCache(max_sessions=2))
+    a = r_seq.step("dup", x0)
+    b = r_seq.step("dup", x1)
+    r_bat = RecurrentSessionRunner(forecaster,
+                                   SessionCache(max_sessions=2))
+    got = r_bat.step_many([("dup", x0, None), ("dup", x1, None)])
+    assert got == [a, b]
+
+
+def test_engine_step_flush_groups_and_matches_runner(registry, forecaster):
+    """Engine-level batched decode: a burst of submit_step calls flushes
+    as fused batches (telemetry shows >1 sessions per flush) and the
+    results equal the plain per-session runner bitwise."""
+    n, T = 8, 6
+    rng = np.random.default_rng(33)
+    xs = rng.standard_normal((T, n, 5)).astype(np.float32) * 0.02
+    runner = RecurrentSessionRunner(forecaster,
+                                    SessionCache(max_sessions=n))
+    ref = {}
+    for t in range(T):
+        for i in range(n):
+            ref[(t, i)] = runner.step(f"c{i}", xs[t, i])
+    cfg = BatcherConfig(max_batch=16, max_wait_ms=5.0, length_buckets=(20,))
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(20,))
+        eng.telemetry.reset_clock()
+        futs = {}
+        for t in range(T):
+            for i in range(n):
+                futs[(t, i)] = eng.submit_step("m", f"c{i}", xs[t, i])
+        got = {k: f.result(timeout=30.0) for k, f in futs.items()}
+    assert got == ref
+    snap = eng.telemetry.snapshot()
+    assert snap["step_requests"] == n * T
+    assert snap["step_batches"] < n * T           # actually batched
+    assert snap["mean_step_batch"] > 1.0
+    assert 0.0 < snap["step_occupancy"] <= 1.0
+    # version attribution rides on step futures like predict futures
+    assert all(f.model_version == forecaster.version
+               for f in futs.values())
+
+
+def test_engine_step_rejects_bad_submissions(registry):
+    with ServingEngine(registry) as eng:
+        with pytest.raises(ValueError):
+            eng.submit_step("m", None, np.zeros(5, np.float32))
+        with pytest.raises(ValueError):
+            eng.submit_step("m", "c", np.zeros((3,), np.float32))
+        with pytest.raises(KeyError):
+            eng.submit_step("nope", "c", np.zeros(5, np.float32))
+        # malformed history fails THIS submit, not the whole flush it
+        # would later share with other clients' steps
+        with pytest.raises(ValueError):
+            eng.submit_step("m", "c", np.zeros(5, np.float32),
+                            history=np.zeros((4, 6), np.float32))
+        with pytest.raises(ValueError):
+            eng.submit_step("m", "c", np.zeros(5, np.float32),
+                            history=np.zeros((0, 5), np.float32))
+        assert eng.step("m", "c", np.zeros(5, np.float32), timeout=10.0)
+
+
+def test_engine_step_occupancy_counts_waves(registry, forecaster):
+    """Regression: padded-slot accounting must reflect the follow-up
+    waves duplicate client ids dispatch — 2 clients x 8 steps in one
+    flush is 8 padded lane dispatches, not 2."""
+    cfg = BatcherConfig(max_batch=16, max_wait_ms=40.0,
+                        length_buckets=(20,))
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((8, 2, 5)).astype(np.float32) * 0.02
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(20,))
+        eng.telemetry.reset_clock()
+        futs = [eng.submit_step("m", f"c{i}", xs[t, i])
+                for t in range(8) for i in range(2)]
+        for f in futs:
+            f.result(timeout=30.0)
+    snap = eng.telemetry.snapshot()
+    assert snap["step_requests"] == 16
+    W = forecaster.decode_width
+    # every wave holds at most 2 real sessions in a W-wide lane
+    # dispatch (the pre-fix accounting ignored waves and claimed 1.0)
+    assert 0.0 < snap["step_occupancy"] <= 2 / W
+
+
+def test_engine_step_recovers_evicted_session_via_history(registry,
+                                                          forecaster):
+    """A step arriving with history after its session was evicted from
+    the engine cache replays the prefix — same numbers as an
+    uninterrupted stream."""
+    w = _windows(1, seed=17)[0]
+    runner = RecurrentSessionRunner(forecaster,
+                                    SessionCache(max_sessions=4))
+    for t in range(CFG.window):
+        want = runner.step("c", w[t])
+    with ServingEngine(registry) as eng:
+        half = CFG.window // 2
+        for t in range(half):
+            eng.step("m", "c", w[t], timeout=10.0)
+        assert eng.sessions.drop("c")              # simulate eviction
+        for t in range(half, CFG.window):
+            got = eng.step("m", "c", w[t], history=w[:t], timeout=10.0)
+    assert got == want
+
+
 # -- session cache ---------------------------------------------------------
 
 def test_session_cache_lru_eviction():

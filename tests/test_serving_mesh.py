@@ -480,6 +480,76 @@ def test_sharded_cache_works_with_session_runner(forecaster):
     assert y_sharded == float(y_ref[0]) and p_sharded == float(p_ref[0])
 
 
+# -- batched decode over the mesh ------------------------------------------
+
+def test_mesh_streaming_steps_affine_and_batched(forecaster):
+    """Streaming steps route to the client's owning shard, flush as
+    fused batches there, and match the single-engine decode path
+    bitwise."""
+    n, T = 8, 10
+    rng = np.random.default_rng(44)
+    xs = rng.standard_normal((T, n, 5)).astype(np.float32) * 0.02
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    cfg = BatcherConfig(max_batch=16, max_wait_ms=2.0,
+                        length_buckets=(CFG.window,))
+    ref = {}
+    with ServingEngine(reg, cfg) as eng:
+        for t in range(T):
+            for i in range(n):
+                ref[(t, i)] = eng.step("m", f"c{i}", xs[t, i],
+                                       timeout=30.0)
+    with _mesh(forecaster) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        mesh.reset_clock()
+        futs = {}
+        for t in range(T):
+            for i in range(n):
+                futs[(t, i)] = mesh.submit_step("m", f"c{i}", xs[t, i])
+            for i in range(n):
+                futs[(t, i)].result(timeout=30.0)
+        got = {k: f.result(timeout=30.0) for k, f in futs.items()}
+        # session affinity: each client's carry is resident on exactly
+        # the shard the router names
+        for i in range(n):
+            sid = mesh.shard_for(f"c{i}")
+            assert f"c{i}" in mesh.shards[sid].sessions
+        snap = mesh.snapshot()
+    assert got == ref
+    assert snap["step_requests"] == n * T
+    assert snap["step_batches"] < n * T            # fused flushes
+
+
+def test_mesh_remove_shard_migrates_streaming_sessions(forecaster):
+    """Removing a shard mid-stream re-homes its engine-resident session
+    carries: clients keep streaming with NO change in their numbers."""
+    n, T = 6, 12
+    rng = np.random.default_rng(45)
+    xs = rng.standard_normal((T, n, 5)).astype(np.float32) * 0.02
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    cfg = BatcherConfig(max_batch=16, max_wait_ms=2.0,
+                        length_buckets=(CFG.window,))
+    ref = {}
+    with ServingEngine(reg, cfg) as eng:
+        for t in range(T):
+            for i in range(n):
+                ref[i] = eng.step("m", f"c{i}", xs[t, i], timeout=30.0)
+    with _mesh(forecaster) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        half = T // 2
+        for t in range(half):
+            for i in range(n):
+                mesh.step("m", f"c{i}", xs[t, i], timeout=30.0)
+        victim = mesh.shard_for("c0")  # at least c0's carry must move
+        mesh.remove_shard(victim)
+        got = {}
+        for t in range(half, T):
+            for i in range(n):
+                got[i] = mesh.step("m", f"c{i}", xs[t, i], timeout=30.0)
+    assert got == ref                  # bitwise: carries moved intact
+
+
 # -- telemetry merge -------------------------------------------------------
 
 def test_telemetry_merge_sums_and_pools():

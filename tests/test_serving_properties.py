@@ -348,3 +348,62 @@ def test_step_replay_equivalence_across_evictions(forecaster, seed,
     # and both equal a raw replay through the compiled step path
     y_ref, p_ref, _ = forecaster.replay(w[None])
     assert y_clean == float(y_ref[0]) and p_clean == float(p_ref[0])
+
+
+# -- batched-step vs per-session-step equivalence --------------------------
+
+def _check_batched_equals_sequential(forecaster, seed, n_clients, n_ticks,
+                                     evictions):
+    """Serving every tick as one ``step_many`` flush must produce
+    BITWISE the results of the per-session ``step`` loop, under
+    arbitrary mid-stream evictions (history is supplied, so evicted
+    sessions re-prime in both modes)."""
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal(
+        (n_ticks, n_clients, 3)).astype(np.float32) * 0.02
+    evict = {(t, c % n_clients) for t, c in evictions if t < n_ticks}
+
+    def run(batched: bool):
+        runner = RecurrentSessionRunner(
+            forecaster, SessionCache(max_sessions=n_clients))
+        outs = []
+        for t in range(n_ticks):
+            for c in range(n_clients):
+                if (t, c) in evict:
+                    runner.cache.drop(f"c{c}")
+            hist = lambda c: xs[:t, c] if t > 0 else None  # noqa: E731
+            if batched:
+                outs.append(runner.step_many(
+                    [(f"c{c}", xs[t, c], hist(c))
+                     for c in range(n_clients)]))
+            else:
+                outs.append([runner.step(f"c{c}", xs[t, c],
+                                         history=hist(c))
+                             for c in range(n_clients)])
+        return outs
+
+    assert run(batched=True) == run(batched=False)
+
+
+@given(st.integers(0, 2 ** 16 - 1),
+       st.integers(2, 5),                        # clients
+       st.integers(3, CFG.window),               # ticks
+       st.sets(st.tuples(st.integers(1, CFG.window - 1),
+                         st.integers(0, 4)), max_size=4))
+@settings(deadline=None)
+def test_batched_step_equals_per_session_step_across_evictions(
+        forecaster, seed, n_clients, n_ticks, evictions):
+    _check_batched_equals_sequential(forecaster, seed, n_clients, n_ticks,
+                                     evictions)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 16 - 1), st.integers(2, 8),
+       st.integers(3, CFG.window),
+       st.sets(st.tuples(st.integers(1, CFG.window - 1),
+                         st.integers(0, 7)), max_size=8))
+@settings(max_examples=150, deadline=None)
+def test_batched_step_equivalence_exhaustive(forecaster, seed, n_clients,
+                                             n_ticks, evictions):
+    _check_batched_equals_sequential(forecaster, seed, n_clients, n_ticks,
+                                     evictions)
