@@ -16,9 +16,9 @@ import sys
 import traceback
 
 from benchmarks import (bench_communication, bench_extreme, bench_hotswap,
-                        bench_kernels, bench_prediction, bench_roofline,
-                        bench_serving, bench_serving_mesh, bench_speedup,
-                        common)
+                        bench_kernels, bench_obs, bench_prediction,
+                        bench_roofline, bench_serving, bench_serving_mesh,
+                        bench_speedup, common)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -34,6 +34,7 @@ ALL = [
     ("mesh", bench_serving_mesh),        # ISSUE 3 shard scaling + storm;
     # ISSUE 4 multi-process transport phase (join/leave over OS
     # processes) runs as its third phase, --smoke included
+    ("obs", bench_obs),                  # ISSUE 6 tracing-overhead bound
 ]
 
 

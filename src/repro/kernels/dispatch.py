@@ -166,6 +166,81 @@ class force:
             os.environ["REPRO_KERNEL_IMPL"] = self._saved
 
 
+# -- dispatch accounting ----------------------------------------------------
+#
+# resolve() fires at TRACE time (once per compilation), so the dispatch
+# COUNT has to be recorded where the compiled function is invoked — the
+# forecaster calls record() right before each jitted-fn call. Counting
+# is opt-in: with no collector installed, record() is a truthiness
+# check and an immediate return.
+
+_collectors: list["DispatchCounts"] = []
+
+
+class DispatchCounts:
+    """Per-(backend, op, impl, shape) invocation counts, collected while
+    installed via ``counting()``. ``shape`` is the (batch, hidden) the
+    caller dispatched at — the padded shape, i.e. what actually ran."""
+
+    def __init__(self):
+        self.counts: dict[tuple, int] = {}
+
+    def add(self, key: tuple, n: int = 1) -> None:
+        self.counts[key] = self.counts.get(key, 0) + n
+
+    def total(self, op: str | None = None) -> int:
+        return sum(n for (bk, o, impl, shape), n in self.counts.items()
+                   if op is None or o == op)
+
+    def by_op(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for (bk, op, impl, shape), n in self.counts.items():
+            out[op] = out.get(op, 0) + n
+        return out
+
+    def __getitem__(self, op: str) -> int:
+        return self.total(op)
+
+    def __repr__(self) -> str:
+        return f"DispatchCounts({self.counts!r})"
+
+
+def record(op: str, *, batch: int, hidden: int, impl: str | None = None,
+           kernel_op: str | None = None, n: int = 1) -> None:
+    """Count one dispatch of a compiled ``op`` at (batch, hidden).
+    ``impl`` defaults to what ``resolve`` picks for ``kernel_op`` (or
+    ``op``) at this shape — resolved only when a collector is installed,
+    so the inactive path stays a single truthiness check."""
+    if not _collectors:
+        return
+    if impl is None:
+        impl = resolve(kernel_op or op, batch=batch, hidden=hidden)
+    key = (jax.default_backend(), op, impl, (batch, hidden))
+    with _lock:
+        for c in _collectors:
+            c.add(key, n)
+
+
+class counting:
+    """Collect dispatch counts inside a ``with`` block::
+
+        with dispatch.counting() as counts:
+            engine.submit(...)
+        assert counts["decode_many"] == 1   # one fused dispatch
+
+    Collectors nest (each sees every dispatch while installed)."""
+
+    def __enter__(self) -> DispatchCounts:
+        self._counts = DispatchCounts()
+        with _lock:
+            _collectors.append(self._counts)
+        return self._counts
+
+    def __exit__(self, *exc) -> None:
+        with _lock:
+            _collectors.remove(self._counts)
+
+
 # -- dispatched ops ---------------------------------------------------------
 
 def lstm_cell(x, h, c, wx, wh, b):

@@ -74,6 +74,12 @@ def main(argv: list[str] | None = None) -> None:
                     "checkpoint on exit")
     ap.add_argument("--evl-weight", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve /metrics (Prometheus), /metrics.json and "
+                    "/history on this port while training + serving run "
+                    "(0 = ephemeral; fleet-merged view on a mesh) — the "
+                    "live time-series view of serve-under-churn")
     args = ap.parse_args(argv)
 
     from repro.configs.paper_lstm import CONFIG
@@ -133,6 +139,17 @@ def main(argv: list[str] | None = None) -> None:
         min_interval_s=args.min_publish_interval_ms * 1e-3,
         telemetry=pub_telemetry)
 
+    metrics = None
+    if args.metrics_port is not None:
+        from repro.obs import MetricsServer
+
+        snapshot_fn = (engine.snapshot if mesh
+                       else lambda: engine.telemetry.snapshot())
+        metrics = MetricsServer(snapshot_fn, port=args.metrics_port,
+                                sample_interval_s=0.5).start()
+        print(f"metrics: {metrics.url}/metrics (also /metrics.json, "
+              f"/history)")
+
     trainer_err: list[BaseException] = []
 
     def train() -> None:
@@ -185,6 +202,8 @@ def main(argv: list[str] | None = None) -> None:
             (engine if args.processes else engine.swarm).propagate(key)
         wall = time.time() - t0
         snap = engine.snapshot() if mesh else engine.telemetry.snapshot()
+    if metrics is not None:
+        metrics.stop()
     if trainer_err:
         raise trainer_err[0]
 

@@ -87,8 +87,25 @@ def main(argv: list[str] | None = None) -> None:
                     help="also demo O(1) per-step session serving")
     ap.add_argument("--alert-threshold", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-request trace spans (submit -> queue "
+                    "-> flush -> ... -> reply) and print a span summary "
+                    "of the slowest trace")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    metavar="PORT",
+                    help="serve /metrics (Prometheus), /metrics.json, "
+                    "/history, /traces and /events on this port while "
+                    "the traffic runs (0 = ephemeral; fleet-merged view "
+                    "on a mesh)")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="append phase markers + final snapshot as JSONL "
+                    "events to PATH (tools/report.py renders them)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the traffic "
+                    "phase into DIR (view with TensorBoard / Perfetto)")
     args = ap.parse_args(argv)
 
+    from repro.obs import EventLog, MetricsServer, Tracer
     from repro.serving import (BatcherConfig, ModelRegistry,
                                MultiProcessServingEngine, ServingEngine,
                                ShardedServingEngine, Telemetry,
@@ -129,15 +146,38 @@ def main(argv: list[str] | None = None) -> None:
                         length_buckets=tuple(sorted(
                             {p.shape[0] for p in payloads})))
     lengths = tuple({p.shape[0] for p in payloads})
+    tracer = Tracer(capacity=1024) if args.trace else None
     if args.shards > 1 and args.processes:
         engine = MultiProcessServingEngine(registry, cfg,
                                            n_shards=args.shards,
-                                           max_skew=args.max_skew)
+                                           max_skew=args.max_skew,
+                                           tracer=tracer)
     elif args.shards > 1:
         engine = ShardedServingEngine(registry, cfg, n_shards=args.shards,
-                                      max_skew=args.max_skew)
+                                      max_skew=args.max_skew,
+                                      tracer=tracer)
     else:
-        engine = ServingEngine(registry, cfg)
+        engine = ServingEngine(registry, cfg, tracer=tracer)
+
+    events = EventLog(path=args.events_out) if args.events_out else None
+    snapshot_fn = (engine.snapshot if args.shards > 1
+                   else lambda: engine.telemetry.snapshot())
+    metrics = None
+    if args.metrics_port is not None:
+        metrics = MetricsServer(snapshot_fn, port=args.metrics_port,
+                                tracer=tracer, events=events,
+                                sample_interval_s=0.5).start()
+        print(f"metrics: {metrics.url}/metrics (also /metrics.json, "
+              f"/history, /traces, /events)")
+    if events is not None:
+        events.log("phase", name="traffic", model=args.model,
+                   shards=args.shards, requests=args.requests)
+
+    profile_ctx = None
+    if args.profile_dir:
+        import jax
+
+        profile_ctx = jax.profiler.trace(args.profile_dir)
 
     with engine:
         engine.warmup(args.model, lengths=lengths)
@@ -145,14 +185,23 @@ def main(argv: list[str] | None = None) -> None:
             engine.reset_clock()
         else:
             engine.telemetry.reset_clock()
+        if profile_ctx is not None:
+            profile_ctx.__enter__()
         t0 = time.time()
         futures = [engine.submit(args.model, p,
                                  client_id=f"client-{i % args.clients}")
                    for i, p in enumerate(payloads)]
         results = [f.result(timeout=60.0) for f in futures]
         wall = time.time() - t0
+        if profile_ctx is not None:
+            profile_ctx.__exit__(None, None, None)
+            print(f"profiler capture written to {args.profile_dir}")
         snap = (engine.snapshot() if args.shards > 1
                 else engine.telemetry.snapshot())
+        if events is not None:
+            events.log("snapshot", phase="traffic", wall_s=wall, **{
+                k: v for k, v in snap.items()
+                if isinstance(v, (int, float, bool))})
         if args.sessions and fc.feature_dim and args.shards > 1 \
                 and args.processes:
             # sessions live in the worker processes' shard-local caches:
@@ -197,6 +246,10 @@ def main(argv: list[str] | None = None) -> None:
                   f"{ssnap['step_batches']} fused flushes, mean batch "
                   f"{ssnap['mean_step_batch']:.1f}, step p95 "
                   f"{ssnap['step_p95_ms']:.2f} ms")
+            if events is not None:
+                events.log("snapshot", phase="sessions", wall_s=wall_s,
+                           **{k: v for k, v in ssnap.items()
+                              if isinstance(v, (int, float, bool))})
 
     alert_mask = np.asarray([p >= args.alert_threshold
                              for _, p in results], dtype=bool)
@@ -219,6 +272,22 @@ def main(argv: list[str] | None = None) -> None:
         print(f"alert quality vs synthetic extreme labels: precision "
               f"{precision:.3f}  recall {recall:.3f}  (tp={tp} fp={fp} "
               f"fn={fn}, base rate {float(np.mean(labels != 0)):.3f})")
+    if tracer is not None:
+        done = tracer.traces()
+        if done:
+            slow = max(done, key=lambda t: t.duration)
+            parts = "  ".join(
+                f"{s.name} {s.dur*1e3:.2f}ms"
+                for s in sorted(slow.spans, key=lambda s: s.t0))
+            print(f"traces: {len(done)} recorded; slowest "
+                  f"({slow.op}, {slow.duration*1e3:.2f} ms): {parts}")
+    if events is not None:
+        events.log("phase", name="done")
+        events.close()
+        print(f"events written to {args.events_out}")
+    if metrics is not None:
+        metrics.stop()
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,34 @@
+"""Observability plane for the serving stack (stdlib-only):
+
+- ``trace.py``  per-request trace spans — ``Tracer`` records
+                submit -> queue -> flush -> gather -> dispatch ->
+                scatter -> reply as cheap monotonic-clock pairs in a
+                bounded ring, with cross-process stitching over the
+                socket transport (frames carry trace id + parent span);
+- ``export.py`` metrics export — Prometheus text exposition, JSONL
+                ``EventLog``, and the ``MetricsServer`` stdlib HTTP
+                endpoint (``--metrics-port`` on the launch CLIs).
+
+Dispatch accounting (assert "one fused dispatch per flush" instead of
+trusting comments) lives with the dispatch decision in
+``repro.kernels.dispatch`` (``counting()``); the sampled telemetry time
+series lives with the counters in ``repro.serving.telemetry``
+(``Telemetry.history``).
+"""
+
+from repro.obs.export import EventLog, MetricsServer, render_prometheus
+from repro.obs.trace import (FlushSpans, Span, Trace, TraceContext, Tracer,
+                             finish_all, now)
+
+__all__ = [
+    "EventLog",
+    "FlushSpans",
+    "MetricsServer",
+    "Span",
+    "Trace",
+    "TraceContext",
+    "Tracer",
+    "finish_all",
+    "now",
+    "render_prometheus",
+]

@@ -31,6 +31,9 @@ from concurrent.futures import Future
 
 import numpy as np
 
+from repro.obs.trace import _EPOCH as _TRACE_EPOCH
+from repro.obs.trace import FlushSpans as _FlushSpans
+from repro.obs.trace import finish_all as _finish_all
 from repro.serving.telemetry import Telemetry
 
 
@@ -79,15 +82,19 @@ class BatcherConfig:
 
 
 class _Request:
-    __slots__ = ("payload", "length", "future", "t_enq", "client_id")
+    __slots__ = ("payload", "length", "future", "t_enq", "client_id",
+                 "trace", "t_trace")
 
     def __init__(self, payload: np.ndarray, t_enq: float,
-                 client_id: str | None = None):
+                 client_id: str | None = None, trace=None,
+                 t_trace=None):
         self.payload = payload
         self.length = payload.shape[0]
         self.future: Future = Future()
         self.t_enq = t_enq
         self.client_id = client_id
+        self.trace = trace          # upstream TraceContext | None
+        self.t_trace = t_trace      # deferred-trace submit stamp | None
 
 
 class _StepRequest:
@@ -96,15 +103,18 @@ class _StepRequest:
     flushed as ONE fused decode dispatch (``RecurrentSessionRunner.
     step_many``), not one dispatch per client."""
 
-    __slots__ = ("payload", "history", "future", "t_enq", "client_id")
+    __slots__ = ("payload", "history", "future", "t_enq", "client_id",
+                 "trace", "t_trace")
 
     def __init__(self, payload: np.ndarray, t_enq: float, client_id: str,
-                 history=None):
+                 history=None, trace=None, t_trace=None):
         self.payload = payload
         self.history = history
         self.future: Future = Future()
         self.t_enq = t_enq
         self.client_id = client_id
+        self.trace = trace          # upstream TraceContext | None
+        self.t_trace = t_trace      # deferred-trace submit stamp | None
 
 
 # pseudo length-bucket under which step requests group in the pending
@@ -120,11 +130,16 @@ class EngineShard:
 
     def __init__(self, registry, config: BatcherConfig | None = None,
                  telemetry: Telemetry | None = None, shard_id: int = 0,
-                 session_cache=None):
+                 session_cache=None, tracer=None):
         self.registry = registry
         self.config = config or BatcherConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shard_id = shard_id
+        # per-request trace spans (repro.obs.Tracer); None -> no tracing
+        self.tracer = tracer
+        # trace meta is shared by reference (one dict per model, not one
+        # per request) — Tracer.start keeps it without copying
+        self._trace_meta: dict[str, dict] = {}
         self._queue: queue.Queue = queue.Queue()
         self._pending: dict[tuple[str, int], list] = {}
         self._running = False
@@ -201,29 +216,81 @@ class EngineShard:
     def __exit__(self, *exc) -> None:
         self.stop()
 
+    def _meta_for(self, model_key: str) -> dict:
+        meta = self._trace_meta.get(model_key)
+        if meta is None:
+            meta = self._trace_meta[model_key] = {"model": model_key,
+                                                  "shard": self.shard_id}
+        return meta
+
+    @staticmethod
+    def _trace_gather(tracer, reqs):
+        """One pass over a flush's requests collecting its tracing work:
+        ``traced`` are upstream TraceContexts (cross-process requests)
+        joining the shared FlushSpans record; ``deferred`` are
+        (t_submit, t_enq) perf-counter pairs for in-process requests,
+        folded into one ring block by ``Tracer.finish_block`` — their
+        Trace objects only materialize when somebody reads the ring."""
+        traced, deferred, fspans = [], [], None
+        for r in reqs:
+            if r.trace is not None:
+                if fspans is None:
+                    fspans = _FlushSpans()
+                r.trace.attach_flush(fspans, r.t_enq)
+                traced.append(r.trace)
+            elif r.t_trace is not None and tracer is not None:
+                deferred.append((r.t_trace, r.t_enq))
+        if deferred and fspans is None:
+            fspans = _FlushSpans()
+        return traced, deferred, fspans
+
     # -- client API --------------------------------------------------------
     def submit(self, model_key: str, window,
-               client_id: str | None = None) -> Future:
+               client_id: str | None = None, trace=None) -> Future:
         """Enqueue one window ([T, F] features or [T] token ids); returns
         a Future resolving to (forecast, p_extreme) scalars.
         ``client_id`` rides along into per-client telemetry attribution
         (the sharded mesh additionally routes on it; a single shard
-        serves every client)."""
-        payload = np.asarray(window)
-        fc = self.registry.get(model_key)
-        want_ndim = 2 if fc.feature_dim else 1
-        if payload.ndim != want_ndim or payload.shape[0] < 1 or (
-                fc.feature_dim and payload.shape[1] != fc.feature_dim):
-            raise ValueError(
-                f"{model_key!r} expects windows of shape "
-                f"{'[T>=1, ' + str(fc.feature_dim) + ']' if fc.feature_dim else '[T>=1]'}"
-                f", got {payload.shape}")
+        serves every client). ``trace`` is an upstream TraceContext
+        (the mesh router starts one); with none given, a shard-level
+        tracer opens its own."""
+        # fully deferred in-process tracing: the client thread stashes ONE
+        # clock stamp; the flush worker later folds the whole micro-batch
+        # into a single trace block (Tracer.finish_block). No Trace object
+        # is allocated on this path at all.
+        tracer = self.tracer
+        t_tr = (time.perf_counter()
+                if trace is None and tracer is not None and tracer.enabled
+                else None)
+        try:
+            payload = np.asarray(window)
+            fc = self.registry.get(model_key)
+            want_ndim = 2 if fc.feature_dim else 1
+            if payload.ndim != want_ndim or payload.shape[0] < 1 or (
+                    fc.feature_dim and payload.shape[1] != fc.feature_dim):
+                raise ValueError(
+                    f"{model_key!r} expects windows of shape "
+                    f"{'[T>=1, ' + str(fc.feature_dim) + ']' if fc.feature_dim else '[T>=1]'}"
+                    f", got {payload.shape}")
+        except Exception:
+            # a synchronous reject must not vanish from the trace ring:
+            # record it as an error trace before re-raising (cold path, so
+            # an eager Trace is fine here)
+            if trace is not None:
+                trace.finish(status="error")
+            elif t_tr is not None:
+                err = tracer.start("predict", t0=_TRACE_EPOCH + t_tr,
+                                   meta=self._meta_for(model_key))
+                if err is not None:
+                    err.finish(status="error")
+            raise
         bucket = self.config.bucket_len(payload.shape[0])
         if payload.shape[0] > bucket:
             # over-long window clamped to the largest length bucket: keep
             # the newest rows (causal model) so the compile set stays fixed
             payload = payload[-bucket:]
-        req = _Request(payload, time.perf_counter(), client_id=client_id)
+        req = _Request(payload, time.perf_counter(), client_id=client_id,
+                       trace=trace, t_trace=t_tr)
         with self._state_lock:
             if not self._running:
                 raise RuntimeError("engine is not running (use start() or a "
@@ -237,7 +304,7 @@ class EngineShard:
                            client_id=client_id).result(timeout=timeout)
 
     def submit_step(self, model_key: str, client_id: str, x_t,
-                    history=None) -> Future:
+                    history=None, trace=None) -> Future:
         """Enqueue one streaming step for ``client_id``'s session:
         ``x_t`` is a single [F] feature vector (the newest observation),
         ``history`` an optional [T, F] window prefix replayed on a cache
@@ -245,34 +312,48 @@ class EngineShard:
         flush — the batched Pallas/XLA decode path — instead of one
         dispatch per client. Returns a Future resolving to
         (forecast, p_extreme) scalars."""
-        fc = self.registry.get(model_key)
-        if not hasattr(fc, "step") or not fc.feature_dim:
-            raise ValueError(
-                f"{model_key!r} does not support incremental session "
-                f"serving (needs step/init_carry/replay and a feature "
-                f"dim)")
-        payload = np.asarray(x_t, np.float32)
-        if payload.ndim == 2 and payload.shape[0] == 1:
-            payload = payload[0]
-        if payload.shape != (fc.feature_dim,):
-            raise ValueError(
-                f"{model_key!r} expects step vectors of shape "
-                f"[{fc.feature_dim}], got {payload.shape}")
-        if history is not None:
-            # validate HERE, against this caller only: a malformed
-            # history that first blew up inside the flush would fail
-            # every other client's step sharing that fused batch
-            history = np.asarray(history, np.float32)
-            if history.ndim != 2 or history.shape[0] < 1 \
-                    or history.shape[1] != fc.feature_dim:
+        tracer = self.tracer
+        t_tr = (time.perf_counter()       # deferred trace — see submit()
+                if trace is None and tracer is not None and tracer.enabled
+                else None)
+        try:
+            fc = self.registry.get(model_key)
+            if not hasattr(fc, "step") or not fc.feature_dim:
                 raise ValueError(
-                    f"history must be [T>=1, {fc.feature_dim}], got "
-                    f"{history.shape}")
-        if client_id is None:
-            raise ValueError("streaming steps require a client_id (the "
-                             "session key)")
+                    f"{model_key!r} does not support incremental session "
+                    f"serving (needs step/init_carry/replay and a feature "
+                    f"dim)")
+            payload = np.asarray(x_t, np.float32)
+            if payload.ndim == 2 and payload.shape[0] == 1:
+                payload = payload[0]
+            if payload.shape != (fc.feature_dim,):
+                raise ValueError(
+                    f"{model_key!r} expects step vectors of shape "
+                    f"[{fc.feature_dim}], got {payload.shape}")
+            if history is not None:
+                # validate HERE, against this caller only: a malformed
+                # history that first blew up inside the flush would fail
+                # every other client's step sharing that fused batch
+                history = np.asarray(history, np.float32)
+                if history.ndim != 2 or history.shape[0] < 1 \
+                        or history.shape[1] != fc.feature_dim:
+                    raise ValueError(
+                        f"history must be [T>=1, {fc.feature_dim}], got "
+                        f"{history.shape}")
+            if client_id is None:
+                raise ValueError("streaming steps require a client_id "
+                                 "(the session key)")
+        except Exception:
+            if trace is not None:
+                trace.finish(status="error")    # see submit()
+            elif t_tr is not None:
+                err = tracer.start("step", t0=_TRACE_EPOCH + t_tr,
+                                   meta=self._meta_for(model_key))
+                if err is not None:
+                    err.finish(status="error")
+            raise
         req = _StepRequest(payload, time.perf_counter(), str(client_id),
-                           history=history)
+                           history=history, trace=trace, t_trace=t_tr)
         with self._state_lock:
             if not self._running:
                 raise RuntimeError("engine is not running (use start() or a "
@@ -344,6 +425,10 @@ class EngineShard:
         reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
         if not reqs:
             return
+        tracer = self.tracer
+        traced, deferred, fspans = self._trace_gather(tracer, reqs)
+        if fspans is not None:
+            t0f = fspans.stamp("queue")
         try:
             runner = self._step_runner(model_key)
             fc = runner._resolve()
@@ -352,7 +437,13 @@ class EngineShard:
         except Exception as e:  # noqa: BLE001 — fail the steps, not the engine
             for r in reqs:
                 r.future.set_exception(e)
+            _finish_all(traced, status="error")
+            if deferred:
+                tracer.finish_block("step", self._meta_for(model_key),
+                                    fspans, deferred, status="error")
             return
+        if fspans is not None:
+            fspans.stamp("dispatch")
         now = time.perf_counter()
         version = getattr(fc, "version", None)
         # lane slots actually dispatched (waves for duplicate clients,
@@ -361,10 +452,25 @@ class EngineShard:
         padded = getattr(runner, "last_step_slots", len(reqs))
         self.telemetry.record_step_batch([now - r.t_enq for r in reqs],
                                          n_padded=padded)
+        if fspans is not None:
+            # scatter + the umbrella flush span BEFORE set_result: the
+            # transport worker's done-callback exports the trace, so
+            # anything after delivery would be lost cross-process
+            fspans.umbrella("flush", t0f, fspans.stamp("scatter"))
         for r, (y, p) in zip(reqs, outs):
             r.future.model_version = version
             r.future.client_id = r.client_id
             r.future.set_result((y, p))
+        if fspans is not None:
+            # exported traces (the transport worker's done-callback runs
+            # inside set_result) materialized before this stamp and are
+            # closed, so the reply span and finish only land on the
+            # in-process traces — see obs.trace
+            fspans.stamp("reply")
+            _finish_all(traced)
+            if deferred:
+                tracer.finish_block("step", self._meta_for(model_key),
+                                    fspans, deferred)
 
     def _flush(self, model_key: str, bucket_t: int,
                reqs: list[_Request]) -> None:
@@ -377,6 +483,10 @@ class EngineShard:
         reqs = [r for r in reqs if r.future.set_running_or_notify_cancel()]
         if not reqs:
             return
+        tracer = self.tracer
+        traced, deferred, fspans = self._trace_gather(tracer, reqs)
+        if fspans is not None:
+            t0f = fspans.stamp("queue")   # enqueue -> flush start
         try:
             # one atomic reference per flush: the whole micro-batch serves
             # on these weights even if the registry swaps mid-predict; the
@@ -386,11 +496,20 @@ class EngineShard:
             x, lens = self._padded(fc, [r.payload for r in reqs],
                                    [r.length for r in reqs], bucket_b,
                                    bucket_t)
+            if fspans is not None:
+                fspans.stamp("gather", meta={"batch": len(reqs),
+                                             "padded": bucket_b})
             forecast, p_extreme = fc.predict(x, lens)
         except Exception as e:  # noqa: BLE001 — fail the requests, not the engine
             for r in reqs:
                 r.future.set_exception(e)
+            _finish_all(traced, status="error")
+            if deferred:
+                tracer.finish_block("predict", self._meta_for(model_key),
+                                    fspans, deferred, status="error")
             return
+        if fspans is not None:
+            fspans.stamp("dispatch")
         now = time.perf_counter()
         version = getattr(fc, "version", None)
         published = getattr(fc, "published_at", None)
@@ -401,12 +520,28 @@ class EngineShard:
                                        staleness_s=staleness,
                                        client_ids=[r.client_id
                                                    for r in reqs])
+        if fspans is not None:
+            # scatter + the umbrella flush span (overlapping the chained
+            # queue/gather/dispatch/scatter spans) BEFORE set_result:
+            # the transport worker's done-callback exports the trace, so
+            # anything recorded after delivery would be lost cross-process
+            fspans.umbrella("flush", t0f, fspans.stamp("scatter"))
         for i, r in enumerate(reqs):
             # attribution before set_result: a client that wakes on the
             # result always sees which model version produced it
             r.future.model_version = version
             r.future.client_id = r.client_id
             r.future.set_result((float(forecast[i]), float(p_extreme[i])))
+        if fspans is not None:
+            # exported traces (the transport worker's done-callback runs
+            # inside set_result) materialized before this stamp and are
+            # closed, so the reply span and finish only land on the
+            # in-process traces — see obs.trace
+            fspans.stamp("reply")
+            _finish_all(traced)
+            if deferred:
+                tracer.finish_block("predict", self._meta_for(model_key),
+                                    fspans, deferred)
 
     def _worker(self) -> None:
         cfg = self.config

@@ -31,6 +31,7 @@ import numpy as np
 
 from repro.extreme.evt import fit_tail, gev_cdf, tail_probability
 from repro.extreme.indicators import indicator_sequence, quantile_thresholds
+from repro.kernels import dispatch
 from repro.models.rnn import (RNNConfig, init_rnn, init_rnn_carry,
                               rnn_apply_padded, rnn_step, split_rnn_carry,
                               stack_rnn_carries)
@@ -273,9 +274,12 @@ class LSTMForecaster:
             lengths = jnp.full((windows.shape[0],), windows.shape[1],
                                jnp.int32)
         lengths = jnp.asarray(lengths, jnp.int32)
-        y, p = self._fns["predict"](self.params, windows, lengths,
-                                    *self._tail_args(),
-                                    gamma=float(self.gamma))
+        dispatch.record("predict", batch=int(windows.shape[0]),
+                        hidden=self.cfg.hidden, kernel_op="lstm_cell")
+        with jax.profiler.TraceAnnotation("repro.predict"):
+            y, p = self._fns["predict"](self.params, windows, lengths,
+                                        *self._tail_args(),
+                                        gamma=float(self.gamma))
         return np.asarray(y), np.asarray(p)
 
     def _tail_args(self):
@@ -326,10 +330,13 @@ class LSTMForecaster:
             stacked = jax.tree_util.tree_map(
                 lambda *leaves: jnp.concatenate(leaves, axis=0), *carries)
             return np.concatenate(ys), np.concatenate(ps), stacked
-        y, p, carry = self._fns["decode_step"](self.params, x_t, carry,
-                                               *self._tail_args(),
-                                               gamma=float(self.gamma),
-                                               width=W)
+        dispatch.record("decode_step", batch=W, hidden=self.cfg.hidden,
+                        kernel_op="lstm_cell")
+        with jax.profiler.TraceAnnotation("repro.decode_step"):
+            y, p, carry = self._fns["decode_step"](self.params, x_t, carry,
+                                                   *self._tail_args(),
+                                                   gamma=float(self.gamma),
+                                                   width=W)
         return np.asarray(y), np.asarray(p), carry
 
     def step_many(self, xs, carries, donate: bool = False):
@@ -365,9 +372,12 @@ class LSTMForecaster:
                 chunk.extend(pad)
             x = np.zeros((W, xs.shape[1]), np.float32)
             x[:n] = xs[lo:lo + n]
-            y, p, sessions = fn(self.params, x, tuple(chunk),
-                                *self._tail_args(),
-                                gamma=float(self.gamma))
+            dispatch.record("decode_many", batch=W, hidden=self.cfg.hidden,
+                            kernel_op="lstm_cell")
+            with jax.profiler.TraceAnnotation("repro.decode_many"):
+                y, p, sessions = fn(self.params, x, tuple(chunk),
+                                    *self._tail_args(),
+                                    gamma=float(self.gamma))
             ys.append(np.asarray(y)[:n])
             ps.append(np.asarray(p)[:n])
             out.extend(sessions[:n])
@@ -398,9 +408,12 @@ class LSTMForecaster:
             stacked = jax.tree_util.tree_map(
                 lambda *leaves: jnp.concatenate(leaves, axis=0), *carries)
             return np.concatenate(ys), np.concatenate(ps), stacked
-        ys, ps, _, carry = self._fns["decode_replay"](
-            self.params, window, carry, *self._tail_args(),
-            gamma=float(self.gamma), width=W)
+        dispatch.record("decode_replay", batch=W, hidden=self.cfg.hidden,
+                        kernel_op="lstm_cell")
+        with jax.profiler.TraceAnnotation("repro.decode_replay"):
+            ys, ps, _, carry = self._fns["decode_replay"](
+                self.params, window, carry, *self._tail_args(),
+                gamma=float(self.gamma), width=W)
         return np.asarray(ys[-1]), np.asarray(ps[-1]), carry
 
     def warm_decode(self) -> int:

@@ -90,16 +90,20 @@ class ShardedServingEngine:
     def __init__(self, registry, config: BatcherConfig | None = None,
                  n_shards: int = 2, max_skew: int = 1,
                  transfer: str = "auto",
-                 propagate_interval_s: float = 0.02):
+                 propagate_interval_s: float = 0.02, tracer=None):
         if isinstance(registry, ShardSwarm):
             self.swarm = registry
         else:
             self.swarm = ShardSwarm(n_shards, primary=registry,
                                     max_skew=max_skew, transfer=transfer)
         self.config = config or BatcherConfig()
+        # one mesh-wide tracer (repro.obs.Tracer | None): the router
+        # opens each request's trace and every shard chains spans onto
+        # the same context, so one request = one trace fleet-wide
+        self.tracer = tracer
         self.shards: dict[int, EngineShard] = {
             sid: EngineShard(self.swarm.registry_for(sid), self.config,
-                             Telemetry(), shard_id=sid)
+                             Telemetry(), shard_id=sid, tracer=tracer)
             for sid in self.swarm.shard_ids}
         # pulls into shard i count as swaps on shard i's telemetry
         self.swarm.telemetries = {sid: s.telemetry
@@ -165,6 +169,8 @@ class ShardedServingEngine:
         resolving to (forecast, p_extreme). With a ``client_id`` the
         request is session-affine (consistent-hashed); without one it
         spreads round-robin within its (model, length-bucket) group."""
+        trace = (self.tracer.start("predict", meta={"model": model_key})
+                 if self.tracer is not None else None)
         payload = np.asarray(window)
         with self._membership_lock:
             if client_id is not None:
@@ -176,8 +182,10 @@ class ShardedServingEngine:
                                                          itertools.count())
                 ids = self.router.shard_ids
                 sid = ids[next(counter) % len(ids)]
+            if trace is not None:
+                trace.mark("route", shard=sid)
             return self._shard(sid).submit(model_key, payload,
-                                           client_id=client_id)
+                                           client_id=client_id, trace=trace)
 
     def _shard(self, sid: int) -> EngineShard:
         shard = self.shards.get(sid)
@@ -211,7 +219,7 @@ class ShardedServingEngine:
                 raise ValueError(f"shard {sid} already exists")
         replica = self.swarm.add_replica(sid)     # weights pulled here
         shard = EngineShard(replica, self.config, Telemetry(),
-                            shard_id=sid)
+                            shard_id=sid, tracer=self.tracer)
         try:
             if self._running:
                 shard.start()
@@ -298,10 +306,14 @@ class ShardedServingEngine:
         if client_id is None:
             raise ValueError("streaming steps require a client_id (the "
                              "session key)")
+        trace = (self.tracer.start("step", meta={"model": model_key})
+                 if self.tracer is not None else None)
         with self._membership_lock:
             sid = self.router.shard_for(str(client_id))
+            if trace is not None:
+                trace.mark("route", shard=sid)
             return self._shard(sid).submit_step(model_key, client_id, x_t,
-                                                history=history)
+                                                history=history, trace=trace)
 
     def step(self, model_key: str, client_id: str, x_t, history=None,
              timeout: float | None = 30.0):

@@ -35,6 +35,8 @@ import warnings
 from collections import OrderedDict
 from typing import Any
 
+import jax
+
 from repro.serving.router import ConsistentRouter
 from repro.serving.telemetry import Telemetry
 
@@ -625,6 +627,13 @@ class RecurrentSessionRunner:
         self.last_step_slots = sum(
             (-(-len(w) // width) * width) if width else len(w)
             for w in waves)
+        with jax.profiler.TraceAnnotation("repro.session_step_many"):
+            self._run_waves(fc, items, waves, version, results)
+        return results
+
+    def _run_waves(self, fc, items, waves, version, results) -> None:
+        import numpy as np
+
         for wave in waves:
             xs = np.zeros((len(wave), fc.feature_dim), np.float32)
             carries, stamps = [], []
@@ -655,4 +664,3 @@ class RecurrentSessionRunner:
                 self.cache.put(cid, new_carries[row], self._nbytes,
                                version=stamps[row])
                 results[idx] = (float(ys[row]), float(ps[row]))
-        return results

@@ -54,9 +54,11 @@ from concurrent.futures import Future
 import msgpack
 import numpy as np
 
+from repro.obs.trace import Tracer
+from repro.obs.trace import now as _trace_now
 from repro.serving.engine import BatcherConfig
 from repro.serving.router import ConsistentRouter
-from repro.serving.telemetry import _percentile
+from repro.serving.telemetry import _percentiles
 
 _HDR = struct.Struct(">I")
 
@@ -148,9 +150,26 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
 
     registry = ModelRegistry()
     telemetry = Telemetry()
+    # worker half of cross-process traces: requests whose frames carry a
+    # trace id are adopted into this tracer, their spans exported back
+    # in the result frame (the shard itself never STARTS traces — the
+    # router owns that decision, so tracing-off stays zero-cost here)
+    tracer = Tracer()
     shard = EngineShard(registry, config, telemetry, shard_id=shard_id)
     cache = SessionCache(max_sessions=max_sessions)
     runners: dict[str, RecurrentSessionRunner] = {}
+
+    def _adopt(msg, op_name):
+        tinfo = msg.get("trace")
+        if not tinfo:
+            return None
+        ctx = tracer.adopt(tinfo["id"], op=op_name, t0=tinfo.get("t"),
+                           parent=tinfo.get("parent"),
+                           meta={"shard": shard_id})
+        if ctx is not None:
+            # the wire + decode time: router send stamp -> now
+            ctx.mark("transport")
+        return ctx
 
     srv = socket.create_server((host, 0))
     pipe.send(srv.getsockname()[1])
@@ -161,12 +180,23 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
     shard.start()
     draining = False
 
-    def _send_result(rid, fut) -> None:
+    def _send_result(rid, fut, ctx=None) -> None:
+        # runs as the future's done-callback, INSIDE set_result on the
+        # flush thread: exporting here pops the trace before the
+        # engine's post-set_result reply/finish bookkeeping runs (those
+        # become no-ops), so the worker's spans travel in the result
+        # frame and the router records the final reply span
         try:
             y, p = fut.result()
-            conn.send({"op": "result", "id": rid, "y": y, "p": p,
-                       "version": getattr(fut, "model_version", None)})
+            out = {"op": "result", "id": rid, "y": y, "p": p,
+                   "version": getattr(fut, "model_version", None)}
+            if ctx is not None:
+                out["trace"] = {"spans": tracer.export(ctx),
+                                "t": _trace_now()}
+            conn.send(out)
         except Exception as e:  # noqa: BLE001 — fail the request, not the worker
+            if ctx is not None:
+                tracer.export(ctx)   # don't leak the active trace
             conn.send({"op": "error", "id": rid,
                        "message": f"{type(e).__name__}: {e}"})
 
@@ -187,13 +217,15 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
             elif op == "submit":
                 if draining:
                     raise RuntimeError("shard is draining")
+                ctx = _adopt(msg, "predict")
                 fut = shard.submit(msg["model"], unpack_array(msg["window"]),
-                                   client_id=msg.get("client"))
+                                   client_id=msg.get("client"), trace=ctx)
                 # resolves on the flush worker thread, out of order
                 fut.add_done_callback(
-                    lambda f, rid=rid: _send_result(rid, f))
+                    lambda f, rid=rid, ctx=ctx: _send_result(rid, f, ctx))
             elif op == "step":
                 key = msg["model"]
+                ctx = _adopt(msg, "step")
                 runner = runners.get(key)
                 if runner is None:
                     runner = runners.setdefault(key, RecurrentSessionRunner(
@@ -202,8 +234,14 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
                         if msg.get("history") is not None else None)
                 y, p = runner.step(msg["client"], unpack_array(msg["x"]),
                                    history=hist)
-                conn.send({"op": "result", "id": rid, "y": y, "p": p,
-                           "version": None})
+                if ctx is not None:
+                    ctx.mark("dispatch")
+                out = {"op": "result", "id": rid, "y": y, "p": p,
+                       "version": None}
+                if ctx is not None:
+                    out["trace"] = {"spans": tracer.export(ctx),
+                                    "t": _trace_now()}
+                conn.send(out)
             elif op == "warmup":
                 lens = (tuple(msg["lengths"]) if msg.get("lengths")
                         else None)
@@ -276,7 +314,9 @@ class RemoteShard:
         self.process = process
         self.versions: dict[str, int] = {}   # acked published versions
         self._conn = conn
-        self._pending: dict[int, Future] = {}
+        # rid -> (future, TraceContext | None): the context stitches the
+        # worker's exported spans back into the router-side trace
+        self._pending: dict[int, tuple[Future, object]] = {}
         self._plock = threading.Lock()
         self._ids = itertools.count(1)
         self._reader = threading.Thread(
@@ -290,15 +330,30 @@ class RemoteShard:
             if msg is None:
                 with self._plock:
                     pending, self._pending = self._pending, {}
-                for fut in pending.values():
+                for fut, ctx in pending.values():
+                    if ctx is not None:
+                        ctx.finish(status="error")
                     if not fut.done():
                         fut.set_exception(ConnectionError(
                             f"shard {self.shard_id} connection closed"))
                 return
             with self._plock:
-                fut = self._pending.pop(msg.get("id"), None)
-            if fut is None:
+                entry = self._pending.pop(msg.get("id"), None)
+            if entry is None:
                 continue
+            fut, ctx = entry
+            if ctx is not None:
+                # stitch the worker's half in, then close the trace
+                # BEFORE set_result wakes the client: a caller reading
+                # tracer.last() after result() sees the complete trace
+                tinfo = msg.get("trace") or {}
+                if tinfo.get("spans"):
+                    ctx.tracer.add_spans(ctx, tinfo["spans"])
+                if tinfo.get("t") is not None:
+                    ctx.t_last = tinfo["t"]   # worker's send stamp
+                ctx.mark("reply")             # wire + decode, back home
+                ctx.finish(status="error" if msg["op"] == "error"
+                           else "ok")
             if msg["op"] == "error":
                 fut.set_exception(RuntimeError(
                     f"shard {self.shard_id}: {msg['message']}"))
@@ -308,18 +363,27 @@ class RemoteShard:
             else:
                 fut.set_result(msg)
 
-    def _request(self, msg: dict) -> Future:
+    def _request(self, msg: dict, trace=None) -> Future:
         rid = next(self._ids)
         fut: Future = Future()
         fut.set_running_or_notify_cancel()
+        if trace is not None:
+            # the frame carries the trace id + the parent span + the
+            # send stamp; the worker adopts the id and records its half
+            # from that stamp on (one machine, shared system clock)
+            trace.mark("submit")
+            msg["trace"] = {"id": trace.trace_id, "parent": trace.last_sid,
+                            "t": trace.t_last}
         with self._plock:
-            self._pending[rid] = fut
+            self._pending[rid] = (fut, trace)
         msg["id"] = rid
         try:
             self._conn.send(msg)
         except OSError as e:
             with self._plock:
                 self._pending.pop(rid, None)
+            if trace is not None:
+                trace.finish(status="error")
             raise ConnectionError(
                 f"shard {self.shard_id} send failed: {e}") from e
         return fut
@@ -328,17 +392,20 @@ class RemoteShard:
         return self._request(msg).result(timeout=timeout)
 
     # -- EngineShard surface ----------------------------------------------
-    def submit(self, model_key: str, window, client_id=None) -> Future:
+    def submit(self, model_key: str, window, client_id=None,
+               trace=None) -> Future:
         return self._request({"op": "submit", "model": model_key,
                               "client": client_id,
-                              "window": pack_array(np.asarray(window))})
+                              "window": pack_array(np.asarray(window))},
+                             trace=trace)
 
-    def step(self, model_key: str, client_id: str, x_t, history=None):
+    def step(self, model_key: str, client_id: str, x_t, history=None,
+             trace=None):
         msg = {"op": "step", "model": model_key, "client": client_id,
                "x": pack_array(np.asarray(x_t, np.float32))}
         if history is not None:
             msg["history"] = pack_array(np.asarray(history, np.float32))
-        return self._call(msg)
+        return self._request(msg, trace=trace).result(timeout=60.0)
 
     def warmup(self, model_key: str, lengths=None) -> int:
         return self._call({"op": "warmup", "model": model_key,
@@ -433,7 +500,8 @@ class MultiProcessServingEngine:
 
     def __init__(self, registry=None, config: BatcherConfig | None = None,
                  n_shards: int = 2, max_skew: int = 1,
-                 max_sessions: int = 4096, host: str = "127.0.0.1"):
+                 max_sessions: int = 4096, host: str = "127.0.0.1",
+                 tracer=None):
         from repro.serving.registry import ModelRegistry
 
         if n_shards < 1:
@@ -442,6 +510,10 @@ class MultiProcessServingEngine:
             raise ValueError("max_skew must be >= 0")
         self.registry = registry if registry is not None else ModelRegistry()
         self.config = config or BatcherConfig()
+        # router-side tracer (repro.obs.Tracer | None): traces started
+        # here propagate through the request frames, the workers record
+        # their halves, and the stitched whole lands in this ring
+        self.tracer = tracer
         self.max_skew = max_skew
         self.router = ConsistentRouter(range(n_shards))
         self.workers: dict[int, RemoteShard] = {}
@@ -614,6 +686,8 @@ class MultiProcessServingEngine:
         return worker
 
     def submit(self, model_key: str, window, client_id=None) -> Future:
+        trace = (self.tracer.start("predict", meta={"model": model_key})
+                 if self.tracer is not None else None)
         payload = np.asarray(window)
         with self._route_lock:
             if client_id is not None:
@@ -625,8 +699,11 @@ class MultiProcessServingEngine:
                                                          itertools.count())
                 ids = self.router.shard_ids
                 sid = ids[next(counter) % len(ids)]
+            if trace is not None:
+                trace.mark("route", shard=sid)
             return self._worker(sid).submit(model_key, payload,
-                                            client_id=client_id)
+                                            client_id=client_id,
+                                            trace=trace)
 
     def predict(self, model_key: str, window, timeout: float | None = 60.0,
                 client_id=None):
@@ -636,9 +713,15 @@ class MultiProcessServingEngine:
     def step(self, model_key: str, client_id: str, x_t, history=None):
         """One O(1) streaming step, served by the worker process owning
         ``client_id`` (its shard-local session cache holds the carry)."""
+        trace = (self.tracer.start("step", meta={"model": model_key})
+                 if self.tracer is not None else None)
         with self._route_lock:
-            worker = self._worker(self.router.shard_for(str(client_id)))
-        return worker.step(model_key, str(client_id), x_t, history=history)
+            sid = self.router.shard_for(str(client_id))
+            if trace is not None:
+                trace.mark("route", shard=sid)
+            worker = self._worker(sid)
+        return worker.step(model_key, str(client_id), x_t, history=history,
+                           trace=trace)
 
     def warmup(self, model_key: str, lengths=None) -> int:
         self.propagate(model_key)
@@ -770,15 +853,18 @@ class MultiProcessServingEngine:
             misses += st["cache"]["misses"]
             evictions += st["cache"]["evictions"]
         lookups = hits + misses
+        # one sort per pooled list (see telemetry._percentiles)
+        lat50, lat95, lat99 = _percentiles(lat, (50, 95, 99))
+        stale50, stale95 = _percentiles(stale, (50, 95))
         return {
             "shards": len(stats),
             "requests": totals["requests"],
             "requests_by_shard": by_shard,
             "batches": totals["batches"],
             "throughput_rps": totals["requests"] / elapsed,
-            "p50_ms": _percentile(lat, 50) * 1e3,
-            "p95_ms": _percentile(lat, 95) * 1e3,
-            "p99_ms": _percentile(lat, 99) * 1e3,
+            "p50_ms": lat50 * 1e3,
+            "p95_ms": lat95 * 1e3,
+            "p99_ms": lat99 * 1e3,
             "mean_batch": (totals["real_slots"] / totals["batches"]
                            if totals["batches"] else 0.0),
             "batch_occupancy": (totals["real_slots"]
@@ -788,8 +874,8 @@ class MultiProcessServingEngine:
             "cache_evictions": evictions,
             "swaps": totals["swaps"],
             "reprimes": totals["reprimes"],
-            "staleness_p50_s": _percentile(stale, 50),
-            "staleness_p95_s": _percentile(stale, 95),
+            "staleness_p50_s": stale50,
+            "staleness_p95_s": stale95,
             "requests_by_version": by_version,
             "requests_by_client": by_client,
             "unique_clients": len(by_client),

@@ -407,3 +407,89 @@ def test_batched_step_equivalence_exhaustive(forecaster, seed, n_clients,
                                              n_ticks, evictions):
     _check_batched_equals_sequential(forecaster, seed, n_clients, n_ticks,
                                      evictions)
+
+
+# -- telemetry merge laws ---------------------------------------------------
+
+_LATS = st.lists(st.floats(1e-4, 0.5, allow_nan=False,
+                           allow_infinity=False), max_size=16)
+_SHARD_EVENTS = st.fixed_dictionaries({
+    "lats": _LATS,                               # one predict flush
+    "version": st.integers(1, 3),
+    "batches": st.lists(st.integers(1, 8), max_size=8),
+    "step_lats": _LATS,
+    "swaps": st.integers(0, 3),
+    "hits": st.integers(0, 5),
+    "misses": st.integers(0, 5),
+    "evictions": st.integers(0, 2),
+})
+
+
+@given(st.lists(_SHARD_EVENTS, min_size=1, max_size=4))
+@settings(deadline=None)
+def test_telemetry_merge_laws(shards):
+    """The fleet view must be an exact aggregate of the per-shard views:
+    counters sum, per-version attribution sums key-wise, and pooled
+    percentiles are actual recorded samples bounded by the per-shard
+    sample extrema (nearest-rank on the pooled reservoir)."""
+    from repro.serving.telemetry import Telemetry
+
+    tels = []
+    for ev in shards:
+        tel = Telemetry()
+        tel.record_requests(ev["lats"], version=ev["version"])
+        for n_real in ev["batches"]:
+            tel.record_batch(n_real, 8)
+        if ev["step_lats"]:
+            tel.record_step_batch(ev["step_lats"], n_padded=8)
+        tel.record_swap(ev["swaps"])
+        for _ in range(ev["hits"]):
+            tel.record_cache(True)
+        for _ in range(ev["misses"]):
+            tel.record_cache(False)
+        tel.record_eviction(ev["evictions"])
+        tels.append(tel)
+
+    snaps = [tel.snapshot() for tel in tels]
+    merged = Telemetry.merge(tels)
+
+    # counters: merged == sum over shards, exactly
+    for key in ("requests", "batches", "swaps", "cache_evictions",
+                "step_requests", "step_batches"):
+        assert merged[key] == sum(s[key] for s in snaps), key
+    assert merged["shards"] == len(tels)
+    assert merged["requests_by_shard"] == [s["requests"] for s in snaps]
+
+    # per-version attribution sums key-wise (no version lost or invented)
+    by_version: dict[int, int] = {}
+    for s in snaps:
+        for v, n in s["requests_by_version"].items():
+            by_version[v] = by_version.get(v, 0) + n
+    assert merged["requests_by_version"] == by_version
+    assert sum(by_version.values()) == merged["requests"]
+
+    # pooled percentiles: nearest-rank picks an ACTUAL sample, so the
+    # fleet percentile is bounded by the per-shard sample extrema and
+    # monotone in p (pooling can't extrapolate beyond any shard's data)
+    all_lats = [x for ev in shards for x in ev["lats"]]
+    if all_lats:
+        lo, hi = min(all_lats) * 1e3, max(all_lats) * 1e3
+        assert lo <= merged["p50_ms"] <= hi
+        assert lo <= merged["p95_ms"] <= hi
+        assert lo <= merged["p99_ms"] <= hi
+        assert merged["p50_ms"] <= merged["p95_ms"] <= merged["p99_ms"]
+    else:
+        assert merged["p50_ms"] == merged["p99_ms"] == 0.0
+    all_batches = [n for ev in shards for n in ev["batches"]]
+    if all_batches:
+        assert min(all_batches) <= merged["batch_p50"] <= max(all_batches)
+        assert min(all_batches) <= merged["batch_p95"] <= max(all_batches)
+        assert merged["batch_p50"] <= merged["batch_p95"]
+        assert merged["mean_batch"] == pytest.approx(
+            sum(all_batches) / len(all_batches))
+
+    # derived ratios recompute from the summed counters
+    hits = sum(ev["hits"] for ev in shards)
+    lookups = hits + sum(ev["misses"] for ev in shards)
+    assert merged["cache_hit_rate"] == pytest.approx(
+        hits / lookups if lookups else 0.0)

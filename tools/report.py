@@ -1,7 +1,9 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run
-JSONL results.
+JSONL results, and summarize serving event logs (repro.obs.EventLog
+JSONL — records carrying a "kind" key) when given one:
 
     PYTHONPATH=src python tools/report.py results/dryrun_*.jsonl
+    PYTHONPATH=src python tools/report.py results/serve_events.jsonl
 """
 
 from __future__ import annotations
@@ -11,13 +13,22 @@ import sys
 
 
 def load(paths):
-    recs = {}
+    """Split mixed JSONL inputs: dry-run records keyed by
+    (arch, shape, mesh), and obs event-log records (any line with a
+    "kind" key, see repro.obs.EventLog)."""
+    recs, events = {}, []
     for p in paths:
         with open(p) as f:
             for line in f:
+                line = line.strip()
+                if not line:
+                    continue
                 r = json.loads(line)
-                recs[(r["arch"], r["shape"], r["mesh"])] = r
-    return recs
+                if "kind" in r:
+                    events.append(r)
+                else:
+                    recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs, events
 
 
 def fmt_bytes(b):
@@ -35,8 +46,33 @@ def true_peak(rec) -> int:
     return a + t + o
 
 
+def render_events(events) -> None:
+    """Per-kind summary of a serving event log: counts, the window the
+    events span, and the newest few records of each kind (model swaps,
+    shard joins, error bursts — the operational story, not metrics)."""
+    by_kind: dict[str, list] = {}
+    for e in events:
+        by_kind.setdefault(e["kind"], []).append(e)
+    t0 = min(e.get("ts", 0.0) for e in events)
+    t1 = max(e.get("ts", 0.0) for e in events)
+    print(f"## Events ({len(events)} over {t1 - t0:.1f}s)\n")
+    print("| kind | count | last payload |")
+    print("|---|---|---|")
+    for kind in sorted(by_kind):
+        es = by_kind[kind]
+        last = {k: v for k, v in es[-1].items()
+                if k not in ("ts", "kind")}
+        payload = json.dumps(last) if last else "—"
+        print(f"| {kind} | {len(es)} | `{payload}` |")
+    print()
+
+
 def main(paths):
-    recs = load(paths)
+    recs, events = load(paths)
+    if events:
+        render_events(events)
+    if not recs:
+        return
     meshes = sorted({k[2] for k in recs})
     print("## Dry-run matrix (status / peak GiB per chip)\n")
     archs = sorted({k[0] for k in recs})
