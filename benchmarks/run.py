@@ -15,10 +15,10 @@ import json
 import sys
 import traceback
 
-from benchmarks import (bench_communication, bench_extreme, bench_hotswap,
-                        bench_kernels, bench_obs, bench_prediction,
-                        bench_roofline, bench_serving, bench_serving_mesh,
-                        bench_speedup, common)
+from benchmarks import (bench_communication, bench_extreme, bench_fault,
+                        bench_hotswap, bench_kernels, bench_obs,
+                        bench_prediction, bench_roofline, bench_serving,
+                        bench_serving_mesh, bench_speedup, common)
 
 ALL = [
     ("prediction", bench_prediction),    # paper Figs. 5-10
@@ -35,6 +35,8 @@ ALL = [
     # ISSUE 4 multi-process transport phase (join/leave over OS
     # processes) runs as its third phase, --smoke included
     ("obs", bench_obs),                  # ISSUE 6 tracing-overhead bound
+    ("fault", bench_fault),              # ISSUE 7 crash supervision:
+    # SIGKILL mid-traffic -> detection/fail-fast/respawn budgets
 ]
 
 

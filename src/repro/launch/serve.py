@@ -75,6 +75,15 @@ def main(argv: list[str] | None = None) -> None:
                     help="with --shards > 1: run each shard as its own "
                     "OS process behind the socket transport "
                     "(repro.serving.transport) instead of a thread")
+    ap.add_argument("--connect", action="append", default=[],
+                    metavar="HOST:PORT",
+                    help="(implies --processes) also join a shard worker "
+                    "already listening at HOST:PORT (started with "
+                    "`python -m repro.launch.shard_worker`); repeatable")
+    ap.add_argument("--heartbeat-s", type=float, default=0.5,
+                    help="process-mesh supervision heartbeat interval "
+                    "(crashed workers are detected within "
+                    "heartbeat * 4 and respawned)")
     ap.add_argument("--max-skew", type=int, default=1,
                     help="mesh swap-propagation staleness bound "
                     "(versions a shard may lag the primary)")
@@ -147,11 +156,17 @@ def main(argv: list[str] | None = None) -> None:
                             {p.shape[0] for p in payloads})))
     lengths = tuple({p.shape[0] for p in payloads})
     tracer = Tracer(capacity=1024) if args.trace else None
-    if args.shards > 1 and args.processes:
+    events = EventLog(path=args.events_out) if args.events_out else None
+    if args.connect:
+        args.processes = True
+        args.shards = max(args.shards, 1)
+    if (args.shards > 1 or args.connect) and args.processes:
         engine = MultiProcessServingEngine(registry, cfg,
                                            n_shards=args.shards,
                                            max_skew=args.max_skew,
-                                           tracer=tracer)
+                                           tracer=tracer,
+                                           heartbeat_s=args.heartbeat_s,
+                                           events=events)
     elif args.shards > 1:
         engine = ShardedServingEngine(registry, cfg, n_shards=args.shards,
                                       max_skew=args.max_skew,
@@ -159,8 +174,8 @@ def main(argv: list[str] | None = None) -> None:
     else:
         engine = ServingEngine(registry, cfg, tracer=tracer)
 
-    events = EventLog(path=args.events_out) if args.events_out else None
-    snapshot_fn = (engine.snapshot if args.shards > 1
+    is_mesh = args.shards > 1 or bool(args.connect)
+    snapshot_fn = (engine.snapshot if is_mesh
                    else lambda: engine.telemetry.snapshot())
     metrics = None
     if args.metrics_port is not None:
@@ -180,8 +195,11 @@ def main(argv: list[str] | None = None) -> None:
         profile_ctx = jax.profiler.trace(args.profile_dir)
 
     with engine:
+        for addr in args.connect:
+            sid = engine.connect_shard(addr)
+            print(f"joined remote shard worker {addr} as shard {sid}")
         engine.warmup(args.model, lengths=lengths)
-        if args.shards > 1:
+        if is_mesh:
             engine.reset_clock()
         else:
             engine.telemetry.reset_clock()
@@ -196,13 +214,13 @@ def main(argv: list[str] | None = None) -> None:
         if profile_ctx is not None:
             profile_ctx.__exit__(None, None, None)
             print(f"profiler capture written to {args.profile_dir}")
-        snap = (engine.snapshot() if args.shards > 1
+        snap = (engine.snapshot() if is_mesh
                 else engine.telemetry.snapshot())
         if events is not None:
             events.log("snapshot", phase="traffic", wall_s=wall, **{
                 k: v for k, v in snap.items()
                 if isinstance(v, (int, float, bool))})
-        if args.sessions and fc.feature_dim and args.shards > 1 \
+        if args.sessions and fc.feature_dim and is_mesh \
                 and args.processes:
             # sessions live in the worker processes' shard-local caches:
             # each step is routed to the client's owning worker
@@ -238,7 +256,7 @@ def main(argv: list[str] | None = None) -> None:
                     f.result(timeout=30.0)
                 n_steps += len(futs)
             wall_s = time.time() - t0s
-            ssnap = (engine.snapshot() if args.shards > 1
+            ssnap = (engine.snapshot() if is_mesh
                      else engine.telemetry.snapshot())
             print(f"sessions (batched decode): {n_steps} steps in "
                   f"{wall_s*1e3:.1f} ms "
@@ -256,9 +274,9 @@ def main(argv: list[str] | None = None) -> None:
     alerts = [(i, y, p) for i, (y, p) in enumerate(results)
               if p >= args.alert_threshold]
     print(f"{args.model}: {len(results)} requests in {wall*1e3:.1f} ms"
-          + (f" over {args.shards} shards" if args.shards > 1 else ""))
+          + (f" over {engine.n_shards} shards" if is_mesh else ""))
     print(Telemetry.format(snap))
-    if args.shards > 1:
+    if is_mesh:
         print(f"mesh: requests by shard {snap['requests_by_shard']} | "
               f"{snap['pulls']} weight pulls "
               f"({snap['bytes_pulled']/1e6:.2f} MB) | version vector "

@@ -39,6 +39,10 @@ Layout (DESIGN: one concern per module):
                     socket protocol; weight pushes ship serialized
                     checkpoints under the same ``max_skew`` bound, live
                     join/leave migrates session carries across processes;
+                    workers can live on OTHER HOSTS (``serve_shard`` +
+                    ``connect_shard``) and are heartbeat-supervised —
+                    a SIGKILLed worker is detected, its futures failed
+                    fast, and a local replacement respawned in place;
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
                     cache hit-rate, swap count, staleness at serve time,
                     per-version request counts, cross-shard ``merge``.
@@ -56,7 +60,7 @@ from repro.serving.sessions import (RecurrentSessionRunner, SessionCache,
 from repro.serving.swarm import ShardSwarm
 from repro.serving.telemetry import Telemetry
 from repro.serving.transport import (MultiProcessServingEngine, RemoteShard,
-                                     spawn_shard)
+                                     connect_shard, serve_shard, spawn_shard)
 
 __all__ = [
     "BatcherConfig",
@@ -78,6 +82,8 @@ __all__ = [
     "ZooForecaster",
     "build_lstm_forecaster",
     "build_zoo_forecaster",
+    "connect_shard",
+    "serve_shard",
     "spawn_shard",
     "stop_the_world_swap",
 ]

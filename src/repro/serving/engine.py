@@ -122,6 +122,19 @@ class _StepRequest:
 _STEP_BUCKET = -1
 
 
+class _Quiesce:
+    """Queue sentinel: when the worker dequeues one, everything enqueued
+    before it has reached the pending map — force-flush it all and wake
+    the waiter. Lets another thread (e.g. the transport worker's session
+    ``extract``) serialize against in-flight steps without stopping the
+    engine."""
+
+    __slots__ = ("event",)
+
+    def __init__(self):
+        self.event = threading.Event()
+
+
 class EngineShard:
     """One serving worker: a request queue drained by a thread that
     groups, pads and dispatches micro-batches over a ``ModelRegistry``
@@ -130,11 +143,17 @@ class EngineShard:
 
     def __init__(self, registry, config: BatcherConfig | None = None,
                  telemetry: Telemetry | None = None, shard_id: int = 0,
-                 session_cache=None, tracer=None):
+                 session_cache=None, tracer=None,
+                 donate_carries: bool = True):
         self.registry = registry
         self.config = config or BatcherConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shard_id = shard_id
+        # donate session carries to the fused step? Safe only while the
+        # flush worker is the sole toucher of the cache during serving;
+        # the transport worker passes False because its recv loop can
+        # ``extract``/``restore`` carries concurrently with flushes
+        self.donate_carries = donate_carries
         # per-request trace spans (repro.obs.Tracer); None -> no tracing
         self.tracer = tracer
         # trace meta is shared by reference (one dict per model, not one
@@ -176,13 +195,12 @@ class EngineShard:
 
                     # provider-backed: the runner re-resolves the
                     # registry key each flush, so weight hot-swaps are
-                    # picked up without rebuilding the runner. Carries
-                    # are donated to the fused step (no-op on CPU): the
-                    # worker thread is the only toucher of this cache
-                    # while serving, so in-place consumption is safe
+                    # picked up without rebuilding the runner. Carry
+                    # donation (no-op on CPU) follows the shard knob —
+                    # see __init__
                     runner = RecurrentSessionRunner(
                         lambda: self.registry.get(model_key), cache=cache,
-                        donate_carries=True)
+                        donate_carries=self.donate_carries)
                     self._runners[model_key] = runner
         return runner
 
@@ -367,6 +385,20 @@ class EngineShard:
         return self.submit_step(model_key, client_id, x_t,
                                 history=history).result(timeout=timeout)
 
+    def quiesce(self, timeout: float | None = 30.0) -> bool:
+        """Block until every request enqueued before this call has been
+        flushed (results delivered), without stopping the engine. Used
+        by the transport worker to serialize session ``extract`` against
+        in-flight streaming steps. Returns False on timeout; True
+        immediately if the engine is not running (queue already
+        drained)."""
+        with self._state_lock:
+            if not self._running:
+                return True
+            q = _Quiesce()
+            self._queue.put((None, q))
+        return q.event.wait(timeout)
+
     def warmup(self, model_key: str, lengths: tuple[int, ...] | None = None
                ) -> int:
         """Compile every (pow2 batch) x (length bucket) apply the hot path
@@ -543,6 +575,14 @@ class EngineShard:
                 tracer.finish_block("predict", self._meta_for(model_key),
                                     fspans, deferred)
 
+    def _flush_all(self) -> None:
+        """Dispatch every pending group right now (max_batch chunks)."""
+        for key in list(self._pending):
+            reqs = self._pending.pop(key)
+            while reqs:
+                self._flush(key[0], key[1], reqs[:self.config.max_batch])
+                del reqs[:self.config.max_batch]
+
     def _worker(self) -> None:
         cfg = self.config
         max_wait = cfg.max_wait_ms * 1e-3
@@ -555,6 +595,12 @@ class EngineShard:
                 except queue.Empty:
                     break
                 drained = True
+                if isinstance(req, _Quiesce):
+                    # everything enqueued before the sentinel is in the
+                    # pending map by now — flush it and wake the waiter
+                    self._flush_all()
+                    req.event.set()
+                    continue
                 key = (model_key,
                        _STEP_BUCKET if isinstance(req, _StepRequest)
                        else cfg.bucket_len(req.length))
@@ -582,6 +628,10 @@ class EngineShard:
             try:
                 model_key, req = self._queue.get(timeout=min(timeout, 0.05))
             except queue.Empty:
+                continue
+            if isinstance(req, _Quiesce):
+                self._flush_all()
+                req.event.set()
                 continue
             key = (model_key,
                    _STEP_BUCKET if isinstance(req, _StepRequest)

@@ -186,6 +186,25 @@ class Telemetry:
         with self._lock:
             return self._latency.percentile(p) * 1e3
 
+    def _raw_samples_locked(self) -> dict:
+        return {
+            "latency_s": list(self._latency._buf),
+            "staleness_s": list(self._staleness._buf),
+            "batch_sizes": list(self._batch_sizes._buf),
+            "step_latency_s": list(self._step_latency._buf),
+        }
+
+    def raw_samples(self) -> dict:
+        """Copies of the raw reservoir samples (latency / staleness /
+        batch size / step latency), taken under the telemetry lock.
+        This is THE way to read the reservoirs from another thread —
+        the buffers themselves are mutated concurrently by flush
+        workers, so reaching into ``_latency._buf`` directly races the
+        ring writes (the transport ``stats`` op used to do exactly
+        that)."""
+        with self._lock:
+            return self._raw_samples_locked()
+
     def snapshot(self) -> dict:
         with self._lock:
             elapsed = max(self._clock() - self._t0, 1e-9)
@@ -333,10 +352,11 @@ class Telemetry:
                     by_version[v] = by_version.get(v, 0) + n
                 for c, n in tel.requests_by_client.items():
                     by_client[c] = by_client.get(c, 0) + n
-                lat.extend(tel._latency._buf)
-                stale.extend(tel._staleness._buf)
-                bsz.extend(tel._batch_sizes._buf)
-                step_lat.extend(tel._step_latency._buf)
+                raw = tel._raw_samples_locked()
+                lat.extend(raw["latency_s"])
+                stale.extend(raw["staleness_s"])
+                bsz.extend(raw["batch_sizes"])
+                step_lat.extend(raw["step_latency_s"])
         lookups = totals["cache_hits"] + totals["cache_misses"]
         lat50, lat95, lat99 = _percentiles(lat, (50, 95, 99))
         stale50, stale95 = _percentiles(stale, (50, 95))

@@ -1,14 +1,16 @@
 """Socket transport for the serving mesh: each shard is an
 ``EngineShard`` (over its own replica ``ModelRegistry``, with a
-shard-local ``SessionCache``) running in its OWN OS process, connected
-to the router process over a TCP socket — the multi-node half of the
-paper's distributed story applied to serving (training already
-distributes via async local SGD; this distributes the forecast fleet).
+shard-local ``SessionCache``) running in its OWN OS process — or on
+another machine entirely — connected to the router process over a TCP
+socket. This is the multi-node half of the paper's distributed story
+applied to serving (training already distributes via async local SGD;
+this distributes the forecast fleet).
 
 ``MultiProcessServingEngine`` mirrors the in-process
-``ShardedServingEngine`` API (``submit`` / ``predict`` / ``warmup`` /
-``add_shard`` / ``remove_shard`` / ``snapshot`` / ``version_vector``)
-and keeps the same guarantees across process boundaries:
+``ShardedServingEngine`` API (``submit`` / ``predict`` / ``step`` /
+``warmup`` / ``add_shard`` / ``remove_shard`` / ``snapshot`` /
+``version_vector``) and keeps the same guarantees across process
+boundaries:
 
 - weight publishes against the primary registry are PUSHED to each
   worker as serialized checkpoints (``ModelRegistry.save_bytes`` ->
@@ -23,7 +25,30 @@ and keeps the same guarantees across process boundaries:
   owner shards;
 - session affinity: ``step`` routes a client's streaming state to the
   worker process owning that client, where a shard-local
-  ``SessionCache`` + ``RecurrentSessionRunner`` serve it O(1).
+  ``SessionCache`` + the shard's batched decode path serve it O(1) —
+  concurrent cross-process steps fuse into ONE decode dispatch per
+  flush (``EngineShard.submit_step``), same as in-process;
+- crash supervision: every worker is heartbeated (``ping``); a dead
+  one (SIGKILL, OOM, unplugged host) is detected within the heartbeat
+  budget, its pending futures fail fast with ``ConnectionError``
+  instead of timing out, the router stops assigning it traffic, and a
+  LOCAL worker is respawned — re-homing the session carries the
+  survivors still hold (``restore`` is insert-if-absent) while missed
+  sessions re-prime from client-supplied history on the next step. A
+  REMOTE worker cannot be respawned from here; the mesh remembers its
+  address (``awaiting_rejoin``) and re-adopts it on
+  ``connect_shard``/``add_shard(addr=...)``. Crash/recover events land
+  in the PR 6 ``EventLog`` and the ``crashes`` / ``respawns`` /
+  ``rehomed_sessions`` counters.
+
+Workers start two ways: ``spawn_shard`` forks a local process (the
+convenience path: the child binds an ephemeral port and pipes it back),
+or ``serve_shard`` runs standalone — ``python -m
+repro.launch.shard_worker --port 7070`` on any host — and the router
+dials in with ``connect_shard``. Both paths speak the same handshake:
+the router's FIRST frame is a ``hello`` carrying the shard id, batcher
+config and session budget; the worker builds its serving state from
+that, so a standalone worker needs no configuration of its own.
 
 Wire format (length-prefixed msgpack frames; see README):
 
@@ -34,10 +59,11 @@ Wire format (length-prefixed msgpack frames; see README):
     weights  := npz checkpoint bytes (repro.checkpoint.io), so config,
                 EVT calibration and model version ride along
 
-Ops: ``publish`` / ``submit`` / ``step`` / ``warmup`` / ``stats`` /
-``restore`` / ``extract`` / ``reset`` / ``drain`` / ``bye``. Replies
-are ``result`` (forecast rows), ``ok`` (control) or ``error``.
-Responses may arrive out of order — ``submit`` results resolve futures
+Ops: ``hello`` / ``ping`` / ``publish`` / ``submit`` / ``step`` /
+``warmup`` / ``stats`` / ``restore`` / ``extract`` / ``reset`` /
+``count_start`` / ``count_stop`` / ``drain`` / ``bye``. Replies are
+``result`` (forecast rows), ``ok`` (control) or ``error``. Responses
+may arrive out of order — ``submit``/``step`` results resolve futures
 by id as the worker's micro-batcher flushes them.
 """
 
@@ -49,6 +75,7 @@ import os
 import socket
 import struct
 import threading
+import time
 from concurrent.futures import Future
 
 import msgpack
@@ -74,6 +101,20 @@ def pack_array(a) -> dict:
 def unpack_array(d: dict) -> np.ndarray:
     return np.frombuffer(bytearray(d["data"]),
                          dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+
+
+def _wire_window(window) -> np.ndarray:
+    """Normalize a window to its serving dtype BEFORE framing: models
+    compute in float32 (token payloads in int32), so shipping the
+    caller's dtype as-is — float64 by default in numpy — doubles the
+    frame bytes and hands the worker an off-dtype array. ``step``
+    frames always normalized; ``submit`` frames now match."""
+    a = np.asarray(window)
+    if np.issubdtype(a.dtype, np.floating) and a.dtype != np.float32:
+        return a.astype(np.float32)
+    if np.issubdtype(a.dtype, np.integer) and a.dtype != np.int32:
+        return a.astype(np.int32)
+    return a
 
 
 class Connection:
@@ -134,30 +175,59 @@ def _unpack_carry(packed):
 
 # -- worker process --------------------------------------------------------
 
-def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
-                 max_sessions: int) -> None:
-    """Entry point of one shard worker process (``spawn`` context): an
-    ``EngineShard`` over a local replica registry plus a shard-local
-    session cache, serving one router connection until ``bye``/EOF."""
-    # heavy imports happen HERE, in the child, after spawn
-    import jax  # noqa: F401  (initializes the child's own backend)
+class _ShardState:
+    """One worker process's long-lived serving state. It outlives the
+    router connection under ``serve_shard(forever=True)``: the replica
+    registry, telemetry, tracer and session cache persist, so a router
+    that restarts (or a mesh re-adopting a remote shard) finds weights
+    and sessions still warm. Built lazily on the first ``hello`` frame,
+    which carries the shard id, batcher config and session budget —
+    the worker itself needs no configuration."""
 
-    from repro.serving.engine import EngineShard
-    from repro.serving.registry import ModelRegistry
-    from repro.serving.sessions import (RecurrentSessionRunner,
-                                        SessionCache)
-    from repro.serving.telemetry import Telemetry
+    def __init__(self):
+        self.registry = None
+        self.telemetry = None
+        self.cache = None
+        self.shard = None
+        # worker half of cross-process traces: requests whose frames
+        # carry a trace id are adopted here, their spans exported back
+        # in the result frame (the shard never STARTS traces — the
+        # router owns that decision, so tracing-off stays zero-cost)
+        self.tracer = Tracer()
 
-    registry = ModelRegistry()
-    telemetry = Telemetry()
-    # worker half of cross-process traces: requests whose frames carry a
-    # trace id are adopted into this tracer, their spans exported back
-    # in the result frame (the shard itself never STARTS traces — the
-    # router owns that decision, so tracing-off stays zero-cost here)
-    tracer = Tracer()
-    shard = EngineShard(registry, config, telemetry, shard_id=shard_id)
-    cache = SessionCache(max_sessions=max_sessions)
-    runners: dict[str, RecurrentSessionRunner] = {}
+    def configure(self, shard_id: int, config: BatcherConfig,
+                  max_sessions: int) -> None:
+        if self.shard is not None:
+            # a reconnecting router may rename us; everything else
+            # (weights, sessions, compile cache) is worth keeping
+            self.shard.shard_id = shard_id
+            return
+        # heavy imports happen HERE, on the first hello
+        from repro.serving.engine import EngineShard
+        from repro.serving.registry import ModelRegistry
+        from repro.serving.sessions import SessionCache
+
+        from repro.serving.telemetry import Telemetry
+
+        self.registry = ModelRegistry()
+        self.telemetry = Telemetry()
+        self.cache = SessionCache(max_sessions=max_sessions,
+                                  telemetry=self.telemetry)
+        # donate_carries=False: the recv loop extracts/restores session
+        # carries (migration) concurrently with the flush thread's
+        # batched steps, so in-place carry consumption is not safe here
+        self.shard = EngineShard(self.registry, config, self.telemetry,
+                                 shard_id=shard_id,
+                                 session_cache=self.cache,
+                                 donate_carries=False)
+
+
+def _serve_conn(conn: Connection, state: _ShardState) -> None:
+    """Serve one router connection over ``state`` until ``bye``/EOF."""
+    tracer = state.tracer
+    draining = False
+    counter_cm = None          # an installed dispatch.counting() block
+    counter = None
 
     def _adopt(msg, op_name):
         tinfo = msg.get("trace")
@@ -165,20 +235,11 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
             return None
         ctx = tracer.adopt(tinfo["id"], op=op_name, t0=tinfo.get("t"),
                            parent=tinfo.get("parent"),
-                           meta={"shard": shard_id})
+                           meta={"shard": state.shard.shard_id})
         if ctx is not None:
             # the wire + decode time: router send stamp -> now
             ctx.mark("transport")
         return ctx
-
-    srv = socket.create_server((host, 0))
-    pipe.send(srv.getsockname()[1])
-    pipe.close()
-    sock, _ = srv.accept()
-    srv.close()
-    conn = Connection(sock)
-    shard.start()
-    draining = False
 
     def _send_result(rid, fut, ctx=None) -> None:
         # runs as the future's done-callback, INSIDE set_result on the
@@ -197,8 +258,11 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
         except Exception as e:  # noqa: BLE001 — fail the request, not the worker
             if ctx is not None:
                 tracer.export(ctx)   # don't leak the active trace
-            conn.send({"op": "error", "id": rid,
-                       "message": f"{type(e).__name__}: {e}"})
+            try:
+                conn.send({"op": "error", "id": rid,
+                           "message": f"{type(e).__name__}: {e}"})
+            except OSError:
+                pass                 # router is gone; nobody to tell
 
     while True:
         msg = conn.recv()
@@ -206,6 +270,44 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
             break
         op, rid = msg.get("op"), msg.get("id")
         try:
+            if op == "hello":
+                cfg = msg.get("config") or {}
+                state.configure(
+                    int(msg.get("shard", 0)),
+                    BatcherConfig(
+                        max_batch=cfg.get("max_batch", 32),
+                        max_wait_ms=cfg.get("max_wait_ms", 2.0),
+                        length_buckets=tuple(cfg.get("length_buckets")
+                                             or ()),
+                        pad_batch=cfg.get("pad_batch", True)),
+                    int(msg.get("max_sessions", 4096)))
+                state.shard.start()
+                conn.send({"op": "ok", "id": rid, "pid": os.getpid(),
+                           "shard": state.shard.shard_id})
+                continue
+            if op == "ping":
+                # liveness probe: answered inline on the recv loop, so
+                # a reply proves the worker is accepting frames (flush
+                # work runs on its own thread and cannot block this)
+                conn.send({"op": "ok", "id": rid})
+                continue
+            if op == "bye":
+                draining = True
+                # drain BEFORE acking: every queued request's result
+                # frame hits the socket (FIFO) ahead of the goodbye, so
+                # a router that stops with submits in flight still
+                # resolves them — parity with the thread mesh's stop()
+                if state.shard is not None:
+                    state.shard.stop()
+                conn.send({"op": "ok", "id": rid})
+                break
+            shard = state.shard
+            if shard is None:
+                raise RuntimeError(
+                    "no hello yet: the first frame must be a hello "
+                    "carrying shard id + config")
+            registry, telemetry, cache = \
+                state.registry, state.telemetry, state.cache
             if op == "publish":
                 repeat = msg["model"] in registry
                 registry.load_bytes(bytes(msg["ckpt"]), key=msg["model"],
@@ -224,24 +326,20 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
                 fut.add_done_callback(
                     lambda f, rid=rid, ctx=ctx: _send_result(rid, f, ctx))
             elif op == "step":
-                key = msg["model"]
+                if draining:
+                    raise RuntimeError("shard is draining")
+                # through the engine's batched decode path: every step
+                # queued across the mesh's clients fuses into ONE decode
+                # dispatch per flush, and a slow step no longer stalls
+                # the recv loop (it used to run runner.step inline here)
                 ctx = _adopt(msg, "step")
-                runner = runners.get(key)
-                if runner is None:
-                    runner = runners.setdefault(key, RecurrentSessionRunner(
-                        lambda key=key: registry.get(key), cache))
                 hist = (unpack_array(msg["history"])
                         if msg.get("history") is not None else None)
-                y, p = runner.step(msg["client"], unpack_array(msg["x"]),
-                                   history=hist)
-                if ctx is not None:
-                    ctx.mark("dispatch")
-                out = {"op": "result", "id": rid, "y": y, "p": p,
-                       "version": None}
-                if ctx is not None:
-                    out["trace"] = {"spans": tracer.export(ctx),
-                                    "t": _trace_now()}
-                conn.send(out)
+                fut = shard.submit_step(msg["model"], msg["client"],
+                                        unpack_array(msg["x"]),
+                                        history=hist, trace=ctx)
+                fut.add_done_callback(
+                    lambda f, rid=rid, ctx=ctx: _send_result(rid, f, ctx))
             elif op == "warmup":
                 lens = (tuple(msg["lengths"]) if msg.get("lengths")
                         else None)
@@ -258,17 +356,23 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
                 conn.send({"op": "ok", "id": rid,
                            "installed": installed})
             elif op == "extract":
+                # serialize against queued steps first: a step enqueued
+                # before the membership flip must consume its carry
+                # before we hand that carry to the new owner
+                shard.quiesce(timeout=30.0)
                 out = [{"client": cid, "carry": _pack_carry(carry),
                         "nbytes": nbytes, "version": version}
                        for cid, carry, nbytes, version
                        in cache.export(msg.get("clients"))]
                 conn.send({"op": "ok", "id": rid, "sessions": out})
             elif op == "stats":
+                samples = telemetry.raw_samples()
                 conn.send({
                     "op": "ok", "id": rid, "pid": os.getpid(),
                     "telemetry": telemetry.snapshot(),
-                    "latency_s": list(telemetry._latency._buf),
-                    "staleness_s": list(telemetry._staleness._buf),
+                    "latency_s": samples["latency_s"],
+                    "staleness_s": samples["staleness_s"],
+                    "step_latency_s": samples["step_latency_s"],
                     "cache": cache.stats(),
                     "clients": cache.clients(),
                     "versions": {k: registry.version(k)
@@ -276,6 +380,28 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
             elif op == "reset":
                 telemetry.reset_clock()
                 conn.send({"op": "ok", "id": rid})
+            elif op == "count_start":
+                # cross-process dispatch accounting: collectors are
+                # per-process module globals, so the router cannot see
+                # this worker's decode dispatches without asking
+                if counter_cm is None:
+                    from repro.kernels import dispatch as _dispatch
+
+                    counter_cm = _dispatch.counting()
+                    counter = counter_cm.__enter__()
+                conn.send({"op": "ok", "id": rid})
+            elif op == "count_stop":
+                entries = []
+                if counter_cm is not None:
+                    shard.quiesce(timeout=30.0)   # count queued flushes
+                    counter_cm.__exit__(None, None, None)
+                    entries = [
+                        {"backend": bk, "op": o, "impl": impl,
+                         "shape": list(shape), "n": n}
+                        for (bk, o, impl, shape), n
+                        in counter.counts.items()]
+                    counter_cm = counter = None
+                conn.send({"op": "ok", "id": rid, "counts": entries})
             elif op == "drain":
                 draining = True
                 shard.stop()         # drains the queue: every queued
@@ -284,35 +410,87 @@ def _worker_main(pipe, shard_id: int, config: BatcherConfig, host: str,
                         "nbytes": nbytes, "version": version}
                        for cid, carry, nbytes, version in cache.export()]
                 conn.send({"op": "ok", "id": rid, "sessions": out})
-            elif op == "bye":
-                draining = True
-                # drain BEFORE acking: every queued request's result
-                # frame hits the socket (FIFO) ahead of the goodbye, so
-                # a router that stops with submits in flight still
-                # resolves them — parity with the thread mesh's stop()
-                shard.stop()
-                conn.send({"op": "ok", "id": rid})
-                break
             else:
                 raise ValueError(f"unknown op {op!r}")
         except Exception as e:  # noqa: BLE001 — fail the op, not the worker
-            conn.send({"op": "error", "id": rid,
-                       "message": f"{type(e).__name__}: {e}"})
-    shard.stop()
+            try:
+                conn.send({"op": "error", "id": rid,
+                           "message": f"{type(e).__name__}: {e}"})
+            except OSError:
+                break            # router is gone: nothing left to serve
+    if counter_cm is not None:
+        counter_cm.__exit__(None, None, None)
+    if state.shard is not None:
+        state.shard.stop()
     conn.close()
+
+
+def serve_shard(host: str = "0.0.0.0", port: int = 0, *,
+                forever: bool = False, on_bound=None) -> None:
+    """Run a shard worker in THIS process: bind, accept the router,
+    serve until ``bye``/EOF. The standalone entry point behind
+    ``python -m repro.launch.shard_worker`` — start it on any host and
+    join it to a mesh with ``connect_shard("host:port")`` /
+    ``add_shard(addr=...)``. With ``forever=True`` the worker outlives
+    its router: serving state (weights, sessions) persists and the next
+    connection resumes it. ``on_bound(port)`` reports the bound port
+    (``spawn_shard`` pipes it back to the parent)."""
+    import jax  # noqa: F401  (initialize this process's backend up front)
+
+    srv = socket.create_server((host, port), backlog=1)
+    if on_bound is not None:
+        on_bound(srv.getsockname()[1])
+    state = _ShardState()
+    try:
+        while True:
+            sock, _ = srv.accept()
+            if not forever:
+                srv.close()
+            _serve_conn(Connection(sock), state)
+            if not forever:
+                break
+    finally:
+        try:
+            srv.close()
+        except OSError:
+            pass
+
+
+def _worker_main(pipe, host: str) -> None:
+    """Entry point of one locally spawned shard worker process
+    (``spawn`` context): report the bound port over the pipe, then
+    serve one router connection. Configuration arrives in the router's
+    ``hello`` frame — same handshake a standalone worker speaks."""
+    def _report(port: int) -> None:
+        pipe.send(port)
+        pipe.close()
+
+    serve_shard(host, 0, forever=False, on_bound=_report)
 
 
 # -- router-side proxy -----------------------------------------------------
 
 class RemoteShard:
-    """Client proxy for one shard worker process: the ``EngineShard``
-    submit surface plus the transport control ops, demultiplexing
-    out-of-order replies onto per-request futures."""
+    """Client proxy for one shard worker: the ``EngineShard`` submit
+    surface plus the transport control ops, demultiplexing out-of-order
+    replies onto per-request futures. ``process`` is the local
+    ``mp.Process`` handle, or None for a worker joined by address
+    (``addr`` then names it). Liveness is tracked two ways: the reader
+    loop flags EOF (``_closed``) and stamps ``last_rx`` on every frame
+    — the supervisor pings idle workers and treats a stale ``last_rx``
+    / dead process / EOF as a crash."""
 
-    def __init__(self, shard_id: int, process, conn: Connection):
+    def __init__(self, shard_id: int, process, conn: Connection,
+                 addr: str | None = None):
         self.shard_id = shard_id
         self.process = process
+        self.addr = addr
+        self.pid = process.pid if process is not None else None
         self.versions: dict[str, int] = {}   # acked published versions
+        self.last_rx = time.monotonic()      # newest frame from the worker
+        self._slow_inflight = 0   # publish/warmup/drain calls in flight:
+        # the worker's recv loop is busy, so a quiet wire is NOT a crash
+        self._closed = False
         self._conn = conn
         # rid -> (future, TraceContext | None): the context stitches the
         # worker's exported spans back into the router-side trace
@@ -329,6 +507,10 @@ class RemoteShard:
             msg = self._conn.recv()
             if msg is None:
                 with self._plock:
+                    # flagged INSIDE the lock: _request checks it there,
+                    # so no future can be registered after this point —
+                    # every pending one fails here, fast
+                    self._closed = True
                     pending, self._pending = self._pending, {}
                 for fut, ctx in pending.values():
                     if ctx is not None:
@@ -337,6 +519,7 @@ class RemoteShard:
                         fut.set_exception(ConnectionError(
                             f"shard {self.shard_id} connection closed"))
                 return
+            self.last_rx = time.monotonic()
             with self._plock:
                 entry = self._pending.pop(msg.get("id"), None)
             if entry is None:
@@ -363,6 +546,26 @@ class RemoteShard:
             else:
                 fut.set_result(msg)
 
+    # -- liveness ----------------------------------------------------------
+    def is_alive(self) -> bool:
+        """False once the connection saw EOF or a local process died —
+        the fast, authoritative signals; a remote hang only shows up as
+        a stale ``last_rx`` (the supervisor's job)."""
+        if self._closed:
+            return False
+        if self.process is not None and not self.process.is_alive():
+            return False
+        return True
+
+    @property
+    def slow_inflight(self) -> int:
+        return self._slow_inflight
+
+    def ping(self) -> Future:
+        """Fire-and-forget liveness probe: any reply (this one's or any
+        result frame) refreshes ``last_rx`` via the reader loop."""
+        return self._request({"op": "ping"})
+
     def _request(self, msg: dict, trace=None) -> Future:
         rid = next(self._ids)
         fut: Future = Future()
@@ -375,6 +578,17 @@ class RemoteShard:
             msg["trace"] = {"id": trace.trace_id, "parent": trace.last_sid,
                             "t": trace.t_last}
         with self._plock:
+            if self._closed or (self.process is not None
+                                and not self.process.is_alive()):
+                # fail FAST: a request registered after the reader saw
+                # EOF (or the process died with bytes still in flight)
+                # has nobody left to resolve it — it used to hang for
+                # the full RPC timeout
+                if trace is not None:
+                    trace.finish(status="error")
+                raise ConnectionError(
+                    f"shard {self.shard_id} worker is gone (process dead "
+                    f"or connection closed)")
             self._pending[rid] = (fut, trace)
         msg["id"] = rid
         try:
@@ -388,34 +602,70 @@ class RemoteShard:
                 f"shard {self.shard_id} send failed: {e}") from e
         return fut
 
-    def _call(self, msg: dict, timeout: float = 60.0) -> dict:
-        return self._request(msg).result(timeout=timeout)
+    def _call(self, msg: dict, timeout: float = 60.0,
+              slow: bool = False) -> dict:
+        """Blocking request. ``slow=True`` marks ops that legitimately
+        occupy the worker's recv loop for a while (publish device_put,
+        warmup compiles, drain) so the supervisor's staleness check
+        stands down instead of declaring a busy worker dead."""
+        fut = self._request(msg)
+        if not slow:
+            return fut.result(timeout=timeout)
+        with self._plock:
+            self._slow_inflight += 1
+        try:
+            return fut.result(timeout=timeout)
+        finally:
+            with self._plock:
+                self._slow_inflight -= 1
+
+    # -- handshake ---------------------------------------------------------
+    def hello(self, config: BatcherConfig | None = None,
+              max_sessions: int = 4096) -> dict:
+        """The first frame on every connection: ship shard id + batcher
+        config + session budget; the worker builds (or renames) its
+        serving state and acks with its pid."""
+        config = config or BatcherConfig()
+        reply = self._call({
+            "op": "hello", "shard": self.shard_id,
+            "config": {"max_batch": config.max_batch,
+                       "max_wait_ms": config.max_wait_ms,
+                       "length_buckets": list(config.length_buckets),
+                       "pad_batch": config.pad_batch},
+            "max_sessions": max_sessions}, timeout=300.0, slow=True)
+        self.pid = reply.get("pid", self.pid)
+        return reply
 
     # -- EngineShard surface ----------------------------------------------
     def submit(self, model_key: str, window, client_id=None,
                trace=None) -> Future:
         return self._request({"op": "submit", "model": model_key,
                               "client": client_id,
-                              "window": pack_array(np.asarray(window))},
+                              "window": pack_array(_wire_window(window))},
                              trace=trace)
 
-    def step(self, model_key: str, client_id: str, x_t, history=None,
-             trace=None):
+    def submit_step(self, model_key: str, client_id: str, x_t,
+                    history=None, trace=None) -> Future:
         msg = {"op": "step", "model": model_key, "client": client_id,
                "x": pack_array(np.asarray(x_t, np.float32))}
         if history is not None:
             msg["history"] = pack_array(np.asarray(history, np.float32))
-        return self._request(msg, trace=trace).result(timeout=60.0)
+        return self._request(msg, trace=trace)
+
+    def step(self, model_key: str, client_id: str, x_t, history=None,
+             trace=None):
+        return self.submit_step(model_key, client_id, x_t, history=history,
+                                trace=trace).result(timeout=60.0)
 
     def warmup(self, model_key: str, lengths=None) -> int:
         return self._call({"op": "warmup", "model": model_key,
                            "lengths": list(lengths) if lengths else None},
-                          timeout=300.0)["programs"]
+                          timeout=300.0, slow=True)["programs"]
 
     # -- transport control -------------------------------------------------
     def publish(self, model_key: str, ckpt: bytes) -> int:
         v = self._call({"op": "publish", "model": model_key,
-                        "ckpt": ckpt}, timeout=300.0)["version"]
+                        "ckpt": ckpt}, timeout=300.0, slow=True)["version"]
         self.versions[model_key] = v
         return v
 
@@ -424,6 +674,21 @@ class RemoteShard:
 
     def reset_clock(self) -> None:
         self._call({"op": "reset"})
+
+    def count_start(self) -> None:
+        """Install a dispatch-count collector in the worker process."""
+        self._call({"op": "count_start"})
+
+    def count_stop(self):
+        """Uninstall the worker's collector and return its counts as a
+        ``DispatchCounts`` (queued flushes are counted first)."""
+        from repro.kernels.dispatch import DispatchCounts
+
+        counts = DispatchCounts()
+        for e in self._call({"op": "count_stop"}, timeout=120.0)["counts"]:
+            counts.add((e["backend"], e["op"], e["impl"],
+                        tuple(e["shape"])), e["n"])
+        return counts
 
     def restore(self, sessions: list[dict]) -> int:
         """Install migrated session carries (insert-if-absent, one
@@ -439,7 +704,19 @@ class RemoteShard:
         """Stop accepting work, finish the queue (every queued request
         resolves first), and return the worker's session carries for
         migration."""
-        return self._call({"op": "drain"}, timeout=300.0)["sessions"]
+        return self._call({"op": "drain"}, timeout=300.0,
+                          slow=True)["sessions"]
+
+    def abort(self) -> None:
+        """Crash-path teardown: no goodbye. Closing the socket makes
+        the reader loop fail every pending future immediately; a dead
+        local process is reaped."""
+        self._conn.close()
+        if self.process is not None:
+            self.process.join(5.0)
+            if self.process.is_alive():
+                self.process.terminate()
+                self.process.join(5.0)
 
     def close(self, timeout: float = 60.0) -> None:
         try:
@@ -450,24 +727,24 @@ class RemoteShard:
         except Exception:  # noqa: BLE001 — already gone is fine
             pass
         self._conn.close()
-        self.process.join(timeout)
-        if self.process.is_alive():
-            self.process.terminate()
+        if self.process is not None:
             self.process.join(timeout)
+            if self.process.is_alive():
+                self.process.terminate()
+                self.process.join(timeout)
 
 
 def spawn_shard(shard_id: int, config: BatcherConfig | None = None,
                 ctx=None, host: str = "127.0.0.1",
                 max_sessions: int = 4096,
                 spawn_timeout_s: float = 180.0) -> RemoteShard:
-    """Start one shard worker process and connect to it. The child binds
-    an ephemeral port and reports it back over a pipe before accepting
-    the router's connection."""
+    """Start one shard worker process locally and connect to it — the
+    single-machine convenience path over the same ``hello`` handshake a
+    remote worker speaks. The child binds an ephemeral port and reports
+    it back over a pipe before accepting the router's connection."""
     ctx = ctx or mp.get_context("spawn")
     parent_pipe, child_pipe = ctx.Pipe()
-    proc = ctx.Process(target=_worker_main,
-                       args=(child_pipe, shard_id,
-                             config or BatcherConfig(), host, max_sessions),
+    proc = ctx.Process(target=_worker_main, args=(child_pipe, host),
                        name=f"shard-worker-{shard_id}", daemon=True)
     proc.start()
     child_pipe.close()
@@ -479,13 +756,51 @@ def spawn_shard(shard_id: int, config: BatcherConfig | None = None,
     port = parent_pipe.recv()
     parent_pipe.close()
     sock = socket.create_connection((host, port), timeout=30.0)
-    return RemoteShard(shard_id, proc, Connection(sock))
+    # connect timeout ONLY: a timeout left on the socket poisons the
+    # reader loop (makefile reads raise after 30 s of idle wire and the
+    # proxy would treat a quiet-but-healthy worker as EOF)
+    sock.settimeout(None)
+    shard = RemoteShard(shard_id, proc, Connection(sock))
+    try:
+        shard.hello(config, max_sessions)
+    except Exception:
+        shard._conn.close()
+        proc.terminate()
+        raise
+    return shard
+
+
+def connect_shard(addr, shard_id: int = 0,
+                  config: BatcherConfig | None = None,
+                  max_sessions: int = 4096,
+                  timeout_s: float = 30.0) -> RemoteShard:
+    """Join a shard worker that is ALREADY listening — the remote-host
+    path (``serve_shard`` / ``python -m repro.launch.shard_worker`` on
+    the far machine). ``addr`` is ``"host:port"`` or a ``(host, port)``
+    tuple. The ``hello`` handshake ships the shard id + config, so the
+    worker needs no flags beyond where to listen."""
+    if isinstance(addr, str):
+        host, _, port = addr.rpartition(":")
+        if not host or not port:
+            raise ValueError(f"addr must be 'host:port', got {addr!r}")
+        addr = (host, int(port))
+    host, port = addr[0], int(addr[1])
+    sock = socket.create_connection((host, port), timeout=timeout_s)
+    sock.settimeout(None)      # see spawn_shard
+    shard = RemoteShard(shard_id, None, Connection(sock),
+                        addr=f"{host}:{port}")
+    try:
+        shard.hello(config, max_sessions)
+    except Exception:
+        shard._conn.close()
+        raise
+    return shard
 
 
 # -- the multi-process mesh ------------------------------------------------
 
 class MultiProcessServingEngine:
-    """The sharded serving mesh over OS processes: the
+    """The sharded serving mesh over OS processes (and hosts): the
     ``ShardedServingEngine`` API, with every shard an ``EngineShard``
     worker process behind the socket transport.
 
@@ -496,18 +811,36 @@ class MultiProcessServingEngine:
     ``max_skew``, with a convergence sweep available via ``propagate``.
     Routing (client-affine + anonymous round-robin) and live membership
     behave exactly like the in-process mesh.
+
+    Crash supervision: a background thread heartbeats every worker each
+    ``heartbeat_s``. A worker is declared dead when its process exits,
+    its connection hits EOF, or it answers nothing for ``miss_budget``
+    heartbeats (with no slow op in flight). Repair fails the dead
+    shard's pending futures immediately, shrinks the router (surviving
+    shards keep serving, the dead shard's clients re-route), respawns a
+    LOCAL worker in place — re-homing the session carries survivors
+    hold — or parks a REMOTE shard in ``awaiting_rejoin`` until
+    ``add_shard(addr=...)`` re-adopts it. Events land in ``events``
+    (a ``repro.obs.EventLog``) and the ``crashes`` / ``respawns`` /
+    ``rehomed_sessions`` counters.
     """
 
     def __init__(self, registry=None, config: BatcherConfig | None = None,
                  n_shards: int = 2, max_skew: int = 1,
                  max_sessions: int = 4096, host: str = "127.0.0.1",
-                 tracer=None):
+                 tracer=None, heartbeat_s: float = 0.5,
+                 miss_budget: int = 4, events=None,
+                 supervise: bool = True):
         from repro.serving.registry import ModelRegistry
 
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if max_skew < 0:
             raise ValueError("max_skew must be >= 0")
+        if heartbeat_s <= 0:
+            raise ValueError("heartbeat_s must be > 0")
+        if miss_budget < 1:
+            raise ValueError("miss_budget must be >= 1")
         self.registry = registry if registry is not None else ModelRegistry()
         self.config = config or BatcherConfig()
         # router-side tracer (repro.obs.Tracer | None): traces started
@@ -519,6 +852,17 @@ class MultiProcessServingEngine:
         self.workers: dict[int, RemoteShard] = {}
         self.pulls = 0               # weight pushes to workers
         self.bytes_pulled = 0        # serialized checkpoint bytes shipped
+        # crash supervision
+        self.heartbeat_s = heartbeat_s
+        self.miss_budget = miss_budget
+        self.supervise = supervise
+        self.events = events         # repro.obs.EventLog | None
+        self.crashes = 0             # workers declared dead
+        self.respawns = 0            # local workers respawned in place
+        self.rehomed_sessions = 0    # carries migrated by joins/repairs
+        self._rejoin: dict[int, str] = {}   # crashed remote: sid -> addr
+        self._supervisor: threading.Thread | None = None
+        self._sup_stop = threading.Event()
         self._host = host
         self._max_sessions = max_sessions
         self._ctx = mp.get_context("spawn")
@@ -544,6 +888,13 @@ class MultiProcessServingEngine:
     def shard_ids(self) -> list[int]:
         return sorted(self.workers)
 
+    @property
+    def awaiting_rejoin(self) -> dict[int, str]:
+        """Crashed REMOTE shards the supervisor cannot respawn from
+        here: {shard_id: last known address}. Restart the worker on its
+        host and call ``connect_shard(addr)`` to re-adopt it."""
+        return dict(self._rejoin)
+
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "MultiProcessServingEngine":
         with self._admin_lock:
@@ -559,9 +910,21 @@ class MultiProcessServingEngine:
                 if not self._attached:
                     self.registry.subscribe(self._on_publish)
                     self._attached = True
+        if self.supervise and self._supervisor is None:
+            self._sup_stop.clear()
+            self._supervisor = threading.Thread(
+                target=self._supervise, name="mesh-supervisor", daemon=True)
+            self._supervisor.start()
         return self
 
     def stop(self) -> None:
+        # supervisor down FIRST: a repair racing the teardown must not
+        # respawn workers we are about to close (repairs in flight see
+        # the stop flag and skip the respawn)
+        self._sup_stop.set()
+        sup, self._supervisor = self._supervisor, None
+        if sup is not None:
+            sup.join()
         with self._admin_lock:
             with self._lock, self._route_lock:
                 if self._attached:
@@ -580,6 +943,79 @@ class MultiProcessServingEngine:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    # -- crash supervision -------------------------------------------------
+    def _supervise(self) -> None:
+        budget = self.heartbeat_s * self.miss_budget
+        while not self._sup_stop.wait(self.heartbeat_s):
+            for sid, worker in list(self.workers.items()):
+                try:
+                    if not worker.is_alive():
+                        # process dead or reader saw EOF: authoritative
+                        self._repair(sid, worker)
+                        continue
+                    idle = time.monotonic() - worker.last_rx
+                    if idle >= budget and worker.slow_inflight == 0:
+                        # pings went unanswered for the whole budget
+                        # (remote hang / network partition)
+                        self._repair(sid, worker)
+                    elif idle >= self.heartbeat_s * 0.5:
+                        worker.ping()
+                except ConnectionError:
+                    self._repair(sid, worker)
+                except Exception as e:  # noqa: BLE001 — supervision survives
+                    if self.events is not None:
+                        self.events.log("supervisor_error", shard=sid,
+                                        error=f"{type(e).__name__}: {e}")
+
+    def _repair(self, sid: int, worker: RemoteShard) -> None:
+        """One dead worker's recovery: fail its pending futures NOW,
+        shrink the router so survivors take its clients, then respawn
+        in place (local) or park it for re-join (remote). Never raises
+        — the supervisor must survive any repair outcome."""
+        try:
+            with self._admin_lock:
+                if self.workers.get(sid) is not worker:
+                    return       # already repaired / removed / replaced
+                if worker.is_alive() and (time.monotonic() - worker.last_rx
+                                          < self.heartbeat_s
+                                          * self.miss_budget):
+                    return       # false alarm: it answered meanwhile
+                self.crashes += 1
+                with self._lock, self._route_lock:
+                    self.workers.pop(sid, None)
+                    try:
+                        self.router.remove_shard(sid)
+                    except ValueError:
+                        pass     # last shard: the router keeps the id so
+                        # a respawn re-claims it; meanwhile routing to it
+                        # fails fast (no live worker)
+                worker.abort()   # reader EOF fails every pending future
+                if self.events is not None:
+                    self.events.log("shard_crash", shard=sid,
+                                    remote=worker.addr is not None,
+                                    pid=worker.pid)
+                if worker.addr is not None:
+                    # a remote worker cannot be respawned from here:
+                    # remember where it lived and wait for a re-join
+                    self._rejoin[sid] = worker.addr
+                    if self.events is not None:
+                        self.events.log("shard_await_rejoin", shard=sid,
+                                        addr=worker.addr)
+                    return
+                if self._sup_stop.is_set():
+                    return       # mesh is stopping: do not respawn
+                replacement = spawn_shard(sid, self.config, self._ctx,
+                                          self._host, self._max_sessions)
+                moved = self._adopt_worker(sid, replacement)
+                self.respawns += 1
+                if self.events is not None:
+                    self.events.log("shard_respawn", shard=sid,
+                                    pid=replacement.pid, rehomed=moved)
+        except Exception as e:  # noqa: BLE001 — supervision survives
+            if self.events is not None:
+                self.events.log("shard_respawn_failed", shard=sid,
+                                error=f"{type(e).__name__}: {e}")
 
     # -- registry facade (WeightPublisher-compatible) ----------------------
     # Publishing THROUGH the mesh holds the push lock across the primary
@@ -636,7 +1072,11 @@ class MultiProcessServingEngine:
             if behind:
                 if blob is None:     # serialize once per push round
                     blob = self.registry.save_bytes(key)
-                worker.publish(key, blob)      # synchronous ack
+                try:
+                    worker.publish(key, blob)      # synchronous ack
+                except ConnectionError:
+                    continue   # crashed mid-push: the supervisor will
+                    # repair it, and a (re)join re-pushes with force
                 self.pulls += 1
                 self.bytes_pulled += len(blob)
                 pushed += 1
@@ -652,11 +1092,14 @@ class MultiProcessServingEngine:
     def version_vector(self, key: str) -> dict:
         """Atomic fleet snapshot {"primary": v, sid: acked_v, ...} —
         taken under the push lock, so the ``max_skew`` bound holds in
-        every vector this returns."""
+        every vector this returns. Dead workers awaiting repair are
+        excluded: a corpse cannot ack a push, and its replacement
+        re-syncs with force before taking traffic."""
         with self._lock:
             vec: dict = {"primary": self.registry.version(key)
                          if key in self.registry else 0}
-            acked = ({sid: w.versions for sid, w in self.workers.items()}
+            acked = ({sid: w.versions for sid, w in self.workers.items()
+                      if w.is_alive()}
                      if self.workers else self._stopped_versions)
             for sid, versions in sorted(acked.items()):
                 vec[sid] = versions.get(key, 0)
@@ -710,9 +1153,12 @@ class MultiProcessServingEngine:
         return self.submit(model_key, window,
                            client_id=client_id).result(timeout=timeout)
 
-    def step(self, model_key: str, client_id: str, x_t, history=None):
-        """One O(1) streaming step, served by the worker process owning
-        ``client_id`` (its shard-local session cache holds the carry)."""
+    def submit_step(self, model_key: str, client_id: str, x_t,
+                    history=None) -> Future:
+        """Async streaming step, routed to the worker process owning
+        ``client_id``. On the far side it rides the shard's batched
+        decode path (``EngineShard.submit_step``), so N concurrent
+        clients' steps fuse into one decode dispatch per flush."""
         trace = (self.tracer.start("step", meta={"model": model_key})
                  if self.tracer is not None else None)
         with self._route_lock:
@@ -720,65 +1166,109 @@ class MultiProcessServingEngine:
             if trace is not None:
                 trace.mark("route", shard=sid)
             worker = self._worker(sid)
-        return worker.step(model_key, str(client_id), x_t, history=history,
-                           trace=trace)
+        return worker.submit_step(model_key, str(client_id), x_t,
+                                  history=history, trace=trace)
+
+    def step(self, model_key: str, client_id: str, x_t, history=None):
+        """One O(1) streaming step, served by the worker process owning
+        ``client_id`` (its shard-local session cache holds the carry)."""
+        return self.submit_step(model_key, client_id, x_t,
+                                history=history).result(timeout=60.0)
 
     def warmup(self, model_key: str, lengths=None) -> int:
         self.propagate(model_key)
         self._warm_plan[model_key] = tuple(lengths) if lengths else None
         # snapshot: a shard joining mid-warmup must not break iteration
+        workers = list(self.workers.values())
+        if not workers:
+            raise RuntimeError(
+                "mesh has no live shards (call start() first, or every "
+                "worker has crashed and repair is pending)")
         return max(worker.warmup(model_key, lengths=lengths)
-                   for worker in list(self.workers.values()))
+                   for worker in workers)
 
     def reset_clock(self) -> None:
         for worker in list(self.workers.values()):
             worker.reset_clock()
 
     # -- live membership ---------------------------------------------------
-    def add_shard(self, shard_id: int | None = None) -> int:
-        """Grow the fleet by one worker PROCESS: it receives every
-        hosted model (pulling weights) and warms its compile set before
-        the router assigns it traffic. Returns the new shard id."""
+    def _adopt_worker(self, sid: int, worker: RemoteShard) -> int:
+        """Everything between "worker is connected" and "worker serves
+        traffic": weight push, warm plan, router membership, and the
+        migration of exactly the sessions the joiner wins. Shared by
+        ``add_shard`` and crash respawn; caller holds the admin lock.
+        Returns the number of re-homed sessions."""
+        try:
+            for key in self.registry.keys():
+                blob = self.registry.save_bytes(key)
+                worker.publish(key, blob)
+                self.pulls += 1
+                self.bytes_pulled += len(blob)
+            for model_key, lengths in list(self._warm_plan.items()):
+                worker.warmup(model_key, lengths=lengths)
+        except Exception:
+            worker.close()
+            raise
+        with self._lock, self._route_lock:
+            self.workers[sid] = worker
+            for key in self.registry.keys():
+                self._push_locked(key, force=True)  # catch up any
+                # publish that raced the spawn, before taking traffic
+            self.router.add_shard(sid)
+        # migrate exactly the sessions the new shard wins, OUTSIDE
+        # the locks (per-session RPCs must not stall the fleet's
+        # intake): restores are insert-if-absent, so a fresher
+        # carry written by a concurrent step always wins
+        moved = 0
+        for old_sid, old_worker in list(self.workers.items()):
+            if old_sid == sid:
+                continue
+            try:
+                owned = [c for c in old_worker.stats()["clients"]
+                         if self.router.shard_for(c) == sid]
+                sessions = old_worker.extract(owned) if owned else []
+            except (ConnectionError, RuntimeError):
+                continue     # that worker is dying too — its own repair
+                # will re-home whatever it held
+            if sessions:
+                moved += worker.restore(sessions)
+        self.rehomed_sessions += moved
+        return moved
+
+    def add_shard(self, shard_id: int | None = None,
+                  addr: str | tuple | None = None) -> int:
+        """Grow the fleet by one worker: spawn a local process
+        (default), or join a worker already listening on ``addr``
+        (``"host:port"`` — the remote-host path, see ``serve_shard``).
+        Either way the joiner receives every hosted model and warms its
+        compile set BEFORE the router assigns it traffic. Returns the
+        shard id."""
         with self._admin_lock:
             with self._lock:
                 sid = (max(self.workers) + 1 if self.workers else 0) \
                     if shard_id is None else int(shard_id)
                 if sid in self.workers:
                     raise ValueError(f"shard {sid} already exists")
-            # the slow part (process spawn, weight push, jit warmup)
-            # happens while traffic keeps flowing to the current fleet
-            worker = spawn_shard(sid, self.config, self._ctx, self._host,
-                                 self._max_sessions)
-            try:
-                for key in self.registry.keys():
-                    blob = self.registry.save_bytes(key)
-                    worker.publish(key, blob)
-                    self.pulls += 1
-                    self.bytes_pulled += len(blob)
-                for model_key, lengths in list(self._warm_plan.items()):
-                    worker.warmup(model_key, lengths=lengths)
-            except Exception:
-                worker.close()
-                raise
-            with self._lock, self._route_lock:
-                self.workers[sid] = worker
-                for key in self.registry.keys():
-                    self._push_locked(key, force=True)  # catch up any
-                    # publish that raced the spawn, before taking traffic
-                self.router.add_shard(sid)
-            # migrate exactly the sessions the new shard wins, OUTSIDE
-            # the locks (per-session RPCs must not stall the fleet's
-            # intake): restores are insert-if-absent, so a fresher
-            # carry written by a concurrent step always wins
-            for old_sid, old_worker in list(self.workers.items()):
-                if old_sid == sid:
-                    continue
-                owned = [c for c in old_worker.stats()["clients"]
-                         if self.router.shard_for(c) == sid]
-                sessions = old_worker.extract(owned) if owned else []
-                if sessions:
-                    worker.restore(sessions)
+            # the slow part (process spawn / dial, weight push, jit
+            # warmup) happens while traffic keeps flowing to the fleet
+            if addr is not None:
+                worker = connect_shard(addr, sid, self.config,
+                                       self._max_sessions)
+            else:
+                worker = spawn_shard(sid, self.config, self._ctx,
+                                     self._host, self._max_sessions)
+            moved = self._adopt_worker(sid, worker)
+            self._rejoin.pop(sid, None)
+            if self.events is not None:
+                self.events.log("shard_join", shard=sid,
+                                remote=addr is not None, rehomed=moved)
             return sid
+
+    def connect_shard(self, addr, shard_id: int | None = None) -> int:
+        """Join the shard worker listening at ``addr`` — sugar for
+        ``add_shard(addr=...)``; also how a crashed remote shard
+        re-joins (see ``awaiting_rejoin``)."""
+        return self.add_shard(shard_id=shard_id, addr=addr)
 
     def remove_shard(self, shard_id: int) -> None:
         """Shrink the fleet by one worker process: the router stops
@@ -809,19 +1299,30 @@ class MultiProcessServingEngine:
     # -- observation -------------------------------------------------------
     def shard_stats(self) -> dict[int, dict]:
         """Raw per-worker stats (telemetry snapshot, cache stats, hosted
-        versions, resident session clients, worker pid)."""
+        versions, resident session clients, worker pid). A worker that
+        crashes between the membership snapshot and its RPC is skipped
+        — the supervisor is already on it."""
         workers = dict(self.workers)     # snapshot vs live membership
-        return {sid: workers[sid].stats() for sid in sorted(workers)}
+        out: dict[int, dict] = {}
+        for sid in sorted(workers):
+            try:
+                out[sid] = workers[sid].stats()
+            except ConnectionError:
+                continue
+        return out
 
     def snapshot(self) -> dict:
         """Fleet-wide telemetry in the same shape as
         ``Telemetry.merge`` (``Telemetry.format`` accepts it), pooled
-        from the worker processes' snapshots, plus transport counters."""
+        from the worker processes' snapshots, plus transport and
+        supervision counters."""
         stats = self.shard_stats()
         lat: list[float] = []
         stale: list[float] = []
+        step_lat: list[float] = []
         totals = {"requests": 0, "batches": 0, "real_slots": 0,
-                  "padded_slots": 0, "swaps": 0, "reprimes": 0}
+                  "padded_slots": 0, "swaps": 0, "reprimes": 0,
+                  "step_requests": 0, "step_batches": 0}
         by_version: dict[int, int] = {}
         by_client: dict[str, int] = {}
         by_shard: list[int] = []
@@ -834,6 +1335,8 @@ class MultiProcessServingEngine:
             totals["batches"] += tel["batches"]
             totals["swaps"] += tel["swaps"]
             totals["reprimes"] += tel["reprimes"]
+            totals["step_requests"] += tel["step_requests"]
+            totals["step_batches"] += tel["step_batches"]
             # occupancy reconstructed from the means the snapshot keeps
             totals["real_slots"] += int(round(
                 tel["mean_batch"] * tel["batches"]))
@@ -849,6 +1352,7 @@ class MultiProcessServingEngine:
                 by_client[c] = by_client.get(c, 0) + n
             lat.extend(st["latency_s"])
             stale.extend(st["staleness_s"])
+            step_lat.extend(st.get("step_latency_s", ()))
             hits += st["cache"]["hits"]
             misses += st["cache"]["misses"]
             evictions += st["cache"]["evictions"]
@@ -856,6 +1360,7 @@ class MultiProcessServingEngine:
         # one sort per pooled list (see telemetry._percentiles)
         lat50, lat95, lat99 = _percentiles(lat, (50, 95, 99))
         stale50, stale95 = _percentiles(stale, (50, 95))
+        step50, step95 = _percentiles(step_lat, (50, 95))
         return {
             "shards": len(stats),
             "requests": totals["requests"],
@@ -874,6 +1379,10 @@ class MultiProcessServingEngine:
             "cache_evictions": evictions,
             "swaps": totals["swaps"],
             "reprimes": totals["reprimes"],
+            "step_requests": totals["step_requests"],
+            "step_batches": totals["step_batches"],
+            "step_p50_ms": step50 * 1e3,
+            "step_p95_ms": step95 * 1e3,
             "staleness_p50_s": stale50,
             "staleness_p95_s": stale95,
             "requests_by_version": by_version,
@@ -881,4 +1390,7 @@ class MultiProcessServingEngine:
             "unique_clients": len(by_client),
             "pulls": self.pulls,
             "bytes_pulled": self.bytes_pulled,
+            "crashes": self.crashes,
+            "respawns": self.respawns,
+            "rehomed_sessions": self.rehomed_sessions,
         }

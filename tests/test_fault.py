@@ -1,0 +1,295 @@
+"""Fault injection for the crash-supervised process mesh (ISSUE 7
+acceptance): SIGKILL a shard worker under mixed submit/step traffic and
+hard-assert the recovery story — detection within the heartbeat budget,
+pending futures failed fast (not the 60 s RPC timeout), zero dropped
+requests on the surviving shards, supervised respawn with the crash and
+recovery visible in the EventLog and telemetry counters, dead-shard
+sessions re-primed bitwise against an uninterrupted reference, and the
+publish skew bound holding across the respawn. A crashed REMOTE worker
+(joined by address) is parked for re-join instead of respawned.
+
+Worker processes are spawned (own jax backend + compile set), so this
+module costs process startup — bounded by the tiny model config.
+"""
+
+import os
+import signal
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.rnn import RNNConfig, init_rnn
+from repro.obs import EventLog
+from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
+                           MultiProcessServingEngine, WeightPublisher)
+
+CFG = RNNConfig(input_dim=3, hidden=8, num_layers=1, fc_dims=(4,),
+                window=8, evl_head=True)
+BCFG = BatcherConfig(max_batch=4, max_wait_ms=2.0, length_buckets=(8,))
+
+HEARTBEAT_S = 0.1
+MISS_BUDGET = 4
+# detection budget (heartbeat * misses) + repair slack: the respawn
+# itself costs a process start + jax init + warmup, so RECOVERY gets a
+# generous ceiling while DETECTION is asserted tightly
+DETECT_BUDGET_S = HEARTBEAT_S * MISS_BUDGET + 1.0
+RECOVER_BUDGET_S = 90.0
+
+
+@pytest.fixture(scope="module")
+def forecaster():
+    fc = LSTMForecaster(cfg=CFG, params=init_rnn(jax.random.PRNGKey(0),
+                                                 CFG))
+    rng = np.random.default_rng(0)
+    fc.calibrate(rng.standard_normal((64, CFG.window, 3)).astype(np.float32)
+                 * 0.02)
+    return fc
+
+
+def _windows(n, t=CFG.window, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((n, t, 3)).astype(np.float32) * 0.02
+
+
+def _mesh(forecaster, n_shards=2, **kw):
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    kw.setdefault("heartbeat_s", HEARTBEAT_S)
+    kw.setdefault("miss_budget", MISS_BUDGET)
+    return MultiProcessServingEngine(reg, BCFG, n_shards=n_shards, **kw)
+
+
+def _await(predicate, timeout_s, what):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        if predicate():
+            return time.monotonic() - t0
+        time.sleep(0.02)
+    raise AssertionError(f"timed out after {timeout_s}s waiting for {what}")
+
+
+def test_sigkill_worker_under_traffic_is_supervised(forecaster):
+    """THE fault-injection scenario: SIGKILL one worker while submit
+    and step traffic flows to the whole fleet. The supervisor must
+    detect within the heartbeat budget, fail the victim's in-flight
+    futures fast, keep the survivors at zero drops, respawn the shard,
+    and leave an audit trail in events + counters. Afterward the dead
+    shard's sessions re-prime bitwise against an uninterrupted
+    reference and the publish path converges the whole fleet again."""
+    events = EventLog()
+    clients = [f"c{i}" for i in range(16)]
+    wins = _windows(32, seed=2)
+    half = CFG.window // 2
+
+    with _mesh(forecaster, n_shards=2, events=events) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        victim_sid = 0
+        victim = mesh.workers[victim_sid]
+        victim_pid = victim.process.pid
+        survivor_clients = [c for c in clients
+                            if mesh.shard_for(c) != victim_sid]
+        victim_clients = [c for c in clients
+                          if mesh.shard_for(c) == victim_sid]
+        assert survivor_clients and victim_clients
+
+        # streaming sessions on the VICTIM shard: half the stream now,
+        # the rest after the crash — their carries die with the worker,
+        # so the post-crash steps must re-prime from history
+        sess = {c: _windows(1, seed=30 + i)[0]
+                for i, c in enumerate(victim_clients[:3])}
+        for c, w in sess.items():
+            for t in range(half):
+                mesh.step("m", c, w[t])
+
+        stop = threading.Event()
+        survivor_futs, victim_errors, flock = [], [], threading.Lock()
+        survivor_errors = []
+
+        def survivor_traffic():
+            i = 0
+            while not stop.is_set():
+                try:
+                    c = survivor_clients[i % len(survivor_clients)]
+                    f = mesh.submit("m", wins[i % len(wins)], client_id=c)
+                    with flock:
+                        survivor_futs.append(f)
+                except Exception as e:  # noqa: BLE001 — a drop IS the failure
+                    survivor_errors.append(e)
+                i += 1
+                time.sleep(0.002)
+
+        def victim_traffic():
+            # requests routed at the dead shard are ALLOWED to fail —
+            # but only fast (ConnectionError / re-route), never a hang
+            i = 0
+            while not stop.is_set():
+                c = victim_clients[i % len(victim_clients)]
+                t0 = time.monotonic()
+                try:
+                    mesh.submit("m", wins[i % len(wins)],
+                                client_id=c).result(timeout=30.0)
+                except Exception as e:  # noqa: BLE001
+                    victim_errors.append((type(e).__name__,
+                                          time.monotonic() - t0))
+                i += 1
+                time.sleep(0.002)
+
+        threads = [threading.Thread(target=fn) for fn in
+                   (survivor_traffic, victim_traffic)]
+        for t in threads:
+            t.start()
+        try:
+            time.sleep(0.3)                    # steady state first
+            t_kill = time.monotonic()
+            os.kill(victim_pid, signal.SIGKILL)
+
+            # detection: the crash event lands within the budget
+            detect_s = _await(
+                lambda: any(e["kind"] == "shard_crash"
+                            for e in events.events()),
+                DETECT_BUDGET_S, "shard_crash event")
+            # recovery: membership back to full strength, new process
+            _await(lambda: mesh.shard_ids == [0, 1]
+                   and mesh.workers[victim_sid].pid != victim_pid
+                   and any(e["kind"] == "shard_respawn"
+                           for e in events.events()),
+                   RECOVER_BUDGET_S, "supervised respawn")
+            time.sleep(0.3)                    # post-recovery traffic
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+
+        # survivors: ZERO drops, every future resolves
+        assert not survivor_errors, survivor_errors[:3]
+        with flock:
+            pending = list(survivor_futs)
+        results = [f.result(timeout=60.0) for f in pending]
+        assert len(results) >= 50
+        assert all(np.isfinite(y) and 0.0 <= p <= 1.0 for y, p in results)
+
+        # victim requests that failed did so FAST (fail-fast + repair),
+        # never the 60 s RPC timeout — and traffic resumed after repair
+        assert all(dt < DETECT_BUDGET_S + 5.0
+                   for _, dt in victim_errors), victim_errors[:5]
+
+        # audit trail: crash + respawn in events and counters
+        kinds = [e["kind"] for e in events.events()]
+        assert "shard_crash" in kinds and "shard_respawn" in kinds
+        crash = next(e for e in events.events()
+                     if e["kind"] == "shard_crash")
+        assert crash["shard"] == victim_sid and crash["pid"] == victim_pid
+        snap = mesh.snapshot()
+        assert snap["crashes"] == 1
+        assert snap["respawns"] == 1
+        assert mesh.crashes == 1 and mesh.respawns == 1
+        assert detect_s <= DETECT_BUDGET_S
+
+        # skew bound across the respawn: a publish storm converges the
+        # WHOLE fleet, replacement included, then pins the original
+        # weights so the session references below are deterministic
+        pub = WeightPublisher(mesh, "m", template=forecaster)
+        for i in range(3):
+            pub.publish(jax.tree.map(lambda a, s=1.0 + 0.01 * i: a * s,
+                                     forecaster.params))
+        pub.publish(forecaster.params)
+        mesh.propagate("m")
+        vec = mesh.version_vector("m")
+        shard_vs = {v for k, v in vec.items() if k != "primary"}
+        assert shard_vs == {vec["primary"]}, vec
+        assert set(vec) == {"primary", 0, 1}   # replacement in the vector
+
+        # dead-shard sessions: their carries died with the worker, so
+        # finish each stream passing the history prefix — the miss
+        # replay re-primes and the stream ends bitwise where an
+        # uninterrupted local replay does
+        for c, w in sess.items():
+            for t in range(half, CFG.window):
+                y, p = mesh.step("m", c, w[t], history=w[:t])
+            y_r, p_r, _ = forecaster.replay(w[None])
+            assert (y, p) == (float(y_r[0]), float(p_r[0])), c
+
+
+def test_crashed_remote_shard_parks_for_rejoin(forecaster):
+    """A worker joined by ADDRESS cannot be respawned from the router's
+    machine: on crash it is removed from the router, parked in
+    ``awaiting_rejoin``, and re-adopted by a later connect_shard —
+    sessions and weights re-pushed through the normal join path."""
+    import multiprocessing as mp
+
+    from repro.serving.transport import _worker_main
+
+    events = EventLog()
+    ctx = mp.get_context("spawn")
+
+    def _standalone():
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(target=_worker_main, args=(child, "127.0.0.1"),
+                           daemon=True)
+        proc.start()
+        child.close()
+        assert parent.poll(60.0)
+        port = parent.recv()
+        parent.close()
+        return proc, port
+
+    with _mesh(forecaster, n_shards=1, events=events) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        proc, port = _standalone()
+        sid = mesh.connect_shard(f"127.0.0.1:{port}")
+        assert mesh.workers[sid].addr == f"127.0.0.1:{port}"
+        assert mesh.shard_ids == [0, sid]
+
+        os.kill(proc.pid, signal.SIGKILL)
+        _await(lambda: sid in mesh.awaiting_rejoin,
+               DETECT_BUDGET_S + 5.0, "remote shard parked for rejoin")
+        assert mesh.awaiting_rejoin[sid] == f"127.0.0.1:{port}"
+        assert mesh.shard_ids == [0]           # router shrank
+        assert mesh.respawns == 0              # NOT respawned locally
+        assert any(e["kind"] == "shard_await_rejoin"
+                   for e in events.events())
+        # the surviving local shard keeps serving everything
+        y, p = mesh.predict("m", _windows(1)[0], client_id="r0",
+                            timeout=60.0)
+        assert np.isfinite(y)
+
+        # the operator restarts the worker (new port) and re-joins it
+        proc2, port2 = _standalone()
+        try:
+            rejoined = mesh.add_shard(shard_id=sid,
+                                      addr=f"127.0.0.1:{port2}")
+            assert rejoined == sid
+            assert sid not in mesh.awaiting_rejoin
+            assert mesh.shard_ids == [0, sid]
+            vec = mesh.version_vector("m")
+            assert vec[sid] == vec["primary"]
+            futs = [mesh.submit("m", w, client_id=f"rc{i}")
+                    for i, w in enumerate(_windows(8, seed=5))]
+            assert all(np.isfinite(f.result(timeout=60.0)[0])
+                       for f in futs)
+        finally:
+            proc2.terminate()
+        proc.join(5.0)
+
+
+def test_repair_is_idempotent_and_stop_safe(forecaster):
+    """Supervision bookkeeping: a single crash produces exactly one
+    crash/respawn event pair even with an aggressive heartbeat, and
+    stopping the mesh mid-storm neither hangs nor leaks workers."""
+    events = EventLog()
+    with _mesh(forecaster, n_shards=2, events=events,
+               heartbeat_s=0.05) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        os.kill(mesh.workers[1].process.pid, signal.SIGKILL)
+        _await(lambda: mesh.respawns == 1, RECOVER_BUDGET_S, "respawn")
+        time.sleep(0.5)                        # give false repairs a chance
+        assert mesh.crashes == 1
+        kinds = [e["kind"] for e in events.events()]
+        assert kinds.count("shard_crash") == 1
+        assert kinds.count("shard_respawn") == 1
+    # post-stop: supervisor is down, no worker processes left behind
+    assert mesh._supervisor is None
+    assert not mesh.workers

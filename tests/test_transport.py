@@ -250,3 +250,215 @@ def test_transport_rejects_bad_ops(forecaster):
         mesh.remove_shard(0)
         with pytest.raises(ValueError):
             mesh.remove_shard(1)               # never below one shard
+
+
+# -- PR 7: crash supervision, remote join, hot-path bug sweep --------------
+
+def test_request_fails_fast_when_worker_dies(forecaster):
+    """ISSUE 7 satellite: a request issued against a dead worker must
+    fail with ConnectionError within the heartbeat budget, NOT hang for
+    the full 60 s RPC timeout (the reader loop flags EOF; `_request`
+    refuses to register futures nobody will resolve)."""
+    import signal
+
+    with _mesh(forecaster, n_shards=2, supervise=False) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        worker = mesh.workers[0]
+        os.kill(worker.process.pid, signal.SIGKILL)
+        t0 = time.monotonic()
+        with pytest.raises(ConnectionError):
+            # the send may land in the OS buffer (future fails via
+            # reader EOF) or be refused outright — both must be fast
+            worker.submit("m", _windows(1)[0]).result(timeout=30.0)
+        assert time.monotonic() - t0 < 5.0
+        # and once the death is observed, requests fail IMMEDIATELY
+        worker.process.join(5.0)
+        t0 = time.monotonic()
+        for _ in range(3):
+            with pytest.raises(ConnectionError):
+                worker.submit("m", _windows(1)[0]).result(timeout=30.0)
+        assert time.monotonic() - t0 < 1.0
+
+
+def test_warmup_on_empty_fleet_raises_clear_error(forecaster):
+    """ISSUE 7 satellite: warmup before start() (or after the whole
+    fleet crashed) used to die with a bare `ValueError: max() arg is an
+    empty sequence`."""
+    mesh = _mesh(forecaster)                   # never started
+    with pytest.raises(RuntimeError, match="no live shards"):
+        mesh.warmup("m", lengths=(CFG.window,))
+
+
+def test_submit_normalizes_wire_dtype(forecaster):
+    """ISSUE 7 satellite: submit frames used to ship the caller's dtype
+    (float64 by default — 2x the wire bytes); now they normalize to the
+    serving dtype at pack time, with results bitwise-equal to the
+    in-process engine fed the same float64 window."""
+    from repro.serving import ServingEngine
+
+    win64 = _windows(4, seed=7).astype(np.float64)
+    with _mesh(forecaster, n_shards=1) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        worker = mesh.workers[0]
+        frames = []
+        orig_send = worker._conn.send
+
+        def spy(msg):
+            frames.append(msg)
+            orig_send(msg)
+
+        worker._conn.send = spy
+        try:
+            got = [mesh.predict("m", w, timeout=60.0) for w in win64]
+        finally:
+            worker._conn.send = orig_send
+        submits = [f for f in frames if f.get("op") == "submit"]
+        assert len(submits) == len(win64)
+        assert all(f["window"]["dtype"] == "<f4" for f in submits)
+
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    with ServingEngine(reg, BCFG) as local:
+        local.warmup("m", lengths=(CFG.window,))
+        ref = [local.predict("m", w, timeout=60.0) for w in win64]
+    assert got == ref                          # bitwise, not allclose
+
+
+def test_stats_race_free_under_live_traffic(forecaster):
+    """ISSUE 7 satellite: the worker's stats op used to read telemetry
+    reservoir buffers unlocked while the flush thread appends — hammer
+    stats against live traffic (a race manifests as corrupt frames or
+    worker errors, failing the RPC)."""
+    wins = _windows(8, seed=9)
+    with _mesh(forecaster, n_shards=1) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        stop = threading.Event()
+        errors = []
+
+        def traffic():
+            i = 0
+            while not stop.is_set():
+                try:
+                    mesh.predict("m", wins[i % len(wins)], timeout=60.0)
+                except Exception as e:  # noqa: BLE001
+                    errors.append(e)
+                i += 1
+
+        t = threading.Thread(target=traffic)
+        t.start()
+        try:
+            for _ in range(100):
+                st = mesh.shard_stats()[0]
+                assert all(isinstance(v, float)
+                           for v in st["latency_s"])
+                assert all(isinstance(v, float)
+                           for v in st["staleness_s"])
+        finally:
+            stop.set()
+            t.join()
+        assert not errors, errors[:3]
+
+
+def test_telemetry_raw_samples_locked():
+    """Unit half of the stats race fix: raw_samples() snapshots under
+    the telemetry lock while writers append concurrently."""
+    from repro.serving.telemetry import Telemetry
+
+    tel = Telemetry()
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            tel.record_requests([1e-3, 2e-3], version=1, staleness_s=0.1)
+            i += 1
+
+    threads = [threading.Thread(target=writer) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(500):
+            raw = tel.raw_samples()
+            assert set(raw) == {"latency_s", "staleness_s",
+                                "batch_sizes", "step_latency_s"}
+            for vals in raw.values():
+                assert all(isinstance(v, (int, float)) for v in vals)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+
+def test_remote_worker_joins_by_address(forecaster):
+    """ISSUE 7 tentpole (a): a shard worker started standalone
+    (serve_shard — what `python -m repro.launch.shard_worker` runs)
+    joins the mesh by address via the hello handshake, receives the
+    hosted weights, and serves traffic like any spawned shard."""
+    from repro.serving import serve_shard
+
+    bound = {}
+    ready = threading.Event()
+
+    def on_bound(port):
+        bound["port"] = port
+        ready.set()
+
+    srv = threading.Thread(target=serve_shard,
+                           args=("127.0.0.1", 0),
+                           kwargs={"on_bound": on_bound}, daemon=True)
+    srv.start()
+    assert ready.wait(10.0)
+
+    wins = _windows(12, seed=11)
+    with _mesh(forecaster, n_shards=1) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        sid = mesh.connect_shard(f"127.0.0.1:{bound['port']}")
+        assert sid == 1 and mesh.shard_ids == [0, 1]
+        assert mesh.workers[sid].addr == f"127.0.0.1:{bound['port']}"
+        # the joiner acked every hosted model before taking traffic
+        vec = mesh.version_vector("m")
+        assert vec[sid] == vec["primary"]
+        futs = [mesh.submit("m", w, client_id=f"rc{i}")
+                for i, w in enumerate(wins)]
+        got = [f.result(timeout=60.0) for f in futs]
+        y_ref, p_ref = forecaster.predict(wins)
+        np.testing.assert_allclose([y for y, _ in got], y_ref,
+                                   atol=1e-7, rtol=1e-6)
+        # both shards took some of it
+        snap = mesh.snapshot()
+        assert len(snap["requests_by_shard"]) == 2
+        assert all(n > 0 for n in snap["requests_by_shard"])
+    srv.join(10.0)
+    assert not srv.is_alive()
+
+
+def test_socket_steps_fuse_into_batched_decode(forecaster):
+    """ISSUE 7 acceptance + tentpole (c): N concurrent cross-process
+    streaming steps ride EngineShard.submit_step on the worker — the
+    dispatch count shows fused decode_many flushes, NOT N independent
+    dispatches (the old recv loop ran runner.step inline, one dispatch
+    per frame)."""
+    n = 8
+    cfg = BatcherConfig(max_batch=8, max_wait_ms=25.0, length_buckets=(8,))
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    with MultiProcessServingEngine(reg, cfg, n_shards=1) as mesh:
+        mesh.warmup("m", lengths=(CFG.window,))
+        worker = mesh.workers[0]
+        xs = _windows(1, seed=13)[0]           # [T, F]: one step per row
+        before = worker.stats()["telemetry"]
+        worker.count_start()
+        futs = [mesh.submit_step("m", f"fuse-{i}", xs[i % CFG.window])
+                for i in range(n)]
+        got = [f.result(timeout=60.0) for f in futs]
+        counts = worker.count_stop()
+        after = worker.stats()["telemetry"]
+        assert all(np.isfinite(y) for y, _ in got)
+        step_requests = after["step_requests"] - before["step_requests"]
+        step_batches = after["step_batches"] - before["step_batches"]
+        assert step_requests == n
+        # fused: strictly fewer flushes than steps, and exactly one
+        # decode_many dispatch per flush
+        assert 0 < step_batches < n
+        assert counts["decode_many"] == step_batches
+        assert counts["decode_step"] == 0      # nothing went per-session
