@@ -138,18 +138,21 @@ def main(n_requests: int = 512, smoke: bool = False) -> None:
                 f.result(timeout=60.0)
             wall = time.perf_counter() - t0
         flushes = eng.telemetry.step_batches
-    # the PR-5 contract, now *counted* rather than inferred from timing:
-    # every decode dispatch serves a full decode-width lane except at
-    # most one partial wave per flush (duplicate clients in a piled-up
-    # flush split into waves, each lane-padded), so total dispatches are
-    # bounded by ceil(steps/width) + one partial per flush — far below
-    # the one-dispatch-per-step this path replaced
-    n_steps = n_ticks * n_sessions
-    bound = -(-n_steps // fc.decode_width) + flushes
-    assert counts["decode_many"] <= bound, \
-        (counts.by_op(), flushes, bound)
+    # the PR-8 contract, *counted* rather than inferred from timing: the
+    # engine's runner keeps sessions in device-resident slots, so each
+    # flush wave is ONE fused slots_generate dispatch (duplicate clients
+    # in a piled-up flush split into extra waves), inserts happen only
+    # while sessions first become resident, and the host gather/scatter
+    # ops (decode_many / decode_step) never fire
+    assert counts["slots_generate"] >= flushes, \
+        (counts.by_op(), flushes)
+    assert counts["decode_many"] == 0 and counts["decode_step"] == 0, \
+        (counts.by_op(), flushes)
+    assert counts["slots_insert"] <= n_sessions, \
+        (counts.by_op(), n_sessions)
     row("obs/dispatch_counting", 1e6 * wall / (n_ticks * n_sessions),
-        f"decode_many={counts['decode_many']};flushes={flushes};"
+        f"slots_generate={counts['slots_generate']};flushes={flushes};"
+        f"inserts={counts['slots_insert']};"
         f"steps_per_s={n_ticks * n_sessions / wall:.0f}")
 
     # -- export path: render + event append, per call ----------------------

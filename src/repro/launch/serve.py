@@ -233,17 +233,23 @@ def main(argv: list[str] | None = None) -> None:
                     engine.step(args.model, f"client-{c}", ds.x[0][step])
                     n_steps += 1
             wall_s = time.time() - t0s
-            by_worker = {sid: st["cache"]["sessions"]
-                         for sid, st in engine.shard_stats().items()}
+            # resident = device-lane residents + spilled-to-cache; the
+            # slots figure shows how many sit in decode lanes right now
+            by_worker = {
+                sid: f"{len(st['clients'])}"
+                     f"({st['slots']['active']}/{st['slots']['lanes']}"
+                     f" in lanes)"
+                for sid, st in engine.shard_stats().items()}
             print(f"sessions (worker-resident): {n_steps} O(1) steps in "
                   f"{wall_s*1e3:.1f} ms "
                   f"({n_steps/max(wall_s,1e-9):.0f} steps/s); "
                   f"resident by worker {by_worker}")
         elif args.sessions and fc.feature_dim:
-            # engine-resident sessions over the batched decode path:
-            # each tick's steps flush as ONE fused dispatch per shard
-            # (gather carries -> fused lstm+alert step -> scatter back)
-            # instead of one jit dispatch per client
+            # engine-resident sessions over the slotted decode path:
+            # carries live in device decode lanes between ticks, so each
+            # tick's steps flush as ONE fused slots_generate dispatch
+            # per shard instead of one jit dispatch per client (or a
+            # per-tick host gather/scatter through the cache)
             streams = _traffic_datasets(min(args.clients, 8), fc.window,
                                         args.seed + 1)
             t0s = time.time()

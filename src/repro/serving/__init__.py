@@ -9,8 +9,9 @@ Layout (DESIGN: one concern per module):
                     per-bucket apply so the hot path never recompiles);
                     ``EngineShard`` is one worker, ``ServingEngine`` the
                     single-shard special case; ``submit_step`` queues
-                    streaming session steps, flushed as ONE fused decode
-                    dispatch per batch (the batched decode path);
+                    streaming session steps, flushed as ONE fused
+                    ``slots_generate`` dispatch over the device-resident
+                    decode lanes (``BatcherConfig.decode_slots``);
 - ``router.py``     consistent-hash (rendezvous) routing of client ids to
                     shards + ``ShardedServingEngine``, the mesh of
                     per-shard ``EngineShard`` workers behind the same
@@ -18,15 +19,19 @@ Layout (DESIGN: one concern per module):
 - ``swarm.py``      fleet swap propagation: primary registry + per-shard
                     replicas, pull-based weight transfer under a bounded
                     staleness skew (version vector per shard);
-- ``sessions.py``   per-client recurrent carry cache (LRU + TTL + byte
-                    accounting) making each streaming step O(1);
-                    ``RecurrentSessionRunner.step_many`` gathers N
-                    session carries into one fused decode dispatch and
-                    scatters them back (bitwise-equal to per-session
-                    steps); ``ShardedSessionCache`` shards by client id;
+- ``sessions.py``   the slot allocator + spill tier: sessions occupy
+                    device decode lanes (LRU lane eviction spills the
+                    carry to the host ``SessionCache``, bitwise-equal
+                    on reload; TTL expires lanes too);
+                    ``RecurrentSessionRunner.step_many`` is "ensure
+                    resident -> generate -> read requested rows"
+                    (``num_slots=0`` restores the gather/scatter path);
+                    ``ShardedSessionCache`` shards by client id;
 - ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
                     interface over the paper LSTM and every zoo arch,
-                    with the EVT tail alert head;
+                    with the EVT tail alert head; ``DecodeSlots`` +
+                    prefill/insert/generate, the device-resident decode
+                    lifecycle (carries donated in and out off-CPU);
 - ``registry.py``   multi-model hosting keyed by name, monotone model
                     versions, atomic weight swap, publish subscriptions,
                     checkpoint I/O;
@@ -45,12 +50,14 @@ Layout (DESIGN: one concern per module):
                     fast, and a local replacement respawned in place;
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
                     cache hit-rate, swap count, staleness at serve time,
-                    per-version request counts, cross-shard ``merge``.
+                    per-version request counts, slot insert/spill
+                    counters + lane-occupancy gauges, cross-shard
+                    ``merge``.
 """
 
 from repro.serving.engine import BatcherConfig, EngineShard, ServingEngine
-from repro.serving.forecaster import (LSTMForecaster, ZooForecaster,
-                                      build_lstm_forecaster,
+from repro.serving.forecaster import (DecodeSlots, LSTMForecaster,
+                                      ZooForecaster, build_lstm_forecaster,
                                       build_zoo_forecaster)
 from repro.serving.hotswap import WeightPublisher, stop_the_world_swap
 from repro.serving.registry import ModelRegistry, RegistryEntry
@@ -65,6 +72,7 @@ from repro.serving.transport import (MultiProcessServingEngine, RemoteShard,
 __all__ = [
     "BatcherConfig",
     "ConsistentRouter",
+    "DecodeSlots",
     "EngineShard",
     "LSTMForecaster",
     "ModelRegistry",

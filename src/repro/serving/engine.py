@@ -50,10 +50,18 @@ class BatcherConfig:
     # pad the batch dim to a power of two (<= max_batch) so compiled
     # shapes are {pow2 batches} x {length buckets}, not arbitrary
     pad_batch: bool = True
+    # device-resident decode lanes per model runner (rounded up to the
+    # forecaster's decode width): streaming sessions stay resident on
+    # device between steps and a flush is ONE fused generate dispatch.
+    # 0 disables slots and restores the cache gather/scatter decode path
+    decode_slots: int = 64
 
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.decode_slots < 0:
+            raise ValueError(
+                f"decode_slots must be >= 0, got {self.decode_slots}")
         if self.pad_batch and self.max_batch & (self.max_batch - 1):
             # a non-pow2 max_batch would make bucket_batch emit a non-pow2
             # clamped shape, breaking the "{pow2 batches} x {length
@@ -144,15 +152,17 @@ class EngineShard:
     def __init__(self, registry, config: BatcherConfig | None = None,
                  telemetry: Telemetry | None = None, shard_id: int = 0,
                  session_cache=None, tracer=None,
-                 donate_carries: bool = True):
+                 donate_carries: bool | None = None):
         self.registry = registry
         self.config = config or BatcherConfig()
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.shard_id = shard_id
-        # donate session carries to the fused step? Safe only while the
-        # flush worker is the sole toucher of the cache during serving;
-        # the transport worker passes False because its recv loop can
-        # ``extract``/``restore`` carries concurrently with flushes
+        # donate session carries to the fused step? None -> platform
+        # default (on off-CPU, off on CPU). Safe only while the flush
+        # worker is the sole toucher of the session state during
+        # serving; the transport worker passes False because its recv
+        # loop can ``extract``/``restore`` carries concurrently with
+        # flushes
         self.donate_carries = donate_carries
         # per-request trace spans (repro.obs.Tracer); None -> no tracing
         self.tracer = tracer
@@ -198,11 +208,48 @@ class EngineShard:
                     # picked up without rebuilding the runner. Carry
                     # donation (no-op on CPU) follows the shard knob —
                     # see __init__
+                    # slot-capable forecasters get decode_slots device
+                    # lanes; others (and decode_slots=0) keep the
+                    # gather/scatter path
+                    fc = self.registry.get(model_key)
+                    n_slots = self.config.decode_slots \
+                        if hasattr(fc, "init_slots") else 0
                     runner = RecurrentSessionRunner(
                         lambda: self.registry.get(model_key), cache=cache,
-                        donate_carries=self.donate_carries)
+                        donate_carries=self.donate_carries,
+                        num_slots=n_slots)
                     self._runners[model_key] = runner
         return runner
+
+    def spill_sessions(self, client_ids=None) -> int:
+        """Spill lane-resident session carries (all models; optionally
+        just ``client_ids``) into the shard's session cache, so
+        ``sessions.export`` sees every live session — the migration /
+        drain path. Returns the number of sessions spilled."""
+        with self._runners_lock:
+            runners = list(self._runners.values())
+        return sum(r.spill(client_ids) for r in runners)
+
+    def session_clients(self) -> list[str]:
+        """Every client with live session state on this shard: spill
+        tier (cache) plus lane-resident sessions."""
+        clients = set(self.sessions.clients())
+        with self._runners_lock:
+            runners = list(self._runners.values())
+        for r in runners:
+            clients.update(r.resident_clients())
+        return sorted(clients)
+
+    def slot_stats(self) -> dict:
+        """Aggregate decode-slot occupancy over this shard's runners."""
+        with self._runners_lock:
+            runners = list(self._runners.values())
+        agg = {"lanes": 0, "active": 0, "inserts": 0, "spills": 0,
+               "expiries": 0}
+        for r in runners:
+            for k, v in r.slot_stats().items():
+                agg[k] += v
+        return agg
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> "EngineShard":

@@ -51,6 +51,13 @@ _RNN_COMPILED: dict[RNNConfig, dict[str, Any]] = {}
 _RNN_COMPILED_LOCK = threading.Lock()
 
 
+def _donate_default() -> bool:
+    """Carry donation default: on wherever it actually buys anything —
+    i.e. off-CPU. XLA:CPU implements buffer donation as a warn + copy,
+    so on CPU the default stays off and steady state is unchanged."""
+    return jax.default_backend() != "cpu"
+
+
 def _fused_alert(score, head, xi, scale, active, gamma):
     """Jit-side twin of ``_alert_probability``. ``active`` is a TRACED
     flag (uncalibrated forecasters pass False with dummy xi/scale): one
@@ -178,6 +185,60 @@ def _build_rnn_fns(cfg: RNNConfig):
                 jax.tree_util.tree_map(lambda a: a[:, :b], cs),
                 jax.tree_util.tree_map(lambda a: a[:b], c2))
 
+    # -- device-resident decode slots ------------------------------
+    # The continuous-batching state: ``num_slots`` lanes of stacked
+    # carries that LIVE on device. ``insert`` writes one session's
+    # batch-1 carry into a lane (dynamic_update_slice with a TRACED
+    # lane index — one compiled program serves every lane, and the
+    # donating variant updates the slot state in place, no full-state
+    # copy). ``extract`` is its inverse (spill / migration read).
+    # ``generate`` steps ALL lanes in one dispatch: the slot state is
+    # walked in static chunks of the decode-lane width, each chunk
+    # running the SAME barrier-isolated step subgraph as
+    # decode_step/decode_many above — one compilation context for the
+    # step math, so a lane's output stays bitwise-equal to the
+    # per-session step/replay path.
+
+    def slots_insert(slot_carry, carry, lane):
+        # slot_carry [S, H]-stacked, carry [1, H]-stacked, lane int32
+        return jax.tree_util.tree_map(
+            lambda s, row: jax.lax.dynamic_update_slice(s, row, (lane, 0)),
+            slot_carry, carry)
+
+    def slots_extract(slot_carry, lane):
+        return jax.tree_util.tree_map(
+            lambda s: jax.lax.dynamic_slice(s, (lane, 0), (1, s.shape[1])),
+            slot_carry)
+
+    def slots_generate(params, x, slot_carry, step_mask, xi, scale,
+                       active, gamma, width):
+        # x [S, F], slot_carry [S, H]-stacked, S a static multiple of
+        # ``width``. step_mask [S] marks the lanes this flush actually
+        # steps: resident lanes that are NOT part of the flush pass
+        # their carry through unchanged (the select happens OUTSIDE
+        # the barrier-isolated step subgraphs, so it cannot perturb
+        # the stepped rows' bits).
+        S = x.shape[0]
+        ys, ps, cs = [], [], []
+        for lo in range(0, S, width):
+            xc = x[lo:lo + width]
+            cc = jax.tree_util.tree_map(lambda a: a[lo:lo + width],
+                                        slot_carry)
+            xc, cc = jax.lax.optimization_barrier((xc, cc))
+            y, p, c2 = step(params, xc, cc, xi, scale, active, gamma)
+            y, p, c2 = jax.lax.optimization_barrier((y, p, c2))
+            ys.append(y)
+            ps.append(p)
+            cs.append(c2)
+        y = jnp.concatenate(ys)
+        p = jnp.concatenate(ps)
+        stepped = jax.tree_util.tree_map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *cs)
+        m = step_mask[:, None]
+        new_carry = jax.tree_util.tree_map(
+            lambda old, new: jnp.where(m, new, old), slot_carry, stepped)
+        return y, p, new_carry
+
     # gamma is static: gev_log_cdf branches on it in Python, and it
     # is a per-deployment constant (one compile per distinct value)
     return {
@@ -200,6 +261,18 @@ def _build_rnn_fns(cfg: RNNConfig):
                                       donate_argnums=(2,)),
         "decode_replay": jax.jit(decode_replay,
                                  static_argnames=("gamma", "width")),
+        "slots_insert": jax.jit(slots_insert),
+        # in-place lane write: the slot state is donated back to
+        # itself, so an insert never copies the other lanes
+        "slots_insert_donate": jax.jit(slots_insert, donate_argnums=(0,)),
+        "slots_extract": jax.jit(slots_extract),
+        "slots_generate": jax.jit(slots_generate,
+                                  static_argnames=("gamma", "width")),
+        # the steady-state program: slot carries donated in and out —
+        # one dispatch per flush, zero allocation, zero host copies
+        "slots_generate_donate": jax.jit(slots_generate,
+                                         static_argnames=("gamma", "width"),
+                                         donate_argnums=(2,)),
     }
 
 
@@ -221,6 +294,26 @@ def _alert_probability(score, tail: dict | None, gamma: float, head=None):
     if head is not None:
         p_evt = 1.0 - (1.0 - jnp.asarray(head, jnp.float32)) * (1.0 - p_evt)
     return jnp.clip(p_evt, 0.0, 1.0)
+
+
+@dataclasses.dataclass
+class DecodeSlots:
+    """Device-resident decode slot state: ``num_slots`` lanes of stacked
+    (h, c) carries held as device arrays, plus a host-side active-lane
+    mask. Sessions are written into lanes with ``insert`` (prefill →
+    insert), stepped in place by ``generate`` (one fused dispatch for
+    ALL lanes), and read out only on spill/migration (``extract``).
+    ``num_slots`` is always a multiple of the owning forecaster's
+    ``decode_width`` — ``init_slots`` rounds up — so generate can chunk
+    the state at the lane width with no partial chunk."""
+
+    carry: PyTree                # [num_slots, H]-stacked per layer
+    num_slots: int
+    active: Any                  # np.ndarray bool [num_slots], host-side
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
 
 
 @dataclasses.dataclass
@@ -339,7 +432,7 @@ class LSTMForecaster:
                                                    width=W)
         return np.asarray(y), np.asarray(p), carry
 
-    def step_many(self, xs, carries, donate: bool = False):
+    def step_many(self, xs, carries, donate: bool | None = None):
         """Batched streaming step for N independent sessions: xs [N, F],
         ``carries`` a list of N batch-1 carries (one per session, as the
         session cache holds them). Returns (forecast [N], p_extreme [N],
@@ -349,15 +442,18 @@ class LSTMForecaster:
 
         ``donate=True`` additionally donates the input carry buffers to
         the lane (they are consumed — no copy into the stacked batch).
-        Only pass it when the caller exclusively owns every carry: the
+        The default (``None``) resolves to True off-CPU and False on CPU
+        (XLA:CPU implements donation as a warn + copy). Donation is only
+        safe when the caller exclusively owns every carry: the
         engine-internal runner does (one worker thread, cache exported
         only after drain); carries that a concurrent reader could still
-        hand out (live-membership migration) must NOT be donated. On CPU
-        donation is skipped (XLA:CPU implements it as a warn + copy)."""
+        hand out (live-membership migration) must pass ``donate=False``
+        explicitly — the transport workers do."""
         xs = np.asarray(xs, np.float32)
         N = len(carries)
         W = self.decode_width
-        donate = donate and jax.default_backend() != "cpu"
+        donate = _donate_default() if donate is None \
+            else (donate and jax.default_backend() != "cpu")
         fn = self._fns["decode_many_donate" if donate else "decode_many"]
         ys, ps, out = [], [], []
         for lo in range(0, N, W):
@@ -415,6 +511,107 @@ class LSTMForecaster:
                 self.params, window, carry, *self._tail_args(),
                 gamma=float(self.gamma), width=W)
         return np.asarray(ys[-1]), np.asarray(ps[-1]), carry
+
+    # -- device-resident decode slots (prefill / insert / generate) --------
+    def init_slots(self, num_slots: int) -> DecodeSlots:
+        """Allocate the device-resident slot state: ``num_slots`` lanes
+        of zero carries (rounded up to a ``decode_width`` multiple) and
+        an all-free active mask."""
+        if num_slots < 1:
+            raise ValueError(f"num_slots must be >= 1, got {num_slots}")
+        W = self.decode_width
+        S = -(-int(num_slots) // W) * W
+        return DecodeSlots(carry=init_rnn_carry(self.params, S),
+                           num_slots=S,
+                           active=np.zeros((S,), bool))
+
+    def prefill(self, window, carry=None):
+        """The prefill phase of the slot lifecycle: replay a session's
+        window into a batch-1 carry ready for ``insert``. Exactly
+        ``replay`` (one ``decode_replay`` dispatch at the lane width),
+        named for the prefill/insert/generate API — so a prefilled lane
+        is bitwise-equal to the step-by-step session it replaces."""
+        return self.replay(window, carry)
+
+    def insert(self, slots: DecodeSlots, lane: int, carry,
+               donate: bool | None = None) -> DecodeSlots:
+        """Write a batch-1 ``carry`` into ``lane`` — a single
+        ``dynamic_update_slice`` on device, no full-state host round
+        trip. With donation (default off-CPU) the slot state is updated
+        in place; either way ``slots.carry`` is rebound to the result,
+        so callers must treat the previous value as consumed."""
+        donate = _donate_default() if donate is None \
+            else (donate and jax.default_backend() != "cpu")
+        dispatch.record("slots_insert", batch=1, hidden=self.cfg.hidden,
+                        kernel_op="lstm_cell")
+        fn = self._fns["slots_insert_donate" if donate else "slots_insert"]
+        with jax.profiler.TraceAnnotation("repro.slots_insert"):
+            slots.carry = fn(slots.carry, carry, jnp.int32(lane))
+        slots.active[lane] = True
+        return slots
+
+    def extract(self, slots: DecodeSlots, lane: int):
+        """Read ``lane``'s batch-1 carry out of the slot state (spill /
+        migration path) — a single ``dynamic_slice``; the lane content
+        is left intact and the extracted carry is bitwise-identical to
+        what ``insert`` + ``generate`` steps produced."""
+        dispatch.record("slots_extract", batch=1, hidden=self.cfg.hidden,
+                        kernel_op="lstm_cell")
+        with jax.profiler.TraceAnnotation("repro.slots_extract"):
+            return self._fns["slots_extract"](slots.carry, jnp.int32(lane))
+
+    def release(self, slots: DecodeSlots, lane: int) -> None:
+        """Mark ``lane`` free. Its stale carry stays on device and is
+        overwritten by the next ``insert``."""
+        slots.active[lane] = False
+
+    def generate(self, slots: DecodeSlots, x, lanes=None,
+                 donate: bool | None = None):
+        """One fused dispatch stepping the slot state: x [num_slots, F]
+        (rows for lanes not being stepped are ignored). ``lanes`` lists
+        the lanes this call steps (default: every active lane); all
+        other lanes pass their carry through unchanged. Returns
+        (forecast [num_slots], p_extreme [num_slots], slots) — read only
+        the rows for ``lanes``; other rows are garbage. With donation
+        (default off-CPU) the slot carries are donated in and out, so a
+        steady-state generate allocates nothing and copies nothing
+        host-side."""
+        donate = _donate_default() if donate is None \
+            else (donate and jax.default_backend() != "cpu")
+        x = np.asarray(x, np.float32)
+        S = slots.num_slots
+        if x.shape != (S, self.feature_dim):
+            raise ValueError(f"generate expects x [{S}, "
+                             f"{self.feature_dim}], got {x.shape}")
+        mask = np.zeros((S,), bool)
+        if lanes is None:
+            mask[:] = slots.active
+        else:
+            mask[np.asarray(lanes, np.int64)] = True
+        dispatch.record("slots_generate", batch=S, hidden=self.cfg.hidden,
+                        kernel_op="lstm_cell")
+        fn = self._fns["slots_generate_donate" if donate
+                       else "slots_generate"]
+        with jax.profiler.TraceAnnotation("repro.slots_generate"):
+            y, p, carry = fn(self.params, x, slots.carry, mask,
+                             *self._tail_args(), gamma=float(self.gamma),
+                             width=self.decode_width)
+        slots.carry = carry
+        return np.asarray(y), np.asarray(p), slots
+
+    def warm_slots(self, num_slots: int) -> int:
+        """Compile the slot lifecycle programs (insert/extract/generate,
+        plain and donating variants) off the serving path, against a
+        throwaway slot state. Returns #programs compiled."""
+        slots = self.init_slots(num_slots)
+        F = self.feature_dim
+        x = np.zeros((slots.num_slots, F), np.float32)
+        self.insert(slots, 0, self.init_carry(1), donate=False)
+        self.insert(slots, 0, self.init_carry(1), donate=True)
+        self.extract(slots, 0)
+        self.generate(slots, x, lanes=[0], donate=False)
+        self.generate(slots, x, lanes=[0], donate=True)
+        return 5
 
     def warm_decode(self) -> int:
         """Compile the decode-lane programs (single step, batched flush

@@ -279,9 +279,12 @@ class ShardedServingEngine:
                 cache.remove_shard(sid)  # migrates its clients' carries
             # engine-internal streaming sessions re-home too, carries
             # intact — safe to export here: the worker has drained, so
-            # no step flush is in flight on them. (A shard JOINING the
+            # no step flush is in flight on them. Lane-resident sessions
+            # spill to the cache first, so the export sees the full
+            # session set, decode slots included. (A shard JOINING the
             # mesh takes no carries — its clients miss and rebuild from
             # history, standard consistent-hash cache semantics.)
+            shard.spill_sessions()
             if shard._session_cache is not None:
                 for cid, carry, nbytes, version in shard.sessions.export():
                     target = self.shards.get(self.router.shard_for(cid))

@@ -3,17 +3,23 @@ requests so a streaming step is O(1) instead of O(window).
 
 ``SessionCache`` is model-agnostic (it stores opaque carries with byte
 accounting); ``RecurrentSessionRunner`` binds it to a forecaster that
-exposes ``init_carry`` / ``step`` / ``replay``. ``step_many`` is the
-batched decode path: N sessions' carries are gathered from the cache,
-advanced in one fused dispatch per decode-lane chunk (forecasters
-exposing ``step_many``), and scattered back — bitwise-equal to stepping
-each session alone. Eviction is LRU with an
-optional TTL and byte budget. A cache miss replays the client's window
-prefix through the same compiled step function the hot path uses, so —
-provided the client supplies its history on a miss — eviction never
-changes the numbers a client sees, only the latency. Misses without
-history start a fresh session from zero state (or raise, with
-``on_miss="error"``).
+exposes ``init_carry`` / ``step`` / ``replay``. For forecasters that
+expose the device-resident slot lifecycle (``init_slots`` /
+``prefill`` / ``insert`` / ``generate``), the runner IS a slot
+allocator: sessions live in fixed device lanes between steps, and a
+batched ``step_many`` is "ensure resident → one fused generate dispatch
+→ read only the requested rows" — the cache is demoted to a *spill
+tier* that holds carries only for sessions LRU-evicted off the lanes
+(or spilled for migration), bitwise-identical on reload. Forecasters
+without slot support keep the PR-5 gather/scatter path: carries
+gathered from the cache, advanced in one fused dispatch per decode-lane
+chunk, and scattered back. Both are bitwise-equal to stepping each
+session alone. Eviction is LRU with an optional TTL and byte budget. A
+cache miss replays the client's window prefix through the same compiled
+step function the hot path uses, so — provided the client supplies its
+history on a miss — eviction never changes the numbers a client sees,
+only the latency. Misses without history start a fresh session from
+zero state (or raise, with ``on_miss="error"``).
 
 ``ShardedSessionCache`` splits the fleet budget over per-shard
 ``SessionCache`` instances keyed by a consistent hash of the client id
@@ -456,9 +462,13 @@ class ShardedSessionCache:
         }
 
 
+DEFAULT_NUM_SLOTS = 64               # lanes per runner when unspecified
+
+
 class RecurrentSessionRunner:
     """Streaming serving for a recurrent forecaster: each client is a
-    session whose carry lives in the cache between requests.
+    session whose state lives in a device-resident decode lane between
+    requests (slot forecasters) or in the session cache (others).
 
     ``forecaster`` may be the forecaster itself or a zero-arg provider
     returning the *current* forecaster (e.g. ``lambda: registry.get(key)``)
@@ -468,23 +478,38 @@ class RecurrentSessionRunner:
     replaying ``history`` through the new weights when given, otherwise by
     carrying the live hidden state across (valid shapes: swapped versions
     share the config) — instead of dropping the session.
+
+    With slots (``num_slots`` > 0, the default when the forecaster
+    supports it), the runner is the slot ALLOCATOR: an LRU over lanes
+    decides which sessions stay device-resident; a session that loses
+    its lane spills its carry to the cache (the spill tier) and reloads
+    bitwise-identically on its next step; lanes idle past the cache's
+    TTL are expired like cache entries. ``num_slots=0`` disables slots
+    and keeps the gather/scatter path.
     """
 
     def __init__(self, forecaster, cache: SessionCache | None = None,
-                 on_miss: str = "zeros", donate_carries: bool = False):
+                 on_miss: str = "zeros",
+                 donate_carries: bool | None = None,
+                 num_slots: int | None = None):
         if callable(forecaster) and not hasattr(forecaster, "step"):
             self._provider = forecaster
         else:
             self._provider = None
             self.forecaster = forecaster
-        # donate_carries: batched steps hand the cached carry buffers to
-        # the fused program for in-place consumption (no copy into the
-        # stacked batch; no-op on CPU). ONLY safe when this runner's
-        # cache is touched by a single thread during serving — the
-        # engine-internal runner qualifies (one worker flushes, exports
-        # happen after drain); a cache shared with concurrent readers
-        # (live-membership migration) must keep the default.
-        self.donate_carries = donate_carries
+        # donate_carries: the fused programs consume carry buffers in
+        # place (slot state for generate/insert, cached carries for the
+        # gather/scatter path). None resolves to the platform default:
+        # ON off-CPU, off on CPU (where XLA donation is a warn + copy).
+        # ONLY safe when this runner's state is touched by a single
+        # thread during serving — the engine-internal runner qualifies
+        # (one worker flushes, exports happen after drain); a cache
+        # shared with concurrent readers (live-membership migration)
+        # must pass False — the transport workers do.
+        if donate_carries is None:
+            from repro.serving.forecaster import _donate_default
+            donate_carries = _donate_default()
+        self.donate_carries = bool(donate_carries)
         self.last_step_slots = 0     # lane slots of the last step_many
         fc = self._resolve()
         if on_miss not in ("zeros", "error"):
@@ -494,6 +519,32 @@ class RecurrentSessionRunner:
         self._nbytes = fc.carry_nbytes(1)
         self.reprimes = 0            # carries replayed onto new weights
         self.carried_across_swap = 0  # carries reused without history
+        # -- device-resident decode slots --------------------------------
+        slot_capable = hasattr(fc, "init_slots") \
+            and getattr(fc, "feature_dim", 0)
+        if num_slots is None:
+            # a ShardedSessionCache's contract is that carries live in
+            # per-shard caches and FOLLOW mesh membership — runner-local
+            # lanes would hide sessions from that migration, so slots
+            # default off over sharded caches (pass num_slots explicitly
+            # to opt in; you then own spilling around membership ops)
+            sharded = isinstance(self.cache, ShardedSessionCache)
+            num_slots = DEFAULT_NUM_SLOTS \
+                if (slot_capable and not sharded) else 0
+        if num_slots and not slot_capable:
+            raise TypeError(
+                f"forecaster {type(fc).__name__} does not support "
+                f"decode slots (missing init_slots); pass num_slots=0")
+        self._slots = fc.init_slots(num_slots) if num_slots else None
+        self.num_slots = self._slots.num_slots if self._slots else 0
+        self._slots_lock = threading.Lock()
+        self._lanes: OrderedDict[str, int] = OrderedDict()  # cid -> lane
+        self._free = list(reversed(range(self.num_slots)))  # pop() -> 0..
+        self._lane_stamp: dict[str, int] = {}
+        self._lane_last_used: dict[str, float] = {}
+        self.slot_inserts = 0        # sessions written into a lane
+        self.slot_spills = 0         # lane carries spilled to the cache
+        self.slot_expiries = 0       # lanes freed by TTL (state dropped)
         window = getattr(fc, "window", None)
         if window and getattr(fc, "feature_dim", 0):
             import numpy as np
@@ -502,6 +553,10 @@ class RecurrentSessionRunner:
             # serving path — otherwise the first cache miss / swap
             # re-prime pays the jit compile at serve time
             fc.replay(np.zeros((1, window, fc.feature_dim), np.float32))
+            if self._slots is not None:
+                # same deal for the slot lifecycle programs: the first
+                # flush must not pay the generate compile at serve time
+                fc.warm_slots(self.num_slots)
 
     def _resolve(self):
         fc = self._provider() if self._provider is not None \
@@ -574,6 +629,10 @@ class RecurrentSessionRunner:
         Returns (forecast, p_extreme) scalars."""
         import numpy as np
 
+        if self._slots is not None:
+            # slot runners have no out-of-lane step path: a lane-resident
+            # session stepped outside its lane would fork its state
+            return self.step_many([(client_id, x_t, history)])[0]
         fc = self._resolve()
         version = getattr(fc, "version", 0)
         x_t = np.asarray(x_t, np.float32)
@@ -619,6 +678,26 @@ class RecurrentSessionRunner:
             if wave == len(waves):
                 waves.append([])
             waves[wave].append(idx)
+        if self._slots is not None:
+            # slot path: every wave is one fused generate over the full
+            # slot state (chunked only when a wave holds more distinct
+            # clients than there are lanes)
+            S = self.num_slots
+            n_chunks = 0
+            with jax.profiler.TraceAnnotation("repro.session_step_many"):
+                with self._slots_lock:
+                    self._expire_lanes_locked(fc)
+                    for wave in waves:
+                        for lo in range(0, len(wave), S):
+                            n_chunks += 1
+                            self._generate_chunk_locked(
+                                fc, items, wave[lo:lo + S], version,
+                                results)
+                    tel = self.cache.telemetry
+                    if tel is not None:
+                        tel.record_slots(active=len(self._lanes), lanes=S)
+            self.last_step_slots = n_chunks * S
+            return results
         # decode-lane slots this call dispatches (each wave pads to the
         # lane width, chunking beyond it) — the engine reads this for
         # its occupancy telemetry, so the accounting lives with the
@@ -630,6 +709,176 @@ class RecurrentSessionRunner:
         with jax.profiler.TraceAnnotation("repro.session_step_many"):
             self._run_waves(fc, items, waves, version, results)
         return results
+
+    # -- slot allocator ----------------------------------------------------
+    def _expire_lanes_locked(self, fc) -> None:
+        """TTL sweep over the lanes, mirroring the cache's expiry: a
+        lane idle past the cache's TTL is freed and its state DROPPED
+        (not spilled) — exactly what the cache would have done to the
+        entry. The client re-primes from history on its next step."""
+        ttl = self.cache.ttl_s
+        if ttl is None or not self._lanes:
+            return
+        cutoff = self.cache._clock() - ttl
+        stale = [cid for cid, _lane in self._lanes.items()
+                 if self._lane_last_used.get(cid, cutoff) < cutoff]
+        for cid in stale:
+            lane = self._lanes.pop(cid)
+            self._lane_stamp.pop(cid, None)
+            self._lane_last_used.pop(cid, None)
+            fc.release(self._slots, lane)
+            self._free.append(lane)
+            self.slot_expiries += 1
+        if stale and self.cache.telemetry is not None:
+            self.cache.telemetry.record_eviction(len(stale))
+
+    def _alloc_lane_locked(self, fc) -> int:
+        """A free lane, else the LRU lane — its session spills its
+        carry to the cache (the spill tier) and reloads bitwise-equal
+        on its next step."""
+        if self._free:
+            return self._free.pop()
+        victim, lane = next(iter(self._lanes.items()))
+        self._lanes.pop(victim)
+        carry = fc.extract(self._slots, lane)
+        self.cache.put(victim, carry, self._nbytes,
+                       version=self._lane_stamp.pop(victim))
+        self._lane_last_used.pop(victim, None)
+        self.slot_spills += 1
+        if self.cache.telemetry is not None:
+            self.cache.telemetry.record_slots(spills=1)
+        return lane
+
+    def _ensure_resident_locked(self, fc, cid, hist, version) -> int:
+        """The 'ensure resident' half of a slot step: lane hit refreshes
+        LRU (re-priming in place if the weights hot-swapped under the
+        lane); otherwise the carry is resolved through the spill tier /
+        history / zeros path and inserted into an allocated lane."""
+        now = self.cache._clock()
+        lane = self._lanes.get(cid)
+        if lane is not None:
+            self._lanes.move_to_end(cid)
+            self._lane_last_used[cid] = now
+            if self._lane_stamp[cid] != version:
+                if hist is not None:
+                    _, _, carry = fc.prefill(hist[None])
+                    self._guarded_insert(fc, lane, carry)
+                    self._lane_stamp[cid] = version
+                    self.reprimes += 1
+                    if self.cache.telemetry is not None:
+                        self.cache.telemetry.record_reprime()
+                else:
+                    # same config, new weights: keep the OLD stamp so a
+                    # later step that does bring history still re-primes
+                    self.carried_across_swap += 1
+            if self.cache.telemetry is not None:
+                self.cache.telemetry.record_cache(True)
+            return lane
+        # lane miss: spill tier -> history prefill -> zeros/error, with
+        # the same version semantics as the cache path
+        carry, stamp = self._resolve_carry(fc, cid, hist, version)
+        self.cache.drop(cid)          # the lane owns the state now
+        lane = self._alloc_lane_locked(fc)
+        self._guarded_insert(fc, lane, carry)
+        self._lanes[cid] = lane
+        self._lane_stamp[cid] = stamp
+        self._lane_last_used[cid] = now
+        self.slot_inserts += 1
+        if self.cache.telemetry is not None:
+            self.cache.telemetry.record_slots(inserts=1)
+        return lane
+
+    def _guarded_insert(self, fc, lane, carry) -> None:
+        try:
+            fc.insert(self._slots, lane, carry,
+                      donate=self.donate_carries)
+        except Exception:
+            if self.donate_carries:
+                self._reset_slots_locked(fc)
+            raise
+
+    def _reset_slots_locked(self, fc) -> None:
+        """A donating program failed mid-flight: the slot state may be
+        consumed. Rebuild it empty — every resident session is dropped
+        and re-primes from history (or zeros) on its next step."""
+        self._slots = fc.init_slots(self.num_slots)
+        self._lanes.clear()
+        self._lane_stamp.clear()
+        self._lane_last_used.clear()
+        self._free = list(reversed(range(self.num_slots)))
+
+    def _generate_chunk_locked(self, fc, items, chunk, version,
+                               results) -> None:
+        import numpy as np
+
+        xs = np.zeros((self.num_slots, fc.feature_dim), np.float32)
+        lanes = []
+        for idx in chunk:
+            cid, x_t, history = items[idx]
+            x_t = np.asarray(x_t, np.float32)
+            hist = self._clamp_history(fc, history)
+            lane = self._ensure_resident_locked(fc, cid, hist, version)
+            xs[lane] = x_t[0] if x_t.ndim == 2 else x_t
+            lanes.append(lane)
+        try:
+            ys, ps, _ = fc.generate(self._slots, xs, lanes=lanes,
+                                    donate=self.donate_carries)
+        except Exception:
+            if self.donate_carries:
+                # the donating generate may have consumed the slot
+                # state before failing — poisoned lanes would corrupt
+                # every resident session, so reset the whole plane
+                self._reset_slots_locked(fc)
+            raise
+        for row, idx in enumerate(chunk):
+            results[idx] = (float(ys[lanes[row]]), float(ps[lanes[row]]))
+
+    def spill(self, client_ids=None) -> int:
+        """Spill lane-resident sessions (all, or just ``client_ids``)
+        into the cache — the migration/export path: after a spill the
+        cache's ``export`` sees every session, carries bitwise-identical
+        to the lane state. Returns the number of sessions spilled."""
+        if self._slots is None:
+            return 0
+        fc = self._resolve()
+        if isinstance(client_ids, str):
+            client_ids = [client_ids]
+        with self._slots_lock:
+            if client_ids is None:
+                ids = list(self._lanes)
+            else:
+                ids = [c for c in client_ids if c in self._lanes]
+            for cid in ids:
+                lane = self._lanes.pop(cid)
+                carry = fc.extract(self._slots, lane)
+                self.cache.put(cid, carry, self._nbytes,
+                               version=self._lane_stamp.pop(cid))
+                self._lane_last_used.pop(cid, None)
+                fc.release(self._slots, lane)
+                self._free.append(lane)
+                self.slot_spills += 1
+            tel = self.cache.telemetry
+            if ids and tel is not None:
+                tel.record_slots(spills=len(ids),
+                                 active=len(self._lanes),
+                                 lanes=self.num_slots)
+            return len(ids)
+
+    def spill_all(self) -> int:
+        return self.spill(None)
+
+    def resident_clients(self) -> list[str]:
+        """Client ids currently occupying a device lane."""
+        with self._slots_lock:
+            return list(self._lanes)
+
+    def slot_stats(self) -> dict:
+        with self._slots_lock:
+            return {"lanes": self.num_slots,
+                    "active": len(self._lanes),
+                    "inserts": self.slot_inserts,
+                    "spills": self.slot_spills,
+                    "expiries": self.slot_expiries}
 
     def _run_waves(self, fc, items, waves, version, results) -> None:
         import numpy as np

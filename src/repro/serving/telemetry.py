@@ -91,6 +91,12 @@ class Telemetry:
         self.step_batches = 0
         self.step_real_slots = 0    # sessions stepped
         self.step_padded_slots = 0  # decode-lane slots dispatched
+        # device-resident decode slots: cumulative insert/spill traffic
+        # (like the cache counters) plus occupancy gauges (last seen)
+        self.slot_inserts = 0       # sessions written into a device lane
+        self.slot_spills = 0        # lane carries spilled to the cache
+        self.slot_active = 0        # gauge: lanes currently occupied
+        self.slot_lanes = 0         # gauge: lanes configured
         self._latency = _Reservoir()
         self._staleness = _Reservoir()   # model age at serve time (s)
         self._batch_sizes = _Reservoir()
@@ -181,6 +187,21 @@ class Telemetry:
         with self._lock:
             self.cache_evictions += n
 
+    def record_slots(self, inserts: int = 0, spills: int = 0,
+                     active: int | None = None,
+                     lanes: int | None = None) -> None:
+        """Device-resident decode-slot traffic: ``inserts``/``spills``
+        accumulate (steady state adds zero of each — that is the point);
+        ``active``/``lanes`` are occupancy gauges overwritten with the
+        latest observation."""
+        with self._lock:
+            self.slot_inserts += inserts
+            self.slot_spills += spills
+            if active is not None:
+                self.slot_active = active
+            if lanes is not None:
+                self.slot_lanes = lanes
+
     # -- reading -----------------------------------------------------------
     def latency_percentile_ms(self, p: float) -> float:
         with self._lock:
@@ -250,6 +271,12 @@ class Telemetry:
                                    if self.step_padded_slots else 0.0),
                 "step_p50_ms": step50 * 1e3,
                 "step_p95_ms": step95 * 1e3,
+                "slot_inserts": self.slot_inserts,
+                "slot_spills": self.slot_spills,
+                "slot_active": self.slot_active,
+                "slot_lanes": self.slot_lanes,
+                "slot_occupancy": (self.slot_active / self.slot_lanes
+                                   if self.slot_lanes else 0.0),
             }
 
     # -- sampled time series ----------------------------------------------
@@ -337,7 +364,8 @@ class Telemetry:
                   "cache_evictions": 0, "swaps": 0, "reprimes": 0,
                   "untracked_client_requests": 0, "step_requests": 0,
                   "step_batches": 0, "step_real_slots": 0,
-                  "step_padded_slots": 0}
+                  "step_padded_slots": 0, "slot_inserts": 0,
+                  "slot_spills": 0, "slot_active": 0, "slot_lanes": 0}
         by_version: dict[int, int] = {}
         by_client: dict[str, int] = {}
         by_shard: list[int] = []
@@ -400,6 +428,13 @@ class Telemetry:
                                if totals["step_padded_slots"] else 0.0),
             "step_p50_ms": step50 * 1e3,
             "step_p95_ms": step95 * 1e3,
+            "slot_inserts": totals["slot_inserts"],
+            "slot_spills": totals["slot_spills"],
+            # gauges sum across shards: total occupied / configured lanes
+            "slot_active": totals["slot_active"],
+            "slot_lanes": totals["slot_lanes"],
+            "slot_occupancy": (totals["slot_active"] / totals["slot_lanes"]
+                               if totals["slot_lanes"] else 0.0),
         }
 
     @staticmethod
@@ -421,4 +456,8 @@ class Telemetry:
                      f"({snap['steps_per_s']:.0f} steps/s, mean batch "
                      f"{snap['mean_step_batch']:.1f}, step p95 "
                      f"{snap['step_p95_ms']:.2f} ms)")
+        if snap.get("slot_lanes"):
+            line += (f" | slots {snap['slot_active']}/{snap['slot_lanes']} "
+                     f"resident ({snap['slot_inserts']} inserts, "
+                     f"{snap['slot_spills']} spills)")
         return line

@@ -279,7 +279,8 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
                         max_wait_ms=cfg.get("max_wait_ms", 2.0),
                         length_buckets=tuple(cfg.get("length_buckets")
                                              or ()),
-                        pad_batch=cfg.get("pad_batch", True)),
+                        pad_batch=cfg.get("pad_batch", True),
+                        decode_slots=cfg.get("decode_slots", 64)),
                     int(msg.get("max_sessions", 4096)))
                 state.shard.start()
                 conn.send({"op": "ok", "id": rid, "pid": os.getpid(),
@@ -358,8 +359,11 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
             elif op == "extract":
                 # serialize against queued steps first: a step enqueued
                 # before the membership flip must consume its carry
-                # before we hand that carry to the new owner
+                # before we hand that carry to the new owner. Requested
+                # sessions resident in a decode lane spill to the cache
+                # so the export sees them (bitwise-identical carries)
                 shard.quiesce(timeout=30.0)
+                shard.spill_sessions(msg.get("clients"))
                 out = [{"client": cid, "carry": _pack_carry(carry),
                         "nbytes": nbytes, "version": version}
                        for cid, carry, nbytes, version
@@ -374,7 +378,11 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
                     "staleness_s": samples["staleness_s"],
                     "step_latency_s": samples["step_latency_s"],
                     "cache": cache.stats(),
-                    "clients": cache.clients(),
+                    # cache + lane-resident: the supervisor's crash
+                    # repair extracts by this list, so sessions living
+                    # in decode lanes must be visible here
+                    "clients": shard.session_clients(),
+                    "slots": shard.slot_stats(),
                     "versions": {k: registry.version(k)
                                  for k in registry.keys()}})
             elif op == "reset":
@@ -406,6 +414,8 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
                 draining = True
                 shard.stop()         # drains the queue: every queued
                 # request's result frame is sent before this returns
+                shard.spill_sessions()   # lanes -> spill tier, so the
+                # full-cache export below carries every live session
                 out = [{"client": cid, "carry": _pack_carry(carry),
                         "nbytes": nbytes, "version": version}
                        for cid, carry, nbytes, version in cache.export()]
@@ -631,7 +641,8 @@ class RemoteShard:
             "config": {"max_batch": config.max_batch,
                        "max_wait_ms": config.max_wait_ms,
                        "length_buckets": list(config.length_buckets),
-                       "pad_batch": config.pad_batch},
+                       "pad_batch": config.pad_batch,
+                       "decode_slots": config.decode_slots},
             "max_sessions": max_sessions}, timeout=300.0, slow=True)
         self.pid = reply.get("pid", self.pid)
         return reply

@@ -4,6 +4,7 @@ boundary), dispatch accounting ("one fused dispatch per flush" asserted,
 not trusted), telemetry time-series/history, and the metrics export
 surface (Prometheus text, JSONL events, the stdlib HTTP endpoint)."""
 
+import dataclasses
 import json
 import time
 import urllib.request
@@ -211,24 +212,49 @@ def test_forecaster_dispatch_counts(forecaster):
 
 
 def test_engine_step_flush_is_one_fused_dispatch(registry):
-    """Tier-1 guard on the batched decode path: a full step flush of
-    decode_width distinct clients costs exactly ONE fused dispatch."""
-    fc = registry.get("m")
+    """Tier-1 guard on the slots decode path (ISSUE 8): once sessions
+    are lane-resident, a step flush is exactly ONE fused
+    ``slots_generate`` dispatch — ZERO host gather/scatter ops
+    (``decode_many``), zero per-session steps, zero inserts."""
+    clients = [f"client-{i}" for i in range(BCFG.max_batch)]
+    x = np.zeros(CFG.input_dim, np.float32)
     with ServingEngine(registry, BCFG) as eng:
         eng.warmup("m", lengths=(CFG.window,))
+        # round 1: sessions enter lanes (one slots_insert each)
+        for f in [eng.submit_step("m", c, x) for c in clients]:
+            f.result(timeout=10.0)
+        flushes_before = eng.telemetry.step_batches
+        # round 2 = steady state: everything is already resident
         with dispatch.counting() as counts:
-            futs = [eng.submit_step("m", f"client-{i}",
+            futs = [eng.submit_step("m", c, x) for c in clients]
+            for f in futs:
+                f.result(timeout=10.0)
+        flushes = eng.telemetry.step_batches - flushes_before
+    assert flushes >= 1
+    assert counts["slots_generate"] == flushes
+    assert counts["decode_many"] == 0       # no host gather/scatter
+    assert counts["decode_step"] == 0       # nothing went per-session
+    assert counts["slots_insert"] == 0      # no lane churn at steady state
+    assert counts["decode_replay"] == 0     # no cache miss hit replay
+    assert counts.total() == flushes        # and nothing else at all
+
+
+def test_engine_step_gather_scatter_path_when_slots_disabled(registry):
+    """decode_slots=0 keeps the PR-5 gather/scatter contract: one
+    decode_many dispatch per flush wave."""
+    cfg = dataclasses.replace(BCFG, decode_slots=0)
+    with ServingEngine(registry, cfg) as eng:
+        eng.warmup("m", lengths=(CFG.window,))
+        with dispatch.counting() as counts:
+            futs = [eng.submit_step("m", f"gs-{i}",
                                     np.zeros(CFG.input_dim, np.float32))
-                    for i in range(BCFG.max_batch)]
+                    for i in range(cfg.max_batch)]
             for f in futs:
                 f.result(timeout=10.0)
     flushes = eng.telemetry.step_batches
     assert flushes >= 1
-    # one decode_many dispatch per flush wave (distinct clients, one
-    # wave each; each wave fits one decode-lane chunk)
     assert counts["decode_many"] == flushes
-    assert counts["decode_replay"] == 0     # no cache miss hit replay
-    assert fc.decode_width >= BCFG.max_batch
+    assert counts["slots_generate"] == 0
 
 
 # -- traces through the serving stack --------------------------------------

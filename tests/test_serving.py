@@ -290,6 +290,70 @@ def test_batched_step_matches_sequential_bitwise(forecaster):
             np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
 
 
+def test_donate_default_platform_gate(monkeypatch):
+    """Carry donation defaults ON off-CPU and OFF on CPU, where XLA
+    donation is a warn + copy no-op."""
+    from repro.serving import forecaster as fc_mod
+    assert fc_mod._donate_default() == (jax.default_backend() != "cpu")
+    monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+    assert fc_mod._donate_default() is True
+    monkeypatch.setattr(jax, "default_backend", lambda: "cpu")
+    assert fc_mod._donate_default() is False
+
+
+def test_donated_step_many_matches_non_donated_bitwise(forecaster,
+                                                       monkeypatch):
+    """The donating compiled programs (gather/scatter and slots paths)
+    must be bit-for-bit the non-donating ones.  On CPU an explicit
+    ``donate=True`` is gated off, so force the donating variants by
+    patching the platform query — XLA then warns and copies, which is
+    exactly the behavior the gate exists to avoid, but the numerics
+    contract still has to hold."""
+    import warnings
+
+    def donated(fn, *args, **kw):
+        monkeypatch.setattr(jax, "default_backend", lambda: "gpu")
+        try:
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                return fn(*args, donate=True, **kw)
+        finally:
+            monkeypatch.undo()
+
+    rng = np.random.default_rng(3)
+    xs = rng.standard_normal((5, 5)).astype(np.float32) * 0.02
+    mk = lambda: [forecaster.init_carry(1) for _ in range(5)]  # noqa: E731
+    y0, p0, cs0 = forecaster.step_many(xs, mk(), donate=False)
+    y1, p1, cs1 = donated(forecaster.step_many, xs, mk())
+    assert np.array_equal(y0, y1) and np.array_equal(p0, p1)
+    for a, b in zip(jax.tree_util.tree_leaves(cs0),
+                    jax.tree_util.tree_leaves(cs1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    carry = forecaster.init_carry(1)
+    s0 = forecaster.insert(forecaster.init_slots(4), 1, carry,
+                           donate=False)
+    s1 = donated(forecaster.insert, forecaster.init_slots(4), 1, carry)
+    x = np.zeros((s0.num_slots, 5), np.float32)
+    x[1] = xs[0]
+    ya, pa, s0 = forecaster.generate(s0, x, donate=False)
+    yb, pb, s1 = donated(forecaster.generate, s1, x)
+    assert np.array_equal(ya, yb) and np.array_equal(pa, pb)
+    for a, b in zip(jax.tree_util.tree_leaves(s0.carry),
+                    jax.tree_util.tree_leaves(s1.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_transport_worker_shard_forces_donation_off():
+    """Regression: the transport worker's recv loop migrates session
+    carries concurrently with the flush thread, so its EngineShard must
+    pin donate_carries=False regardless of platform default."""
+    from repro.serving.transport import _ShardState
+    state = _ShardState()
+    state.configure(0, BatcherConfig(max_batch=4, max_wait_ms=1.0), 16)
+    assert state.shard.donate_carries is False
+
+
 def test_step_many_partial_and_chunked_flushes(forecaster):
     """Batches that underfill (n < width) or overflow (n > width) the
     decode lane still match per-session steps bitwise."""
@@ -321,6 +385,12 @@ def test_runner_step_many_matches_step(forecaster):
         bat = r_bat.step_many([(f"c{i}", xs[t, i], None)
                                for i in range(n)])
         assert bat == seq
+    # slot runner: sessions live in device lanes, not the cache (the
+    # cache is the spill tier and stays empty while lanes suffice)
+    assert sorted(r_bat.resident_clients()) == [f"c{i}" for i in range(n)]
+    assert len(r_bat.cache) == 0
+    # spilling hands every lane's carry to the cache, bitwise intact
+    assert r_bat.spill_all() == n
     assert len(r_bat.cache) == n
 
 
@@ -428,7 +498,10 @@ def test_engine_step_recovers_evicted_session_via_history(registry,
         half = CFG.window // 2
         for t in range(half):
             eng.step("m", "c", w[t], timeout=10.0)
-        assert eng.sessions.drop("c")              # simulate eviction
+        # simulate eviction: the session lives in a decode lane, so
+        # spill it to the cache (the spill tier) before dropping it
+        assert eng.spill_sessions() == 1
+        assert eng.sessions.drop("c")
         for t in range(half, CFG.window):
             got = eng.step("m", "c", w[t], history=w[:t], timeout=10.0)
     assert got == want
@@ -501,7 +574,13 @@ def test_session_carry_matches_full_window_recompute(forecaster):
     # fuses the full-sequence scan differently, so not bitwise)
     y_scan, _ = rnn_apply(forecaster.params, w[None], CFG)
     np.testing.assert_allclose(y_inc, float(y_scan[0]), atol=1e-6, rtol=0)
-    assert runner.cache.stats()["hits"] == CFG.window - 1
+    # the session entered its device lane on the first step (one cache
+    # miss) and stayed resident for the rest — the spill tier is never
+    # touched again
+    assert runner.resident_clients() == ["client"]
+    assert runner.slot_inserts == 1 and runner.slot_spills == 0
+    st = runner.cache.stats()
+    assert st["misses"] == 1 and st["hits"] == 0
 
 
 def test_session_eviction_recovers_via_history_replay(forecaster):
@@ -516,7 +595,10 @@ def test_session_eviction_recovers_via_history_replay(forecaster):
     half = CFG.window // 2
     for t in range(half):
         runner2.step("c2", w[t])
-    assert runner2.cache.drop("c2")            # simulate eviction
+    # simulate eviction of LIVE state: spill the lane to the cache,
+    # then drop the cache entry
+    assert runner2.spill(["c2"]) == 1
+    assert runner2.cache.drop("c2")
     for t in range(half, CFG.window):
         y_resumed, _ = runner2.step("c2", w[t], history=w[:t])
     assert y_uninterrupted == y_resumed

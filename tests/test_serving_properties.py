@@ -320,12 +320,15 @@ def test_session_cache_never_exceeds_capacity_exhaustive(ops, max_sessions,
 
 def _stream(forecaster, w, evict_at):
     """Serve window ``w`` step by step, dropping the session (and
-    re-priming from history) at every index in ``evict_at``."""
+    re-priming from history) at every index in ``evict_at``.  The
+    session may be lane-resident, so a real eviction is spill (lane ->
+    cache) followed by the cache drop."""
     runner = RecurrentSessionRunner(forecaster,
                                     SessionCache(max_sessions=4))
     y = p = None
     for t in range(w.shape[0]):
         if t in evict_at and t > 0:
+            runner.spill(["c"])
             runner.cache.drop("c")
         y, p = runner.step("c", w[t], history=w[:t] if t > 0 else None)
     return y, p
@@ -370,6 +373,7 @@ def _check_batched_equals_sequential(forecaster, seed, n_clients, n_ticks,
         for t in range(n_ticks):
             for c in range(n_clients):
                 if (t, c) in evict:
+                    runner.spill([f"c{c}"])
                     runner.cache.drop(f"c{c}")
             hist = lambda c: xs[:t, c] if t > 0 else None  # noqa: E731
             if batched:
@@ -409,6 +413,81 @@ def test_batched_step_equivalence_exhaustive(forecaster, seed, n_clients,
                                      evictions)
 
 
+# -- slot allocator laws ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def narrow_forecaster(forecaster):
+    # decode_width=2 with num_slots=2 means any third active client
+    # forces an LRU spill, so arbitrary interleavings below churn
+    # through insert/generate/spill/reload continuously.
+    return LSTMForecaster(cfg=CFG, params=forecaster.params,
+                          decode_width=2)
+
+
+_SLOT_OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("step"),
+                  st.sets(st.integers(0, 3), min_size=1, max_size=4)),
+        st.tuples(st.just("spill"), st.integers(0, 3)),
+        st.tuples(st.just("spill_all"), st.just(0)),
+        st.tuples(st.just("evict"), st.integers(0, 3)),
+    ),
+    min_size=1, max_size=12)
+
+
+def _check_slot_interleaving(narrow_forecaster, seed, ops):
+    """Any interleaving of insert/generate (via ``step_many``), explicit
+    spill, spill_all, and evict+reload must be invisible: every output
+    is BITWISE the per-session ``step`` loop's on a slotless runner, and
+    lane occupancy never exceeds ``num_slots``."""
+    n_clients, num_slots = 4, 2
+    rng = np.random.default_rng(seed)
+    n_ticks = max(1, sum(1 for kind, _ in ops if kind == "step"))
+    xs = rng.standard_normal(
+        (n_ticks, n_clients, 3)).astype(np.float32) * 0.02
+
+    def run(num_slots: int):
+        runner = RecurrentSessionRunner(
+            narrow_forecaster, SessionCache(max_sessions=n_clients),
+            num_slots=num_slots)
+        outs, t = [], [0] * n_clients
+        for kind, arg in ops:
+            if kind == "step":
+                items = [(f"c{c}", xs[t[c], c],
+                          xs[:t[c], c] if t[c] > 0 else None)
+                         for c in sorted(arg)]
+                outs.append(runner.step_many(items))
+                for c in arg:
+                    t[c] += 1
+            elif kind == "spill":
+                runner.spill([f"c{arg}"])
+            elif kind == "spill_all":
+                runner.spill_all()
+            else:                            # evict: spill then drop;
+                runner.spill([f"c{arg}"])    # the session re-primes
+                runner.cache.drop(f"c{arg}")  # from history on reuse
+            if runner.num_slots:
+                assert len(runner.resident_clients()) <= runner.num_slots
+                assert runner.slot_stats()["active"] <= runner.num_slots
+        return outs
+
+    assert run(num_slots=num_slots) == run(num_slots=0)
+
+
+@given(st.integers(0, 2 ** 16 - 1), _SLOT_OPS)
+@settings(deadline=None)
+def test_slot_interleaving_equals_slotless_and_occupancy_bounded(
+        narrow_forecaster, seed, ops):
+    _check_slot_interleaving(narrow_forecaster, seed, ops)
+
+
+@pytest.mark.slow
+@given(st.integers(0, 2 ** 16 - 1), _SLOT_OPS)
+@settings(max_examples=150, deadline=None)
+def test_slot_interleaving_exhaustive(narrow_forecaster, seed, ops):
+    _check_slot_interleaving(narrow_forecaster, seed, ops)
+
+
 # -- telemetry merge laws ---------------------------------------------------
 
 _LATS = st.lists(st.floats(1e-4, 0.5, allow_nan=False,
@@ -422,6 +501,8 @@ _SHARD_EVENTS = st.fixed_dictionaries({
     "hits": st.integers(0, 5),
     "misses": st.integers(0, 5),
     "evictions": st.integers(0, 2),
+    "slot_inserts": st.integers(0, 4),
+    "slot_spills": st.integers(0, 4),
 })
 
 
@@ -448,6 +529,9 @@ def test_telemetry_merge_laws(shards):
         for _ in range(ev["misses"]):
             tel.record_cache(False)
         tel.record_eviction(ev["evictions"])
+        tel.record_slots(inserts=ev["slot_inserts"],
+                         spills=ev["slot_spills"],
+                         active=min(ev["slot_inserts"], 4), lanes=4)
         tels.append(tel)
 
     snaps = [tel.snapshot() for tel in tels]
@@ -455,7 +539,8 @@ def test_telemetry_merge_laws(shards):
 
     # counters: merged == sum over shards, exactly
     for key in ("requests", "batches", "swaps", "cache_evictions",
-                "step_requests", "step_batches"):
+                "step_requests", "step_batches", "slot_inserts",
+                "slot_spills", "slot_active", "slot_lanes"):
         assert merged[key] == sum(s[key] for s in snaps), key
     assert merged["shards"] == len(tels)
     assert merged["requests_by_shard"] == [s["requests"] for s in snaps]

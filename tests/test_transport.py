@@ -458,7 +458,11 @@ def test_socket_steps_fuse_into_batched_decode(forecaster):
         step_batches = after["step_batches"] - before["step_batches"]
         assert step_requests == n
         # fused: strictly fewer flushes than steps, and exactly one
-        # decode_many dispatch per flush
+        # slots_generate dispatch per flush (fresh clients additionally
+        # insert into their device lanes — once each; the host
+        # gather/scatter path stays cold)
         assert 0 < step_batches < n
-        assert counts["decode_many"] == step_batches
+        assert counts["slots_generate"] == step_batches
+        assert counts["slots_insert"] == n     # one lane entry per client
+        assert counts["decode_many"] == 0      # no host gather/scatter
         assert counts["decode_step"] == 0      # nothing went per-session
