@@ -15,8 +15,8 @@ import json
 import sys
 import traceback
 
-from benchmarks import (bench_communication, bench_extreme, bench_fault,
-                        bench_hotswap, bench_kernels, bench_obs,
+from benchmarks import (bench_communication, bench_ensemble, bench_extreme,
+                        bench_fault, bench_hotswap, bench_kernels, bench_obs,
                         bench_prediction, bench_roofline, bench_serving,
                         bench_serving_mesh, bench_speedup, common)
 
@@ -37,6 +37,8 @@ ALL = [
     ("obs", bench_obs),                  # ISSUE 6 tracing-overhead bound
     ("fault", bench_fault),              # ISSUE 7 crash supervision:
     # SIGKILL mid-traffic -> detection/fail-fast/respawn budgets
+    ("ensemble", bench_ensemble),        # ISSUE 9 fused ensemble serving
+    # vs N-sequential members + fused-alert precision/recall gain
 ]
 
 

@@ -87,6 +87,12 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--max-skew", type=int, default=1,
                     help="mesh swap-propagation staleness bound "
                     "(versions a shard may lag the primary)")
+    ap.add_argument("--ensemble", type=int, default=1, metavar="N",
+                    help="serve an N-member ensemble of the model "
+                    "(distinct init seeds) fused by EVT-weighted "
+                    "combination, with the anomaly-aware alert path; "
+                    "traffic routes at the ensemble name and every "
+                    "request fans out to N per-model fused dispatches")
     ap.add_argument("--clients", type=int, default=32)
     ap.add_argument("--requests", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=32)
@@ -132,6 +138,27 @@ def main(argv: list[str] | None = None) -> None:
                                   reduced=args.reduced)
     if args.model not in registry:
         registry.register(args.model, fc)
+
+    serve_key = args.model
+    if args.ensemble > 1:
+        if args.checkpoint:
+            ap.error("--ensemble needs distinct member inits; it does "
+                     "not combine with --checkpoint")
+        members = [args.model]
+        for i in range(1, args.ensemble):
+            key = f"{args.model}-{i}"
+            if args.model == "paper-lstm":
+                m = build_lstm_forecaster(seed=args.seed + i)
+            else:
+                m = build_zoo_forecaster(args.model, seed=args.seed + i,
+                                         reduced=args.reduced)
+            registry.register(key, m)
+            members.append(key)
+        serve_key = f"{args.model}-ensemble"
+        registry.register_ensemble(serve_key, members,
+                                   alert_threshold=args.alert_threshold)
+        print(f"hosting {serve_key!r}: {args.ensemble} members "
+              f"{members} fused by EVT-weighted combination")
 
     labels = None
     if fc.feature_dim:                      # window-stream (LSTM) traffic
@@ -198,7 +225,7 @@ def main(argv: list[str] | None = None) -> None:
         for addr in args.connect:
             sid = engine.connect_shard(addr)
             print(f"joined remote shard worker {addr} as shard {sid}")
-        engine.warmup(args.model, lengths=lengths)
+        engine.warmup(serve_key, lengths=lengths)
         if is_mesh:
             engine.reset_clock()
         else:
@@ -206,7 +233,7 @@ def main(argv: list[str] | None = None) -> None:
         if profile_ctx is not None:
             profile_ctx.__enter__()
         t0 = time.time()
-        futures = [engine.submit(args.model, p,
+        futures = [engine.submit(serve_key, p,
                                  client_id=f"client-{i % args.clients}")
                    for i, p in enumerate(payloads)]
         results = [f.result(timeout=60.0) for f in futures]
@@ -230,7 +257,7 @@ def main(argv: list[str] | None = None) -> None:
             n_steps = 0
             for step in range(fc.window):
                 for c, ds in enumerate(streams):
-                    engine.step(args.model, f"client-{c}", ds.x[0][step])
+                    engine.step(serve_key, f"client-{c}", ds.x[0][step])
                     n_steps += 1
             wall_s = time.time() - t0s
             # resident = device-lane residents + spilled-to-cache; the
@@ -255,7 +282,7 @@ def main(argv: list[str] | None = None) -> None:
             t0s = time.time()
             n_steps = 0
             for step in range(fc.window):
-                futs = [engine.submit_step(args.model, f"client-{c}",
+                futs = [engine.submit_step(serve_key, f"client-{c}",
                                            ds.x[0][step])
                         for c, ds in enumerate(streams)]
                 for f in futs:
@@ -279,7 +306,7 @@ def main(argv: list[str] | None = None) -> None:
                              for _, p in results], dtype=bool)
     alerts = [(i, y, p) for i, (y, p) in enumerate(results)
               if p >= args.alert_threshold]
-    print(f"{args.model}: {len(results)} requests in {wall*1e3:.1f} ms"
+    print(f"{serve_key}: {len(results)} requests in {wall*1e3:.1f} ms"
           + (f" over {engine.n_shards} shards" if is_mesh else ""))
     print(Telemetry.format(snap))
     if is_mesh:

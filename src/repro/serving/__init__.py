@@ -27,11 +27,20 @@ Layout (DESIGN: one concern per module):
                     resident -> generate -> read requested rows"
                     (``num_slots=0`` restores the gather/scatter path);
                     ``ShardedSessionCache`` shards by client id;
-- ``forecaster.py`` one ``predict(window) -> (forecast, p_extreme)``
-                    interface over the paper LSTM and every zoo arch,
-                    with the EVT tail alert head; ``DecodeSlots`` +
-                    prefill/insert/generate, the device-resident decode
-                    lifecycle (carries donated in and out off-CPU);
+- ``forecaster.py`` the ``Forecaster``/``StreamingForecaster``
+                    protocols — one ``predict(window) -> (forecast,
+                    p_extreme)`` interface over the paper LSTM and every
+                    zoo arch, with the EVT tail alert head;
+                    ``DecodeSlots`` + prefill/insert/generate, the
+                    device-resident decode lifecycle (carries donated in
+                    and out off-CPU);
+- ``ensemble.py``   composable model-set serving: ``EnsembleForecaster``
+                    fans one request across N registry members and fuses
+                    ``(forecast, p_extreme)`` with EVT-weighted
+                    combination (weights = each member's calibrated tail
+                    prior, renormalized online from rolling error), plus
+                    the anomaly-aware alert path (extreme regime widens
+                    alert sensitivity and tightens flush ``max_wait``);
 - ``registry.py``   multi-model hosting keyed by name, monotone model
                     versions, atomic weight swap, publish subscriptions,
                     checkpoint I/O;
@@ -56,7 +65,11 @@ Layout (DESIGN: one concern per module):
 """
 
 from repro.serving.engine import BatcherConfig, EngineShard, ServingEngine
-from repro.serving.forecaster import (DecodeSlots, LSTMForecaster,
+from repro.serving.ensemble import (EnsembleForecaster, EnsembleFuser,
+                                    EnsembleSlots, EnsembleSpec,
+                                    fusion_weights)
+from repro.serving.forecaster import (DecodeSlots, Forecaster,
+                                      LSTMForecaster, StreamingForecaster,
                                       ZooForecaster, build_lstm_forecaster,
                                       build_zoo_forecaster)
 from repro.serving.hotswap import WeightPublisher, stop_the_world_swap
@@ -74,6 +87,11 @@ __all__ = [
     "ConsistentRouter",
     "DecodeSlots",
     "EngineShard",
+    "EnsembleForecaster",
+    "EnsembleFuser",
+    "EnsembleSlots",
+    "EnsembleSpec",
+    "Forecaster",
     "LSTMForecaster",
     "ModelRegistry",
     "MultiProcessServingEngine",
@@ -85,12 +103,14 @@ __all__ = [
     "ShardSwarm",
     "ShardedServingEngine",
     "ShardedSessionCache",
+    "StreamingForecaster",
     "Telemetry",
     "WeightPublisher",
     "ZooForecaster",
     "build_lstm_forecaster",
     "build_zoo_forecaster",
     "connect_shard",
+    "fusion_weights",
     "serve_shard",
     "spawn_shard",
     "stop_the_world_swap",

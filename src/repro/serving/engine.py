@@ -180,6 +180,13 @@ class EngineShard:
         self._session_cache = session_cache
         self._runners: dict[str, object] = {}
         self._runners_lock = threading.Lock()
+        # ensemble serving: one EnsembleForecaster runtime per hosted
+        # ensemble name (holds the shard's online fusion/anomaly state,
+        # shared by the predict fan-in path and the step flush), plus
+        # the anomaly-driven max_wait multipliers the flush worker
+        # consults per model key (1.0 when absent)
+        self._ensemble_runtimes: dict[str, object] = {}
+        self._wait_scales: dict[str, float] = {}
 
     @property
     def sessions(self):
@@ -192,6 +199,48 @@ class EngineShard:
                     self._session_cache = SessionCache(
                         telemetry=self.telemetry)
         return self._session_cache
+
+    def _ensemble_spec(self, model_key: str):
+        """The EnsembleSpec hosted under ``model_key``, or None when the
+        key is a plain model (or the registry is a duck-typed stand-in
+        without ensembles) — how the serve paths tell fan-out requests
+        from single-model requests."""
+        fn = getattr(self.registry, "ensemble", None)
+        return fn(model_key) if fn is not None else None
+
+    def _ensemble(self, name: str):
+        """This shard's EnsembleForecaster runtime for ``name`` (built
+        lazily; holds the online fusion weights and anomaly state)."""
+        rt = self._ensemble_runtimes.get(name)
+        if rt is None:
+            with self._runners_lock:
+                rt = self._ensemble_runtimes.get(name)
+                if rt is None:
+                    from repro.serving.ensemble import EnsembleForecaster
+
+                    rt = EnsembleForecaster(self.registry, name)
+                    self._ensemble_runtimes[name] = rt
+        return rt
+
+    def _note_anomaly(self, name: str, spec, rt) -> None:
+        """Fold the ensemble's anomaly state into the flush worker's
+        max_wait multipliers: while the fused stream is anomalous, the
+        ensemble AND its members flush sooner (alert latency beats
+        batch occupancy under extremes)."""
+        scale = rt.fuser().wait_scale()
+        keys = (name,) + tuple(spec.members)
+        if scale == 1.0:
+            for k in keys:
+                self._wait_scales.pop(k, None)
+        else:
+            for k in keys:
+                self._wait_scales[k] = scale
+        self.telemetry.record_anomaly(rt.fuser().anomaly)
+
+    def _wait_scale(self, model_key: str) -> float:
+        if not self._wait_scales:
+            return 1.0
+        return self._wait_scales.get(model_key, 1.0)
 
     def _step_runner(self, model_key: str):
         runner = self._runners.get(model_key)
@@ -211,11 +260,20 @@ class EngineShard:
                     # slot-capable forecasters get decode_slots device
                     # lanes; others (and decode_slots=0) keep the
                     # gather/scatter path
-                    fc = self.registry.get(model_key)
+                    # ensemble names resolve to the shard's stable
+                    # EnsembleForecaster runtime (which re-resolves its
+                    # members per call): composite per-member carries
+                    # live under ONE client id in the same cache, so
+                    # they spill/migrate as a unit
+                    if self._ensemble_spec(model_key) is not None:
+                        provider = lambda: self._ensemble(model_key)  # noqa: E731
+                    else:
+                        provider = lambda: self.registry.get(model_key)  # noqa: E731
+                    fc = provider()
                     n_slots = self.config.decode_slots \
                         if hasattr(fc, "init_slots") else 0
                     runner = RecurrentSessionRunner(
-                        lambda: self.registry.get(model_key), cache=cache,
+                        provider, cache=cache,
                         donate_carries=self.donate_carries,
                         num_slots=n_slots)
                     self._runners[model_key] = runner
@@ -319,6 +377,10 @@ class EngineShard:
         serves every client). ``trace`` is an upstream TraceContext
         (the mesh router starts one); with none given, a shard-level
         tracer opens its own."""
+        spec = self._ensemble_spec(model_key)
+        if spec is not None:
+            return self._submit_ensemble(model_key, spec, window,
+                                         client_id=client_id, trace=trace)
         # fully deferred in-process tracing: the client thread stashes ONE
         # clock stamp; the flush worker later folds the whole micro-batch
         # into a single trace block (Tracer.finish_block). No Trace object
@@ -368,6 +430,111 @@ class EngineShard:
         return self.submit(model_key, window,
                            client_id=client_id).result(timeout=timeout)
 
+    def _submit_ensemble(self, name: str, spec, window,
+                         client_id: str | None = None,
+                         trace=None) -> Future:
+        """Fan one request across every ensemble member and join on a
+        fan-in future: each member rides its OWN per-model bucket (so
+        an N-member flush is exactly N fused per-model dispatches, each
+        bitwise-identical to serving that member solo), and the last
+        member's completion fuses the results with the shard's online
+        EVT weights. The fan-in future resolves to the fused
+        (forecast, p_extreme); per-member results, fusion weights and
+        the alert/anomaly decision ride on it as attributes."""
+        tracer = self.tracer
+        if trace is None and tracer is not None and tracer.enabled:
+            # eager trace (the fan-out already costs N submits): member
+            # completions and the fuse land as spans on ONE trace
+            trace = tracer.start("ensemble", meta=self._meta_for(name))
+        rt = self._ensemble(name)
+        members = spec.members
+        n = len(members)
+        fanin: Future = Future()
+        fanin.client_id = client_id
+        t0 = time.perf_counter()
+        state = {"y": [0.0] * n, "p": [0.0] * n, "t": [0.0] * n,
+                 "v": [None] * n, "done": 0}
+        lock = threading.Lock()
+
+        def _finish(exc=None):
+            if not fanin.set_running_or_notify_cancel():
+                return                      # client cancelled the fan-in
+            if exc is not None:
+                if trace is not None:
+                    trace.finish(status="error")
+                fanin.set_exception(exc)
+                return
+            try:
+                ys = [np.asarray([state["y"][j]], np.float32)
+                      for j in range(n)]
+                ps = [np.asarray([state["p"][j]], np.float32)
+                      for j in range(n)]
+                fused = rt.fuse(ys, ps)
+                self._note_anomaly(name, spec, rt)
+            except Exception as e:  # noqa: BLE001 — spec swapped under us
+                if trace is not None:
+                    trace.finish(status="error")
+                fanin.set_exception(e)
+                return
+            now = time.perf_counter()
+            self.telemetry.record_ensemble(
+                latency_s=now - t0, alerts=int(fused.alerts[0]),
+                anomaly=fused.anomaly)
+            fanin.model_version = tuple(state["v"])
+            fanin.members = dict(zip(members, zip(state["y"], state["p"])))
+            fanin.weights = np.asarray(fused.weights)
+            fanin.alert = bool(fused.alerts[0])
+            fanin.alert_threshold = fused.threshold
+            fanin.anomaly = fused.anomaly
+            if trace is not None:
+                # member completion spans in completion order (a trace's
+                # marks chain forward in time), then the fuse, then done
+                for j in sorted(range(n), key=lambda j: state["t"][j]):
+                    trace.mark("member", t=_TRACE_EPOCH + state["t"][j],
+                               model=members[j])
+                trace.mark("fuse")
+                trace.finish()      # before set_result: a cross-process
+                # done-callback exports the spans at delivery
+            fanin.set_result((float(fused.forecast[0]),
+                              float(fused.p_extreme[0])))
+
+        def _member_cb(i):
+            def cb(fut):
+                done = failed = None
+                with lock:
+                    if state["done"] < 0:
+                        return
+                    try:
+                        y, p = fut.result()
+                    except Exception as e:  # noqa: BLE001
+                        state["done"] = -1
+                        failed = e
+                    else:
+                        state["y"][i] = float(y)
+                        state["p"][i] = float(p)
+                        state["t"][i] = time.perf_counter()
+                        state["v"][i] = getattr(fut, "model_version", None)
+                        state["done"] += 1
+                        done = state["done"] == n
+                if failed is not None:
+                    _finish(failed)
+                elif done:
+                    _finish()
+            return cb
+
+        for i, m in enumerate(members):
+            try:
+                self.submit(m, window,
+                            client_id=client_id).add_done_callback(
+                                _member_cb(i))
+            except Exception as e:  # noqa: BLE001 — sync member reject
+                with lock:
+                    if state["done"] >= 0:
+                        state["done"] = -1
+                        _finish(e)
+                break
+        return fanin
+
     def submit_step(self, model_key: str, client_id: str, x_t,
                     history=None, trace=None) -> Future:
         """Enqueue one streaming step for ``client_id``'s session:
@@ -382,7 +549,13 @@ class EngineShard:
                 if trace is None and tracer is not None and tracer.enabled
                 else None)
         try:
-            fc = self.registry.get(model_key)
+            # ensemble names resolve to the shard's runtime (protocol-
+            # compatible: validation below sees the members' shared
+            # feature_dim); the step then rides the SAME queue/flush
+            # machinery under the ensemble name
+            fc = (self._ensemble(model_key)
+                  if self._ensemble_spec(model_key) is not None
+                  else self.registry.get(model_key))
             if not hasattr(fc, "step") or not fc.feature_dim:
                 raise ValueError(
                     f"{model_key!r} does not support incremental session "
@@ -450,6 +623,15 @@ class EngineShard:
                ) -> int:
         """Compile every (pow2 batch) x (length bucket) apply the hot path
         can hit, off the serving path. Returns #programs warmed."""
+        spec = self._ensemble_spec(model_key)
+        if spec is not None:
+            # an ensemble's compile set IS its members' (fan-out serves
+            # through their buckets); the runner build warms the
+            # ensemble replay/slot programs on top (mostly cache hits)
+            n = sum(self.warmup(m, lengths=lengths) for m in spec.members)
+            if self._ensemble(model_key).feature_dim:
+                self._step_runner(model_key)
+            return n
         fc = self.registry.get(model_key)
         lens = lengths if lengths is not None else (fc.window,)
         max_b = self.config.max_batch
@@ -530,7 +712,19 @@ class EngineShard:
         # the dispatch decision, not re-derived here
         padded = getattr(runner, "last_step_slots", len(reqs))
         self.telemetry.record_step_batch([now - r.t_enq for r in reqs],
-                                         n_padded=padded)
+                                         n_padded=padded,
+                                         model=model_key)
+        spec = self._ensemble_spec(model_key)
+        if spec is not None:
+            # the fuse happened inside the ensemble runtime's step_many;
+            # surface its alert/anomaly outcome into telemetry and the
+            # flush worker's max_wait multipliers
+            rt = self._ensemble(model_key)
+            thr = rt.fuser().alert_threshold()
+            self._note_anomaly(model_key, spec, rt)
+            self.telemetry.record_ensemble(
+                alerts=sum(1 for _, p in outs if p >= thr), n=len(outs),
+                anomaly=rt.fuser().anomaly)
         if fspans is not None:
             # scatter + the umbrella flush span BEFORE set_result: the
             # transport worker's done-callback exports the trace, so
@@ -598,7 +792,8 @@ class EngineShard:
                                        version=version,
                                        staleness_s=staleness,
                                        client_ids=[r.client_id
-                                                   for r in reqs])
+                                                   for r in reqs],
+                                       model=model_key)
         if fspans is not None:
             # scatter + the umbrella flush span (overlapping the chained
             # queue/gather/dispatch/scatter spans) BEFORE set_result:
@@ -653,13 +848,16 @@ class EngineShard:
                        else cfg.bucket_len(req.length))
                 self._pending.setdefault(key, []).append(req)
             now = time.perf_counter()
-            # flush full groups and expired groups
+            # flush full groups and expired groups; an anomalous
+            # ensemble tightens its (and its members') max_wait so
+            # alerts leave the queue sooner while the stream is extreme
             for key in list(self._pending):
                 reqs = self._pending[key]
                 while len(reqs) >= cfg.max_batch:
                     self._flush(key[0], key[1], reqs[:cfg.max_batch])
                     del reqs[:cfg.max_batch]
-                if reqs and (now - reqs[0].t_enq >= max_wait
+                wait = max_wait * self._wait_scale(key[0])
+                if reqs and (now - reqs[0].t_enq >= wait
                              or not self._running):
                     self._flush(key[0], key[1], reqs)
                     reqs.clear()
@@ -669,8 +867,8 @@ class EngineShard:
                 continue
             # sleep until the next group deadline (or a short poll)
             timeout = max_wait if not self._pending else max(
-                1e-4, min(r[0].t_enq + max_wait
-                          for r in self._pending.values())
+                1e-4, min(r[0].t_enq + max_wait * self._wait_scale(k[0])
+                          for k, r in self._pending.items())
                 - time.perf_counter())
             try:
                 model_key, req = self._queue.get(timeout=min(timeout, 0.05))

@@ -1,7 +1,16 @@
 """One serving interface over every model: ``predict(windows, lengths)
 -> (forecast, extreme_probability)``.
 
-Two implementations:
+The interface itself is the ``Forecaster`` protocol below (batch
+prediction) plus ``StreamingForecaster`` (adds O(1) incremental state:
+explicit carries, replay, and decode-slot residency). Anything
+satisfying them composes — the registry, engine, session runner and
+mesh layers are written against the protocols, which is what lets
+``repro.serving.ensemble.EnsembleForecaster`` (a model *set* fused by
+EVT-weighted combination) serve through the exact same paths as a
+single model.
+
+Two concrete single-model implementations:
 
 - ``LSTMForecaster`` — the paper model (2xLSTM + 3xFC, window 20). The
   forecast is the next-step normalized close; the extreme probability
@@ -23,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any
+from typing import Any, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +46,48 @@ from repro.models.rnn import (RNNConfig, init_rnn, init_rnn_carry,
                               stack_rnn_carries)
 
 PyTree = Any
+
+
+@runtime_checkable
+class Forecaster(Protocol):
+    """What the serving plane requires of a servable model: shape
+    metadata plus batched prediction. Structural — ``LSTMForecaster``,
+    ``ZooForecaster`` and ``EnsembleForecaster`` all satisfy it without
+    inheriting anything."""
+
+    kind: str
+
+    @property
+    def window(self) -> int: ...
+
+    @property
+    def feature_dim(self) -> int: ...
+
+    def predict(self, windows, lengths=None): ...
+
+
+@runtime_checkable
+class StreamingForecaster(Forecaster, Protocol):
+    """A ``Forecaster`` that also serves O(1) streaming: explicit
+    carries (opaque to callers — single models use per-layer (h, c)
+    tuples, ensembles use {member: carry} dicts), history replay, and
+    device-resident decode slots. This is the full contract
+    ``RecurrentSessionRunner`` / ``DecodeSlots`` serving is written
+    against."""
+
+    @property
+    def decode_width(self) -> int: ...
+
+    def init_carry(self, batch: int = 1): ...
+
+    def carry_nbytes(self, batch: int = 1) -> int: ...
+
+    def step(self, x_t, carry): ...
+
+    def step_many(self, xs, carries, donate=None): ...
+
+    def replay(self, window, carry=None): ...
+
 
 # One compiled function set per RNNConfig, shared by every forecaster
 # instance with that config. This is what makes weight hot-swapping

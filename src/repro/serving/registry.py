@@ -25,6 +25,7 @@ from repro.checkpoint.io import (assemble, dump_checkpoint_bytes,
                                  load_checkpoint, load_checkpoint_bytes,
                                  save_checkpoint)
 from repro.models.rnn import RNNConfig, init_rnn
+from repro.serving.ensemble import EnsembleSpec
 from repro.serving.forecaster import LSTMForecaster, ZooForecaster
 
 
@@ -58,6 +59,13 @@ class ModelRegistry:
         self._entries: dict[str, RegistryEntry] = {}
         self._subscribers: list = []
         self.swap_count = 0
+        # ensemble specs live in a separate namespace from model keys:
+        # specs are immutable and swapped whole (monotone versions), and
+        # they notify their OWN subscriber list — a weight-propagation
+        # swarm must not try to pull a checkpoint for a spec name
+        self._ensembles: dict[str, EnsembleSpec] = {}
+        self._ensemble_versions: dict[str, int] = {}
+        self._ensemble_subscribers: list = []
 
     # -- publish notifications ---------------------------------------------
     def subscribe(self, callback) -> None:
@@ -176,6 +184,124 @@ class ModelRegistry:
     def __len__(self) -> int:
         with self._lock:
             return len(self._entries)
+
+    # -- ensembles ---------------------------------------------------------
+    def subscribe_ensembles(self, callback) -> None:
+        """Register ``callback(name, spec, version)`` to run after every
+        ensemble spec publication (register/swap). Same contract as
+        ``subscribe``: fires outside the lock, on the publishing
+        thread."""
+        with self._lock:
+            self._ensemble_subscribers.append(callback)
+
+    def unsubscribe_ensembles(self, callback) -> bool:
+        with self._lock:
+            try:
+                self._ensemble_subscribers.remove(callback)
+                return True
+            except ValueError:
+                return False
+
+    def _notify_ensembles(self, name: str, spec: EnsembleSpec,
+                          version: int) -> None:
+        with self._lock:
+            subscribers = list(self._ensemble_subscribers)
+        for fn in subscribers:
+            fn(name, spec, version)
+
+    def _validate_spec_locked(self, name: str, spec: EnsembleSpec) -> None:
+        if name in self._entries:
+            raise ValueError(f"ensemble name {name!r} collides with a "
+                             f"hosted model key")
+        missing = [m for m in spec.members if m not in self._entries]
+        if missing:
+            raise KeyError(f"ensemble {name!r} names unhosted members "
+                           f"{missing}; hosted: {sorted(self._entries)}")
+        fcs = [self._entries[m].forecaster for m in spec.members]
+        dims = {getattr(fc, "feature_dim", None) for fc in fcs}
+        wins = {getattr(fc, "window", None) for fc in fcs}
+        if len(dims) > 1 or len(wins) > 1:
+            raise ValueError(
+                f"ensemble {name!r} members disagree on input shape: "
+                f"feature_dims {sorted(map(str, dims))}, windows "
+                f"{sorted(map(str, wins))} — members must serve the "
+                f"same windows")
+
+    def register_ensemble(self, name: str, members,
+                          **opts) -> EnsembleSpec:
+        """Host a named model group: ``members`` is an iterable of
+        already-hosted model keys (or a full ``EnsembleSpec``); ``opts``
+        are ``EnsembleSpec`` fusion/anomaly fields. Re-registering an
+        existing name atomically replaces the whole member list
+        (monotone ensemble version) — per-member hotswap/canary
+        semantics are untouched because members stay ordinary model
+        keys swapped through ``swap``."""
+        spec = members if isinstance(members, EnsembleSpec) \
+            else EnsembleSpec(members=tuple(members), **opts)
+        with self._lock:
+            self._validate_spec_locked(name, spec)
+            v = self._ensemble_versions.get(name, 0) + 1
+            self._ensembles[name] = spec
+            self._ensemble_versions[name] = v
+        self._notify_ensembles(name, spec, v)
+        return spec
+
+    def swap_ensemble(self, name: str, members, **opts) -> int:
+        """Atomically replace an existing ensemble's member set;
+        returns the new spec version. Readers mid-flush keep the spec
+        they already resolved — the next flush fuses over the new
+        members (the fuser's error state rebuilds with them)."""
+        with self._lock:
+            if name not in self._ensembles:
+                raise KeyError(f"cannot swap unknown ensemble {name!r}; "
+                               f"hosted: {sorted(self._ensembles)}")
+        spec = members if isinstance(members, EnsembleSpec) \
+            else EnsembleSpec(members=tuple(members), **opts)
+        with self._lock:
+            self._validate_spec_locked(name, spec)
+            v = self._ensemble_versions[name] + 1
+            self._ensembles[name] = spec
+            self._ensemble_versions[name] = v
+        self._notify_ensembles(name, spec, v)
+        return v
+
+    def install_ensemble(self, name: str, spec: EnsembleSpec,
+                         version: int) -> bool:
+        """Replica-sync path (swarm pull / transport push): install the
+        spec AT the given version, skipping stale or already-applied
+        versions. No notifications — replicas don't re-propagate."""
+        spec = spec if isinstance(spec, EnsembleSpec) \
+            else EnsembleSpec.from_wire(spec)
+        with self._lock:
+            if self._ensemble_versions.get(name, 0) >= int(version):
+                return False
+            self._validate_spec_locked(name, spec)
+            self._ensembles[name] = spec
+            self._ensemble_versions[name] = int(version)
+            return True
+
+    def ensemble(self, name: str) -> EnsembleSpec | None:
+        """The spec hosted under ``name`` (None when the name is not an
+        ensemble — how the engine tells fan-out requests from plain
+        model requests)."""
+        with self._lock:
+            return self._ensembles.get(name)
+
+    def ensembles(self) -> dict[str, EnsembleSpec]:
+        with self._lock:
+            return dict(self._ensembles)
+
+    def ensemble_version(self, name: str) -> int:
+        with self._lock:
+            if name not in self._ensembles:
+                raise KeyError(f"unknown ensemble {name!r}; hosted: "
+                               f"{sorted(self._ensembles)}")
+            return self._ensemble_versions[name]
+
+    def unregister_ensemble(self, name: str) -> None:
+        with self._lock:
+            self._ensembles.pop(name, None)
+            self._ensemble_versions.pop(name, None)
 
     # -- persistence -------------------------------------------------------
     def _save_meta(self, key: str):

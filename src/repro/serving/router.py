@@ -337,6 +337,21 @@ class ShardedServingEngine:
         return max(shard.warmup(model_key, lengths=lengths)
                    for shard in list(self.shards.values()))
 
+    # -- ensembles ---------------------------------------------------------
+    # Co-location is structural: routing keys on ``client_id`` alone
+    # (never the model key), so an ensemble request lands on ONE shard
+    # and fans out to its N members inside that shard's EngineShard —
+    # member flushes share the shard's batch buckets and the fan-in
+    # fuse never crosses a shard boundary.
+    def register_ensemble(self, name: str, members, **opts):
+        return self.swarm.register_ensemble(name, members, **opts)
+
+    def swap_ensemble(self, name: str, members, **opts) -> int:
+        return self.swarm.swap_ensemble(name, members, **opts)
+
+    def ensemble(self, name: str):
+        return self.swarm.ensemble(name)
+
     # -- observation -------------------------------------------------------
     @property
     def shard_telemetries(self) -> list[Telemetry]:

@@ -30,6 +30,15 @@ Membership is LIVE: ``add_shard``/``remove_shard`` follow the router's
 assignment laws — only the clients the rendezvous hash moves (to an
 arriving shard, or off a departing one) are migrated, carries intact,
 and the fleet budget is re-split over the new shard set.
+
+Carries are OPAQUE throughout: single models store per-layer (h, c)
+tuples; an ``EnsembleForecaster`` session stores one composite
+``{member_key: member_carry}`` dict under ONE client id. The runner
+never looks inside — init/step/replay/extract on the ensemble build and
+split the dict — so a composite session spills, migrates and re-homes
+as a unit, and version mismatches (the ensemble version string changes
+when ANY member is swapped) re-prime every member from history in one
+replay, exactly like a single model.
 """
 
 from __future__ import annotations

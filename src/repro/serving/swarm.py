@@ -105,6 +105,7 @@ class ShardSwarm:
         with self._lock:
             for key, _ in self.primary.entries():
                 self._pull_lagging_locked(key, force=True)
+            self._sync_ensembles_locked()
         self.attach()
 
     @property
@@ -128,6 +129,8 @@ class ShardSwarm:
             self.replicas[sid] = ModelRegistry()
             for key in self.primary.keys():
                 self._pull_locked(sid, key, self.primary.get_entry(key))
+            # specs after weights: install validates members hosted
+            self._sync_ensembles_locked()
             return self.replicas[sid]
 
     def remove_replica(self, shard_id: int) -> None:
@@ -146,6 +149,7 @@ class ShardSwarm:
         with self._lock:
             if not self._attached:
                 self.primary.subscribe(self._on_publish)
+                self.primary.subscribe_ensembles(self._on_ensemble)
                 self._attached = True
         self.propagate()
         return self
@@ -158,6 +162,7 @@ class ShardSwarm:
         with self._lock:
             if self._attached:
                 self.primary.unsubscribe(self._on_publish)
+                self.primary.unsubscribe_ensembles(self._on_ensemble)
                 self._attached = False
 
     # -- registry facade (WeightPublisher-compatible) ----------------------
@@ -174,6 +179,34 @@ class ShardSwarm:
             if not self._attached:
                 self._on_publish(key, v)
             return v
+
+    # ensemble specs take the same facade shape: publish on the
+    # primary, sync into every replica atomically under the swarm lock.
+    # Specs live in their OWN registry namespace with their own
+    # subscriber list, so the weight path (`_on_publish` ->
+    # `get_entry`) never sees a spec name.
+    def register_ensemble(self, name: str, members, **opts):
+        with self._lock:
+            spec = self.primary.register_ensemble(name, members, **opts)
+            if not self._attached:
+                self._sync_ensembles_locked(name)
+            return spec
+
+    def swap_ensemble(self, name: str, members, **opts) -> int:
+        with self._lock:
+            v = self.primary.swap_ensemble(name, members, **opts)
+            if not self._attached:
+                self._sync_ensembles_locked(name)
+            return v
+
+    def ensemble(self, name: str):
+        return self.primary.ensemble(name)
+
+    def ensembles(self) -> dict:
+        return self.primary.ensembles()
+
+    def ensemble_version(self, name: str) -> int:
+        return self.primary.ensemble_version(name)
 
     def get(self, key: str):
         return self.primary.get(key)
@@ -202,6 +235,25 @@ class ShardSwarm:
             self._dirty.add(key)
             self._pull_lagging_locked(key)
         self._wake.set()             # freshness sweep for skipped versions
+
+    def _on_ensemble(self, name: str, spec, version: int) -> None:
+        with self._lock:
+            self._sync_ensembles_locked(name)
+
+    def _sync_ensembles_locked(self, name: str | None = None) -> int:
+        """Install the primary's ensemble specs into every replica
+        (stale versions are skipped by ``install_ensemble``)."""
+        names = ([name] if name is not None
+                 else list(self.primary.ensembles()))
+        installed = 0
+        for n in names:
+            spec = self.primary.ensemble(n)
+            if spec is None:
+                continue
+            v = self.primary.ensemble_version(n)
+            for replica in self.replicas.values():
+                installed += bool(replica.install_ensemble(n, spec, v))
+        return installed
 
     def _pull_lagging_locked(self, key: str, force: bool = False) -> int:
         entry = self.primary.get_entry(key)
@@ -267,11 +319,19 @@ class ShardSwarm:
         ``key`` (or for all keys): the freshness sweep, beyond what the
         skew bound forces. Returns the number of pulls performed."""
         with self._lock:
+            spec = self.primary.ensemble(key) if key is not None else None
+            if spec is not None:
+                # an ensemble name resolves to member weights + the spec
+                pulled = sum(self._pull_lagging_locked(m, force=True)
+                             for m in spec.members)
+                return pulled + self._sync_ensembles_locked(key)
             keys = [key] if key is not None else self.primary.keys()
             pulled = 0
             for k in keys:
                 pulled += self._pull_lagging_locked(k, force=True)
                 self._dirty.discard(k)
+            if key is None:
+                pulled += self._sync_ensembles_locked()
             return pulled
 
     # -- observation -------------------------------------------------------

@@ -85,7 +85,17 @@ class Telemetry:
         self.reprimes = 0          # session carries re-primed after a swap
         self.requests_by_version: dict[int, int] = {}
         self.requests_by_client: dict[str, int] = {}
+        # per-model attribution: every flush is tagged with its model
+        # key, so /metrics can tell ensemble members apart (each member
+        # of a fan-out flushes under its own key)
+        self.requests_by_model: dict[str, int] = {}
         self.untracked_client_requests = 0
+        # ensemble serving: fused fan-in results and their alert
+        # decisions, plus the anomaly-mode gauge (1 while any hosted
+        # ensemble's fused stream is extreme)
+        self.ensemble_requests = 0
+        self.ensemble_alerts = 0
+        self.anomaly_mode = 0
         # batched decode path: streaming steps flushed as fused batches
         self.step_requests = 0
         self.step_batches = 0
@@ -116,13 +126,13 @@ class Telemetry:
 
     def record_requests(self, latencies_s, version: int | None = None,
                         staleness_s: float | None = None,
-                        client_ids=None) -> None:
+                        client_ids=None, model: str | None = None) -> None:
         """Record one flush's worth of requests under a single lock
         acquisition (the micro-batcher calls this once per flush instead
         of ``record_request`` per row — less lock churn on the hot
-        path). All rows share the flush's version/staleness;
-        ``client_ids`` (optional, one per row, None entries for anonymous
-        requests) feed per-client attribution."""
+        path). All rows share the flush's version/staleness/``model``
+        key; ``client_ids`` (optional, one per row, None entries for
+        anonymous requests) feed per-client attribution."""
         with self._lock:
             for lat in latencies_s:
                 self.requests += 1
@@ -133,6 +143,9 @@ class Telemetry:
                 self.requests_by_version[version] = \
                     self.requests_by_version.get(version, 0) \
                     + len(latencies_s)
+            if model is not None and latencies_s:
+                self.requests_by_model[model] = \
+                    self.requests_by_model.get(model, 0) + len(latencies_s)
             if client_ids:
                 for cid in client_ids:
                     if cid is None:
@@ -153,12 +166,13 @@ class Telemetry:
         with self._lock:
             self.reprimes += n
 
-    def record_step_batch(self, latencies_s, n_padded: int | None = None
-                          ) -> None:
+    def record_step_batch(self, latencies_s, n_padded: int | None = None,
+                          model: str | None = None) -> None:
         """One batched streaming-step flush: per-step queue+serve
         latencies under a single lock acquisition, plus decode-lane
         occupancy (``n_padded`` = lane slots dispatched, defaults to the
-        real count)."""
+        real count). ``model`` feeds the same per-model attribution as
+        ``record_requests``."""
         latencies_s = list(latencies_s)
         with self._lock:
             self.step_batches += 1
@@ -168,6 +182,26 @@ class Telemetry:
                                        else len(latencies_s))
             for lat in latencies_s:
                 self._step_latency.add(lat)
+            if model is not None and latencies_s:
+                self.requests_by_model[model] = \
+                    self.requests_by_model.get(model, 0) + len(latencies_s)
+
+    def record_ensemble(self, latency_s: float | None = None,
+                        alerts: int = 0, n: int = 1,
+                        anomaly: bool = False) -> None:
+        """``n`` fused ensemble results (one fan-in predict, or a step
+        flush's rows), ``alerts`` of which crossed the effective alert
+        threshold; ``anomaly`` is the fuser's current mode (gauge)."""
+        with self._lock:
+            self.ensemble_requests += n
+            self.ensemble_alerts += alerts
+            self.anomaly_mode = int(bool(anomaly))
+            if latency_s is not None:
+                self._latency.add(latency_s)
+
+    def record_anomaly(self, anomaly: bool) -> None:
+        with self._lock:
+            self.anomaly_mode = int(bool(anomaly))
 
     def record_batch(self, n_real: int, n_padded: int) -> None:
         with self._lock:
@@ -258,9 +292,13 @@ class Telemetry:
                 "staleness_p95_s": stale95,
                 "requests_by_version": dict(self.requests_by_version),
                 "requests_by_client": dict(self.requests_by_client),
+                "requests_by_model": dict(self.requests_by_model),
                 "unique_clients": len(self.requests_by_client),
                 "untracked_client_requests":
                     self.untracked_client_requests,
+                "ensemble_requests": self.ensemble_requests,
+                "ensemble_alerts": self.ensemble_alerts,
+                "anomaly_mode": self.anomaly_mode,
                 "step_requests": self.step_requests,
                 "step_batches": self.step_batches,
                 "steps_per_s": self.step_requests / elapsed,
@@ -333,7 +371,10 @@ class Telemetry:
             self.padded_slots = 0
             self.requests_by_version = {}
             self.requests_by_client = {}
+            self.requests_by_model = {}
             self.untracked_client_requests = 0
+            self.ensemble_requests = 0
+            self.ensemble_alerts = 0
             self.step_requests = 0
             self.step_batches = 0
             self.step_real_slots = 0
@@ -365,21 +406,27 @@ class Telemetry:
                   "untracked_client_requests": 0, "step_requests": 0,
                   "step_batches": 0, "step_real_slots": 0,
                   "step_padded_slots": 0, "slot_inserts": 0,
-                  "slot_spills": 0, "slot_active": 0, "slot_lanes": 0}
+                  "slot_spills": 0, "slot_active": 0, "slot_lanes": 0,
+                  "ensemble_requests": 0, "ensemble_alerts": 0}
         by_version: dict[int, int] = {}
         by_client: dict[str, int] = {}
+        by_model: dict[str, int] = {}
         by_shard: list[int] = []
+        anomaly = 0
         elapsed = 1e-9
         for tel in telemetries:
             with tel._lock:
                 elapsed = max(elapsed, tel._clock() - tel._t0)
                 for k in totals:
                     totals[k] += getattr(tel, k)
+                anomaly = max(anomaly, tel.anomaly_mode)
                 by_shard.append(tel.requests)
                 for v, n in tel.requests_by_version.items():
                     by_version[v] = by_version.get(v, 0) + n
                 for c, n in tel.requests_by_client.items():
                     by_client[c] = by_client.get(c, 0) + n
+                for m, n in tel.requests_by_model.items():
+                    by_model[m] = by_model.get(m, 0) + n
                 raw = tel._raw_samples_locked()
                 lat.extend(raw["latency_s"])
                 stale.extend(raw["staleness_s"])
@@ -414,9 +461,13 @@ class Telemetry:
             "staleness_p95_s": stale95,
             "requests_by_version": by_version,
             "requests_by_client": by_client,
+            "requests_by_model": by_model,
             "unique_clients": len(by_client),
             "untracked_client_requests":
                 totals["untracked_client_requests"],
+            "ensemble_requests": totals["ensemble_requests"],
+            "ensemble_alerts": totals["ensemble_alerts"],
+            "anomaly_mode": anomaly,
             "step_requests": totals["step_requests"],
             "step_batches": totals["step_batches"],
             "steps_per_s": totals["step_requests"] / elapsed,
@@ -460,4 +511,12 @@ class Telemetry:
             line += (f" | slots {snap['slot_active']}/{snap['slot_lanes']} "
                      f"resident ({snap['slot_inserts']} inserts, "
                      f"{snap['slot_spills']} spills)")
+        if len(snap.get("requests_by_model", {})) > 1:
+            per = " ".join(f"{m}:{n}" for m, n in
+                           sorted(snap["requests_by_model"].items()))
+            line += f" | by model {per}"
+        if snap.get("ensemble_requests"):
+            line += (f" | ensemble {snap['ensemble_requests']} fused, "
+                     f"{snap['ensemble_alerts']} alerts"
+                     + (", ANOMALY" if snap.get("anomaly_mode") else ""))
         return line

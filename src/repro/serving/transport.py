@@ -160,8 +160,13 @@ class Connection:
             pass
 
 
-def _pack_carry(carry) -> list:
-    """An LSTM carry — a tuple of per-layer (h, c) arrays — as frames."""
+def _pack_carry(carry):
+    """An LSTM carry — a tuple of per-layer (h, c) arrays — as frames.
+    Ensemble session carries are ``{member_key: member_carry}`` dicts
+    (per-member state under ONE client id) and pack recursively, so a
+    composite session migrates across processes as a unit."""
+    if isinstance(carry, dict):
+        return {k: _pack_carry(v) for k, v in carry.items()}
     return [[pack_array(np.asarray(h)), pack_array(np.asarray(c))]
             for h, c in carry]
 
@@ -169,6 +174,8 @@ def _pack_carry(carry) -> list:
 def _unpack_carry(packed):
     import jax.numpy as jnp
 
+    if isinstance(packed, dict):
+        return {k: _unpack_carry(v) for k, v in packed.items()}
     return tuple((jnp.asarray(unpack_array(h)), jnp.asarray(unpack_array(c)))
                  for h, c in packed)
 
@@ -317,6 +324,16 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
                     telemetry.record_swap()     # pulls do in-process
                 conn.send({"op": "ok", "id": rid,
                            "version": registry.version(msg["model"])})
+            elif op == "ensemble":
+                # spec sync rides its own op (specs are not weight
+                # blobs): install is replica-style — stale versions are
+                # skipped, so pushes racing a swap converge on the
+                # newest spec. Members must already be published.
+                registry.install_ensemble(msg["name"], msg["spec"],
+                                          int(msg["version"]))
+                conn.send({"op": "ok", "id": rid,
+                           "version": registry.ensemble_version(
+                               msg["name"])})
             elif op == "submit":
                 if draining:
                     raise RuntimeError("shard is draining")
@@ -497,6 +514,7 @@ class RemoteShard:
         self.addr = addr
         self.pid = process.pid if process is not None else None
         self.versions: dict[str, int] = {}   # acked published versions
+        self.ensemble_versions: dict[str, int] = {}   # acked spec versions
         self.last_rx = time.monotonic()      # newest frame from the worker
         self._slow_inflight = 0   # publish/warmup/drain calls in flight:
         # the worker's recv loop is busy, so a quiet wire is NOT a crash
@@ -678,6 +696,15 @@ class RemoteShard:
         v = self._call({"op": "publish", "model": model_key,
                         "ckpt": ckpt}, timeout=300.0, slow=True)["version"]
         self.versions[model_key] = v
+        return v
+
+    def publish_ensemble(self, name: str, spec_wire: dict,
+                         version: int) -> int:
+        """Sync an ensemble spec (members/fusion knobs, not weights)."""
+        v = self._call({"op": "ensemble", "name": name,
+                        "spec": spec_wire, "version": version},
+                       timeout=60.0)["version"]
+        self.ensemble_versions[name] = v
         return v
 
     def stats(self) -> dict:
@@ -918,8 +945,12 @@ class MultiProcessServingEngine:
             with self._lock:
                 for key in self.registry.keys():
                     self._push_locked(key, force=True)
+                for name in self._ensemble_names():
+                    self._push_ensemble_locked(name)
                 if not self._attached:
                     self.registry.subscribe(self._on_publish)
+                    if hasattr(self.registry, "subscribe_ensembles"):
+                        self.registry.subscribe_ensembles(self._on_ensemble)
                     self._attached = True
         if self.supervise and self._supervisor is None:
             self._sup_stop.clear()
@@ -940,6 +971,9 @@ class MultiProcessServingEngine:
             with self._lock, self._route_lock:
                 if self._attached:
                     self.registry.unsubscribe(self._on_publish)
+                    if hasattr(self.registry, "unsubscribe_ensembles"):
+                        self.registry.unsubscribe_ensembles(
+                            self._on_ensemble)
                     self._attached = False
                 workers, self.workers = dict(self.workers), {}
                 # keep the fleet's last acked versions observable after
@@ -1048,6 +1082,32 @@ class MultiProcessServingEngine:
                 self._push_locked(key)
             return v
 
+    # ensemble specs ride the same facade shape: register/swap on the
+    # primary, push to every worker atomically under the push lock (the
+    # subscription fires with the RLock held, like model publishes)
+    def register_ensemble(self, name: str, members, **opts):
+        with self._lock:
+            spec = self.registry.register_ensemble(name, members, **opts)
+            if not self._attached:
+                self._push_ensemble_locked(name)
+            return spec
+
+    def swap_ensemble(self, name: str, members, **opts) -> int:
+        with self._lock:
+            v = self.registry.swap_ensemble(name, members, **opts)
+            if not self._attached:
+                self._push_ensemble_locked(name)
+            return v
+
+    def ensemble(self, name: str):
+        return self.registry.ensemble(name)
+
+    def ensembles(self) -> dict:
+        return self.registry.ensembles()
+
+    def ensemble_version(self, name: str) -> int:
+        return self.registry.ensemble_version(name)
+
     def get(self, key: str):
         return self.registry.get(key)
 
@@ -1093,12 +1153,52 @@ class MultiProcessServingEngine:
                 pushed += 1
         return pushed
 
+    def _ensemble_names(self) -> list[str]:
+        lister = getattr(self.registry, "ensembles", None)
+        return lister() if lister is not None else []
+
+    def _on_ensemble(self, name: str, spec, version: int) -> None:
+        with self._lock:
+            self._push_ensemble_locked(name)
+
+    def _push_ensemble_locked(self, name: str, force: bool = False) -> int:
+        spec = self.registry.ensemble(name)
+        if spec is None:
+            return 0
+        version = self.registry.ensemble_version(name)
+        wire = spec.to_wire()
+        pushed = 0
+        for worker in self.workers.values():
+            have = worker.ensemble_versions.get(name)
+            if not force and have is not None and have >= version:
+                continue
+            try:
+                worker.publish_ensemble(name, wire, version)
+            except ConnectionError:
+                continue   # supervisor repairs it; rejoin re-pushes
+            pushed += 1
+        return pushed
+
     def propagate(self, key: str | None = None) -> int:
         """Push every worker up to the primary's newest version for
-        ``key`` (or all keys); returns the number of pushes."""
+        ``key`` (or all keys); returns the number of pushes. An
+        ensemble name resolves to its members' weights plus the spec
+        itself (specs live in their own namespace, not the weight
+        store, so ``_push_locked`` must never see one)."""
         with self._lock:
+            spec = (self.registry.ensemble(key)
+                    if key is not None and hasattr(self.registry,
+                                                   "ensemble") else None)
+            if spec is not None:
+                n = sum(self._push_locked(m, force=True)
+                        for m in spec.members)
+                return n + self._push_ensemble_locked(key, force=True)
             keys = [key] if key is not None else self.registry.keys()
-            return sum(self._push_locked(k, force=True) for k in keys)
+            n = sum(self._push_locked(k, force=True) for k in keys)
+            if key is None:
+                n += sum(self._push_ensemble_locked(name, force=True)
+                         for name in self._ensemble_names())
+            return n
 
     def version_vector(self, key: str) -> dict:
         """Atomic fleet snapshot {"primary": v, sid: acked_v, ...} —
@@ -1215,6 +1315,12 @@ class MultiProcessServingEngine:
                 worker.publish(key, blob)
                 self.pulls += 1
                 self.bytes_pulled += len(blob)
+            # specs before the warm plan: warming an ensemble name on
+            # the far side needs the spec installed there first
+            for name in self._ensemble_names():
+                worker.publish_ensemble(
+                    name, self.registry.ensemble(name).to_wire(),
+                    self.registry.ensemble_version(name))
             for model_key, lengths in list(self._warm_plan.items()):
                 worker.warmup(model_key, lengths=lengths)
         except Exception:
@@ -1225,6 +1331,8 @@ class MultiProcessServingEngine:
             for key in self.registry.keys():
                 self._push_locked(key, force=True)  # catch up any
                 # publish that raced the spawn, before taking traffic
+            for name in self._ensemble_names():
+                self._push_ensemble_locked(name)
             self.router.add_shard(sid)
         # migrate exactly the sessions the new shard wins, OUTSIDE
         # the locks (per-session RPCs must not stall the fleet's

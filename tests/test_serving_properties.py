@@ -578,3 +578,100 @@ def test_telemetry_merge_laws(shards):
     lookups = hits + sum(ev["misses"] for ev in shards)
     assert merged["cache_hit_rate"] == pytest.approx(
         hits / lookups if lookups else 0.0)
+
+
+# -- ensemble fusion laws ----------------------------------------------------
+
+_ANY_FLOATS = st.floats(allow_nan=True, allow_infinity=True, width=64)
+
+
+@given(st.integers(1, 6), st.data())
+@settings(deadline=None)
+def test_fusion_weights_convex_for_any_history(n, data):
+    """Fusion weights are a convex combination for ANY priors/errors —
+    nan, inf, negative, zero — and a single member always gets exactly
+    weight 1.0."""
+    from repro.serving import fusion_weights
+
+    priors = data.draw(st.lists(_ANY_FLOATS, min_size=n, max_size=n))
+    errors = data.draw(st.lists(_ANY_FLOATS, min_size=n, max_size=n))
+    temp = data.draw(_ANY_FLOATS)
+    w = fusion_weights(priors, errors, temperature=temp)
+    assert w.shape == (n,)
+    assert np.all(np.isfinite(w)) and np.all(w >= 0.0)
+    assert np.isclose(w.sum(), 1.0, atol=1e-12)
+    if n == 1:
+        assert w[0] == 1.0
+
+
+@given(st.integers(2, 4), st.lists(
+    st.lists(_ANY_FLOATS, min_size=2, max_size=4), max_size=8),
+    st.data())
+@settings(deadline=None)
+def test_fuser_weights_convex_under_arbitrary_error_updates(
+        n, histories, data):
+    """The rolling-error EWMA keeps the online weights convex no matter
+    what error sequences arrive (supervised updates with nan/inf
+    included)."""
+    from repro.serving import EnsembleFuser, EnsembleSpec
+
+    spec = EnsembleSpec(
+        members=tuple(f"m{i}" for i in range(n)),
+        error_half_life=data.draw(st.floats(0.1, 256.0)),
+        temperature=data.draw(st.floats(0.01, 16.0)))
+    fuser = EnsembleFuser(n, spec)
+    for errs in histories:
+        errs = (errs + [0.0] * n)[:n]
+        fuser.record_errors(errs)
+        w = fuser.weights()
+        assert np.all(np.isfinite(w)) and np.all(w >= 0.0)
+        assert np.isclose(w.sum(), 1.0, atol=1e-12)
+        assert np.all(np.isfinite(fuser.errors()))
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(1, 4))
+@settings(deadline=None, max_examples=25)
+def test_singleton_ensemble_bitwise_equals_member(forecaster, seed,
+                                                  n_steps):
+    """A single-member EnsembleForecaster is bitwise-identical to the
+    member served solo on every path: step chains, replay, and the
+    slotted decode lifecycle (insert -> generate -> extract)."""
+    from repro.serving import EnsembleForecaster
+
+    reg = ModelRegistry()
+    reg.register("m", forecaster)
+    reg.register_ensemble("solo", ["m"])
+    ens = EnsembleForecaster(reg, "solo")
+    rng = np.random.default_rng(seed)
+    xs = rng.standard_normal((n_steps, 1, CFG.input_dim)).astype(
+        np.float32) * 0.02
+    win = rng.standard_normal((1, CFG.window, CFG.input_dim)).astype(
+        np.float32) * 0.02
+
+    # step chain
+    c_m, c_e = forecaster.init_carry(), ens.init_carry()
+    for t in range(n_steps):
+        y_m, p_m, c_m = forecaster.step(xs[t], c_m)
+        y_e, p_e, c_e = ens.step(xs[t], c_e)
+        assert np.array_equal(y_m, y_e) and np.array_equal(p_m, p_e)
+    # replay
+    ry_m, rp_m, rc_m = forecaster.replay(win)
+    ry_e, rp_e, rc_e = ens.replay(win)
+    assert np.array_equal(ry_m, ry_e) and np.array_equal(rp_m, rp_e)
+    # slots lifecycle, from the replayed carries
+    s_m, s_e = forecaster.init_slots(4), ens.init_slots(4)
+    forecaster.insert(s_m, 1, rc_m)
+    ens.insert(s_e, 1, {"m": rc_m})
+    for t in range(n_steps):
+        x_m = np.zeros((s_m.num_slots, CFG.input_dim), np.float32)
+        x_m[1] = xs[t][0]
+        gy_m, gp_m, _ = forecaster.generate(s_m, x_m, lanes=[1])
+        gy_e, gp_e, _ = ens.generate(
+            s_e, x_m[:s_e.num_slots], lanes=[1])
+        assert np.asarray(gy_m)[1] == np.asarray(gy_e)[1]
+        assert np.asarray(gp_m)[1] == np.asarray(gp_e)[1]
+    out_m = forecaster.extract(s_m, 1)
+    out_e = ens.extract(s_e, 1)
+    for (h_m, c2_m), (h_e, c2_e) in zip(out_m, out_e["m"]):
+        assert np.array_equal(np.asarray(h_m), np.asarray(h_e))
+        assert np.array_equal(np.asarray(c2_m), np.asarray(c2_e))
