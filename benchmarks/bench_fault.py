@@ -4,7 +4,7 @@ latency, fail-fast time for the victim's in-flight requests, supervised
 respawn time, re-homed session count — and hard-assert the recovery
 guarantees the tests promise, at bench scale.
 
-Two phases over the same (reduced) paper-LSTM model on a 2-process
+Three phases over the same (reduced) paper-LSTM model on a 2-process
 mesh with a fast heartbeat:
 
   steady  — mixed submit/step traffic against the healthy fleet; the
@@ -15,11 +15,20 @@ mesh with a fast heartbeat:
             timeout), the surviving shard drops ZERO requests (hard
             assert), the supervisor respawns the shard (recovery time
             reported) and post-recovery traffic reaches the replacement
-            (hard assert via respawn counter + serving pids).
+            (hard assert via respawn counter + serving pids);
+  restart — durable-state whole-fleet restart (ISSUE 10): traffic
+            with a running ``CheckpointDaemon`` must cost <= 5% rps
+            against the same mesh without one (hard assert), then the
+            WHOLE fleet is SIGKILLed and a fresh mesh boots from the
+            ``DurableStore`` — restore time, resumed session count and
+            stale re-primes reported; the restored weight version and
+            session counts are hard-asserted.
 
 Rows: ``fault/steady,us_per_request,rps=..``,
 ``fault/crash,0,detect_ms=..;recover_s=..;failed_fast=..;max_fail_ms=..;
-survivor_drops=0;rehomed=..;crashes=1;respawns=1``.
+survivor_drops=0;rehomed=..;crashes=1;respawns=1``,
+``fault/restart,0,baseline_rps=..;ckpt_rps=..;ckpt_cost_pct=..;
+restore_s=..;resumed_sessions=..;reprimed_sessions=..``.
 """
 
 from __future__ import annotations
@@ -231,6 +240,117 @@ def main(smoke: bool = False) -> None:
             f"max_fail_ms={max_fail_ms:.0f};"
             f"survivor_drops=0;rehomed={respawn_ev.get('rehomed', 0)};"
             f"crashes={snap['crashes']};respawns={snap['respawns']}")
+
+    _restart_phase(smoke)
+
+
+def _restart_phase(smoke: bool) -> None:
+    """Durable-state restart: checkpointing overhead vs an identical
+    uncheckpointed mesh (hard assert <= 5% rps cost), then a whole-fleet
+    SIGKILL and a timed cold boot from the store."""
+    import shutil
+    import tempfile
+
+    import jax
+
+    from repro.models.rnn import init_rnn
+    from repro.serving import (BatcherConfig, LSTMForecaster, ModelRegistry,
+                               MultiProcessServingEngine)
+    from repro.serving.durable import CheckpointDaemon, DurableStore
+
+    cfg, fc, rng = _model(smoke)
+    n_requests = 150 if smoke else 600
+    wins = rng.standard_normal(
+        (64, cfg.window, cfg.input_dim)).astype(np.float32) * 0.02
+    clients = [f"c{i}" for i in range(16)]
+    bcfg = BatcherConfig(max_batch=8, max_wait_ms=2.0,
+                         length_buckets=(cfg.window,))
+    tmp = tempfile.mkdtemp(prefix="bench-durable-")
+    try:
+        store = DurableStore(tmp, keep_last=3)
+        reg = ModelRegistry()
+        reg.register("m", fc)
+        mesh = MultiProcessServingEngine(reg, bcfg, n_shards=2,
+                                         supervise=False, durable=store)
+        mesh.start()
+        try:
+            mesh.warmup("m", lengths=(cfg.window,))
+
+            def burst() -> float:
+                t0 = time.perf_counter()
+                futs = [mesh.submit("m", wins[i % len(wins)],
+                                    client_id=clients[i % len(clients)])
+                        for i in range(n_requests)]
+                for f in futs:
+                    f.result(timeout=60.0)
+                return n_requests / (time.perf_counter() - t0)
+
+            burst()                                 # warm both shards
+            baseline_rps = max(burst() for _ in range(2))
+            daemon = CheckpointDaemon(store, mesh, interval_s=0.25)
+            daemon.start()
+            ckpt_rps = max(burst() for _ in range(2))
+            cost_pct = (1.0 - ckpt_rps / baseline_rps) * 100.0
+            assert ckpt_rps >= 0.95 * baseline_rps, \
+                (f"checkpointing cost too high: {baseline_rps:.0f} -> "
+                 f"{ckpt_rps:.0f} rps ({cost_pct:.1f}%)")
+
+            # streaming sessions: half created BEFORE a weight swap
+            # (their checkpointed carries go stale), half after
+            stale_c, fresh_c = clients[:4], clients[4:8]
+            half = cfg.window // 2
+            for c in stale_c:
+                for t in range(half):
+                    mesh.step("m", c, wins[0][t])
+            daemon.checkpoint_now()
+            fc2 = LSTMForecaster(
+                cfg=cfg, params=init_rnn(jax.random.PRNGKey(1), cfg))
+            fc2.calibrate(rng.standard_normal(
+                (64, cfg.window, cfg.input_dim)).astype(np.float32) * 0.02)
+            mesh.swap("m", fc2)
+            mesh.propagate("m")
+            for c in fresh_c:
+                for t in range(half):
+                    mesh.step("m", c, wins[1][t])
+            daemon.checkpoint_now()
+            daemon.stop()
+
+            # whole-fleet loss: SIGKILL every worker (supervision is
+            # off, so nothing comes back on its own)
+            for w in mesh.workers.values():
+                os.kill(w.process.pid, signal.SIGKILL)
+        finally:
+            try:
+                mesh.stop()
+            except Exception:  # noqa: BLE001 — the fleet is dead
+                pass
+
+        # cold boot: fresh registry + mesh, restore from the store
+        reg2 = ModelRegistry()
+        mesh2 = MultiProcessServingEngine(reg2, bcfg, n_shards=2,
+                                          supervise=False)
+        with mesh2:
+            t0 = time.perf_counter()
+            out = mesh2.restore_from(DurableStore(tmp, keep_last=3))
+            restore_s = time.perf_counter() - t0
+            assert reg2.version("m") == 2, reg2.version("m")
+            assert out["restored_sessions"] == 8, out
+            assert out["restored_stale"] == 4, out
+            # restored streams serve: fresh resume in place, stale
+            # re-prime from history on their next step
+            for c in fresh_c:
+                mesh2.step("m", c, wins[1][half])
+            for c in stale_c:
+                mesh2.step("m", c, wins[0][half], history=wins[0][:half])
+            reprimed = mesh2.snapshot()["reprimes"]
+            assert reprimed >= len(stale_c), reprimed
+        row("fault/restart", 0.0,
+            f"baseline_rps={baseline_rps:.0f};ckpt_rps={ckpt_rps:.0f};"
+            f"ckpt_cost_pct={cost_pct:.1f};restore_s={restore_s:.3f};"
+            f"resumed_sessions={out['restored_sessions']};"
+            f"reprimed_sessions={out['restored_stale']}")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
 
 
 if __name__ == "__main__":

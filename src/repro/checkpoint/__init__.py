@@ -1,3 +1,4 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint
+from repro.checkpoint.io import (CheckpointCorruptError, load_checkpoint,
+                                 save_checkpoint)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["CheckpointCorruptError", "load_checkpoint", "save_checkpoint"]

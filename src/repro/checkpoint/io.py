@@ -1,12 +1,18 @@
 """Checkpointing: npz tensor store + msgpack metadata (no orbax offline).
 
 Pytrees are flattened with '/'-joined key paths; arbitrary (non-array)
-metadata rides along in a msgpack blob. Atomic via tmp-file + rename.
+metadata rides along in a msgpack blob. Saves are crash-atomic: the
+bytes are written to a tmp file, fsync'd, renamed over the target, and
+the directory entry fsync'd — a crash mid-save can tear the tmp file
+but never the checkpoint a later ``load_checkpoint`` trusts. Loads
+raise ``CheckpointCorruptError`` (naming the path) on torn/truncated
+files instead of leaking numpy zip internals.
 """
 
 from __future__ import annotations
 
 import os
+import zipfile
 from typing import Any
 
 import jax
@@ -16,6 +22,11 @@ import numpy as np
 PyTree = Any
 _META_KEY = "__repro_meta__"
 _DTYPES_KEY = "__dtypes__"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint file failed to parse — torn write, truncation, or
+    not a checkpoint at all."""
 
 # numpy's savez cannot serialize ml_dtypes (bfloat16 etc.); store them as
 # a same-width unsigned view and record the true dtype in the metadata.
@@ -80,7 +91,22 @@ def save_checkpoint(path: str, tree: PyTree,
     tmp = path + ".tmp"
     np.savez(tmp, **flat)
     # np.savez appends .npz to the filename it is given
-    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    tmp = tmp + ".npz" if not tmp.endswith(".npz") else tmp
+    # fsync BEFORE the rename: os.replace is atomic in the namespace,
+    # but renaming a file whose bytes are still in the page cache can
+    # surface as a zero-length/torn target after a power cut — exactly
+    # the torn-checkpoint a later load would otherwise trust
+    fd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    os.replace(tmp, path)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)          # persist the rename itself
+    finally:
+        os.close(dfd)
 
 
 def dump_checkpoint_bytes(tree: PyTree,
@@ -99,9 +125,15 @@ def load_checkpoint(path: str, like: PyTree | None = None
                     ) -> tuple[PyTree | dict[str, np.ndarray], dict | None]:
     """Load a checkpoint. With ``like`` (a pytree of the target structure)
     the arrays are re-assembled into that structure; otherwise the flat
-    {path: array} dict is returned. Returns (tree_or_flat, metadata)."""
-    with np.load(path, allow_pickle=False) as z:
-        flat = {k: z[k] for k in z.files}
+    {path: array} dict is returned. Returns (tree_or_flat, metadata).
+    Raises ``CheckpointCorruptError`` on a torn/truncated file."""
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files}
+    except (ValueError, OSError, EOFError, zipfile.BadZipFile) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint {path!r} is corrupt or truncated "
+            f"({type(e).__name__}: {e})") from e
     flat, meta = _unpack(flat)
     if like is None:
         return flat, meta
@@ -112,11 +144,17 @@ def load_checkpoint_bytes(data: bytes, like: PyTree | None = None
                           ) -> tuple[PyTree | dict[str, np.ndarray],
                                      dict | None]:
     """``load_checkpoint`` for in-memory npz bytes (the output of
-    ``dump_checkpoint_bytes``)."""
+    ``dump_checkpoint_bytes``). Raises ``CheckpointCorruptError`` on
+    torn/truncated bytes."""
     import io
 
-    with np.load(io.BytesIO(data), allow_pickle=False) as z:
-        flat = {k: z[k] for k in z.files}
+    try:
+        with np.load(io.BytesIO(data), allow_pickle=False) as z:
+            flat = {k: z[k] for k in z.files}
+    except (ValueError, OSError, EOFError, zipfile.BadZipFile) as e:
+        raise CheckpointCorruptError(
+            f"checkpoint bytes ({len(data)}B) are corrupt or truncated "
+            f"({type(e).__name__}: {e})") from e
     flat, meta = _unpack(flat)
     if like is None:
         return flat, meta

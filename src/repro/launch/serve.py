@@ -14,6 +14,12 @@ many-client traffic trace against it.
     # transport between router and workers)
     PYTHONPATH=src python -m repro.launch.serve --shards 2 --processes
 
+    # durable state plane: publishes + periodic async session
+    # checkpoints land under ./state; a later run with the same
+    # --state-dir cold-restarts the fleet from the last good manifest
+    PYTHONPATH=src python -m repro.launch.serve --shards 2 --processes \
+        --state-dir ./state --checkpoint-interval-s 2
+
     # host a REAL trained checkpoint (from `-m repro.launch.train
     # --save ckpt.npz`) and score its extreme alerts against the
     # synthetic labels
@@ -84,6 +90,20 @@ def main(argv: list[str] | None = None) -> None:
                     help="process-mesh supervision heartbeat interval "
                     "(crashed workers are detected within "
                     "heartbeat * 4 and respawned)")
+    ap.add_argument("--state-dir", default=None, metavar="DIR",
+                    help="durable state plane: DurableStore root. Every "
+                    "publish lands there before acknowledgement; with "
+                    "--processes the mesh also cold-restarts from the "
+                    "last good checkpoint (weights, ensemble specs, "
+                    "session carries) and a CheckpointDaemon snapshots "
+                    "periodically off the hot path")
+    ap.add_argument("--checkpoint-interval-s", type=float, default=5.0,
+                    help="async checkpoint period for --state-dir "
+                    "(a final checkpoint is always taken at shutdown)")
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="checkpoint retention for --state-dir: keep "
+                    "this many manifests (older ones + unreferenced "
+                    "blobs are garbage-collected)")
     ap.add_argument("--max-skew", type=int, default=1,
                     help="mesh swap-propagation staleness bound "
                     "(versions a shard may lag the primary)")
@@ -121,11 +141,14 @@ def main(argv: list[str] | None = None) -> None:
     args = ap.parse_args(argv)
 
     from repro.obs import EventLog, MetricsServer, Tracer
-    from repro.serving import (BatcherConfig, ModelRegistry,
+    from repro.serving import (BatcherConfig, CheckpointDaemon,
+                               DurableStore, ModelRegistry,
                                MultiProcessServingEngine, ServingEngine,
                                ShardedServingEngine, Telemetry,
                                build_lstm_forecaster, build_zoo_forecaster)
 
+    store = (DurableStore(args.state_dir, keep_last=args.keep_last)
+             if args.state_dir else None)
     registry = ModelRegistry()
     if args.checkpoint:
         fc = registry.load(args.checkpoint, key=args.model)
@@ -193,12 +216,18 @@ def main(argv: list[str] | None = None) -> None:
                                            max_skew=args.max_skew,
                                            tracer=tracer,
                                            heartbeat_s=args.heartbeat_s,
-                                           events=events)
+                                           events=events,
+                                           durable=store)
     elif args.shards > 1:
+        if store is not None:
+            registry.attach_durable(store)   # weights durable; the
+            # session/restart plane needs the process mesh (--processes)
         engine = ShardedServingEngine(registry, cfg, n_shards=args.shards,
                                       max_skew=args.max_skew,
                                       tracer=tracer)
     else:
+        if store is not None:
+            registry.attach_durable(store)
         engine = ServingEngine(registry, cfg, tracer=tracer)
 
     is_mesh = args.shards > 1 or bool(args.connect)
@@ -225,6 +254,19 @@ def main(argv: list[str] | None = None) -> None:
         for addr in args.connect:
             sid = engine.connect_shard(addr)
             print(f"joined remote shard worker {addr} as shard {sid}")
+        daemon = None
+        if store is not None and isinstance(engine,
+                                            MultiProcessServingEngine):
+            restored = engine.restore_from(store)
+            if restored["seq"] is not None:
+                print(f"durable restore from {args.state_dir} (manifest "
+                      f"{restored['seq']}): models {restored['models']}, "
+                      f"{restored['restored_sessions']} sessions resumed"
+                      f" ({restored['restored_stale']} stale ->"
+                      f" history re-prime)")
+            daemon = CheckpointDaemon(
+                store, engine, interval_s=args.checkpoint_interval_s,
+                events=events).start()
         engine.warmup(serve_key, lengths=lengths)
         if is_mesh:
             engine.reset_clock()
@@ -301,6 +343,13 @@ def main(argv: list[str] | None = None) -> None:
                 events.log("snapshot", phase="sessions", wall_s=wall_s,
                            **{k: v for k, v in ssnap.items()
                               if isinstance(v, (int, float, bool))})
+        if daemon is not None:
+            # one last synchronous snapshot: a clean shutdown is as
+            # durable as a crash-with-checkpoint, so the next
+            # `--state-dir` run resumes every stream
+            daemon.stop(final_checkpoint=True)
+            print(f"durable: {daemon.commits} checkpoint commits to "
+                  f"{args.state_dir} (last manifest {daemon.last_seq})")
 
     alert_mask = np.asarray([p >= args.alert_threshold
                              for _, p in results], dtype=bool)

@@ -36,6 +36,11 @@ def main(argv=None) -> int:
     ap.add_argument("--forever", action="store_true",
                     help="keep serving across router connections "
                          "instead of exiting after the first one")
+    ap.add_argument("--state-dir", default=None, metavar="DIR",
+                    help="DurableStore root (shared with the router's "
+                         "--state-dir): a cold worker restart primes "
+                         "its weight replicas from the last good "
+                         "checkpoint before the router re-adopts it")
     args = ap.parse_args(argv)
 
     from repro.serving.transport import serve_shard
@@ -47,7 +52,7 @@ def main(argv=None) -> int:
 
     try:
         serve_shard(args.host, args.port, forever=args.forever,
-                    on_bound=_report)
+                    on_bound=_report, state_dir=args.state_dir)
     except KeyboardInterrupt:
         pass
     return 0

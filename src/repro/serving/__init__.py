@@ -57,6 +57,16 @@ Layout (DESIGN: one concern per module):
                     ``connect_shard``) and are heartbeat-supervised —
                     a SIGKILLed worker is detected, its futures failed
                     fast, and a local replacement respawned in place;
+- ``durable.py``    durable state plane: ``DurableStore`` is a
+                    content-addressed, atomic-rename, fsync'd blob +
+                    manifest layout (torn writes detected by checksum,
+                    keep-last-K retention, monotone version merge);
+                    ``CheckpointDaemon`` snapshots session carries and
+                    weight versions off the hot path; ``restore_from``
+                    on the mesh cold-boots the fleet back to the last
+                    acknowledged publish and re-homes checkpointed
+                    carries (bitwise where fresh, history re-prime
+                    where stale);
 - ``telemetry.py``  latency percentiles, throughput, batch occupancy,
                     cache hit-rate, swap count, staleness at serve time,
                     per-version request counts, slot insert/spill
@@ -64,6 +74,8 @@ Layout (DESIGN: one concern per module):
                     ``merge``.
 """
 
+from repro.serving.durable import (CheckpointDaemon, DurableStore,
+                                   DurableStoreError, restore_registry)
 from repro.serving.engine import BatcherConfig, EngineShard, ServingEngine
 from repro.serving.ensemble import (EnsembleForecaster, EnsembleFuser,
                                     EnsembleSlots, EnsembleSpec,
@@ -84,8 +96,11 @@ from repro.serving.transport import (MultiProcessServingEngine, RemoteShard,
 
 __all__ = [
     "BatcherConfig",
+    "CheckpointDaemon",
     "ConsistentRouter",
     "DecodeSlots",
+    "DurableStore",
+    "DurableStoreError",
     "EngineShard",
     "EnsembleForecaster",
     "EnsembleFuser",
@@ -111,6 +126,7 @@ __all__ = [
     "build_zoo_forecaster",
     "connect_shard",
     "fusion_weights",
+    "restore_registry",
     "serve_shard",
     "spawn_shard",
     "stop_the_world_swap",

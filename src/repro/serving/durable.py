@@ -1,0 +1,462 @@
+"""Durable state plane: a content-addressed checkpoint store plus an
+async checkpoint daemon, so a cold fleet restart (or a partitioned
+worker re-adopted later) resumes streams instead of re-priming them.
+
+``DurableStore`` is a crash-safe directory store:
+
+- **blobs/** holds content-addressed payloads (weight checkpoints,
+  packed session-carry frames) named by their sha256; a blob reference
+  is the string ``"sha256:<hex>"`` and readers re-hash on ``get_blob``,
+  so a torn or corrupted blob is detected, never trusted.
+- **manifests/** holds numbered snapshots of the fleet state (hosted
+  model versions + weight refs, ensemble specs, session frames).  Each
+  manifest file carries its own checksum line; writes go through
+  temp-file + ``fsync`` + ``os.replace`` (and a directory fsync), so a
+  crash mid-commit leaves the previous manifest intact and ``latest``
+  simply skips anything torn.
+- **retention** keeps the newest ``keep_last`` manifests and
+  garbage-collects blobs no kept manifest references.
+
+Commits MERGE into the newest state: a publish-time commit updates one
+model entry without touching the session section, a daemon commit
+replaces the session section wholesale.  Versioned entries (models,
+ensemble specs) merge monotonically — an older version can never
+overwrite a newer one, which is what makes the restore law ("never
+resurrect a version older than the last acknowledged publish") hold
+under arbitrary publish/checkpoint interleavings.
+
+``CheckpointDaemon`` drives periodic snapshots off the hot path: it
+calls ``source.checkpoint_state(store, weight_refs)`` (the process
+mesh implements it — session carries come from the workers'
+non-destructive ``snapshot`` frames, weights are serialized only when
+their version moved) on a daemon thread and commits the result.  A
+failed snapshot is counted and retried next interval; it never stops
+the daemon and never blocks a serving flush.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from typing import Any
+
+import msgpack
+
+__all__ = ["DurableStore", "DurableStoreError", "CheckpointDaemon",
+           "restore_registry", "pack_session_frame",
+           "unpack_session_frame"]
+
+_BLOB_PREFIX = "sha256:"
+_MANIFEST_SUFFIX = ".manifest"
+
+
+class DurableStoreError(RuntimeError):
+    """A blob or manifest failed its integrity check (torn write,
+    bit rot, or a reference into a pruned store)."""
+
+
+def _fsync_dir(path: str) -> None:
+    # directory fsync makes the rename itself durable (POSIX); some
+    # filesystems refuse O_RDONLY dir fsync — crash-safety degrades
+    # gracefully there (the rename is still atomic)
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """Write ``data`` so that ``path`` either keeps its old content or
+    holds all of the new — never a torn mix: temp file in the same
+    directory, flush + fsync, atomic ``os.replace``, directory fsync."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+def _collect_refs(state: Any, out: set[str]) -> None:
+    if isinstance(state, str):
+        if state.startswith(_BLOB_PREFIX):
+            out.add(state)
+    elif isinstance(state, dict):
+        for v in state.values():
+            _collect_refs(v, out)
+    elif isinstance(state, (list, tuple)):
+        for v in state:
+            _collect_refs(v, out)
+
+
+def _merge_entry(old: Any, new: Any) -> Any:
+    """Versioned entries merge monotonically: whichever side carries
+    the higher ``version`` wins (ties go to the newer commit)."""
+    if isinstance(old, dict) and isinstance(new, dict) \
+            and "version" in old and "version" in new \
+            and int(old["version"]) > int(new["version"]):
+        return old
+    return new
+
+
+def _merge_state(old: dict, new: dict) -> dict:
+    """Two-level merge: top-level sections whose old AND new values are
+    dicts merge per-key (monotone on versioned entries); anything else
+    is replaced by the new commit."""
+    merged = dict(old)
+    for section, value in new.items():
+        have = merged.get(section)
+        if isinstance(have, dict) and isinstance(value, dict):
+            sec = dict(have)
+            for k, v in value.items():
+                sec[k] = _merge_entry(sec[k], v) if k in sec else v
+            merged[section] = sec
+        else:
+            merged[section] = value
+    return merged
+
+
+class DurableStore:
+    """Content-addressed, atomic-rename, fsync'd checkpoint store.
+
+    Layout under ``root``::
+
+        blobs/<sha256-hex>             content-addressed payloads
+        manifests/<seq>.manifest       checksummed state snapshots
+
+    Thread-safe: commits serialize under one lock; ``put_blob`` may run
+    concurrently (a blob written but not yet referenced by a manifest
+    is protected from garbage collection until its commit lands).
+    """
+
+    def __init__(self, root: str, keep_last: int = 3):
+        if keep_last < 1:
+            raise ValueError("keep_last must be >= 1")
+        self.root = str(root)
+        self.keep_last = keep_last
+        self.blob_dir = os.path.join(self.root, "blobs")
+        self.manifest_dir = os.path.join(self.root, "manifests")
+        os.makedirs(self.blob_dir, exist_ok=True)
+        os.makedirs(self.manifest_dir, exist_ok=True)
+        self._lock = threading.Lock()
+        # blobs written ahead of their manifest: GC must not reap them
+        self._protected: set[str] = set()
+        self.commits = 0
+        self.blobs_written = 0
+        self.blobs_deduped = 0
+
+    # -- blobs -------------------------------------------------------------
+    def _blob_path(self, ref: str) -> str:
+        if not ref.startswith(_BLOB_PREFIX):
+            raise ValueError(f"not a blob reference: {ref!r}")
+        digest = ref[len(_BLOB_PREFIX):]
+        if len(digest) != 64 or not all(c in "0123456789abcdef"
+                                        for c in digest):
+            raise ValueError(f"malformed blob reference: {ref!r}")
+        return os.path.join(self.blob_dir, digest)
+
+    def put_blob(self, data: bytes) -> str:
+        """Store ``data`` content-addressed; returns its reference.
+        Identical content is written once (dedup by digest)."""
+        ref = _BLOB_PREFIX + hashlib.sha256(data).hexdigest()
+        path = self._blob_path(ref)
+        with self._lock:
+            self._protected.add(ref)
+        if os.path.exists(path):
+            self.blobs_deduped += 1
+            return ref
+        _atomic_write(path, data)
+        self.blobs_written += 1
+        return ref
+
+    def has_blob(self, ref: str) -> bool:
+        try:
+            return os.path.exists(self._blob_path(ref))
+        except ValueError:
+            return False
+
+    def get_blob(self, ref: str) -> bytes:
+        """Read and VERIFY a blob — the content must hash back to its
+        own name, so torn writes and bit rot surface as
+        ``DurableStoreError`` instead of garbage weights."""
+        path = self._blob_path(ref)
+        try:
+            with open(path, "rb") as f:
+                data = f.read()
+        except OSError as e:
+            raise DurableStoreError(f"blob {ref} unreadable: {e}") from e
+        if _BLOB_PREFIX + hashlib.sha256(data).hexdigest() != ref:
+            raise DurableStoreError(
+                f"blob {ref} failed its checksum (torn write or "
+                f"corruption); refusing to trust it")
+        return data
+
+    # -- manifests ---------------------------------------------------------
+    def _manifest_path(self, seq: int) -> str:
+        return os.path.join(self.manifest_dir,
+                            f"{seq:012d}{_MANIFEST_SUFFIX}")
+
+    def manifest_seqs(self) -> list[int]:
+        """Sequence numbers of the manifests on disk, ascending."""
+        out = []
+        for name in os.listdir(self.manifest_dir):
+            if name.endswith(_MANIFEST_SUFFIX):
+                try:
+                    out.append(int(name[:-len(_MANIFEST_SUFFIX)]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def _read_manifest(self, seq: int) -> dict | None:
+        """One manifest, checksum-verified; None when torn/corrupt."""
+        try:
+            with open(self._manifest_path(seq), "rb") as f:
+                raw = f.read()
+        except OSError:
+            return None
+        nl = raw.find(b"\n")
+        if nl != 64:
+            return None
+        checksum, payload = raw[:nl].decode("ascii", "replace"), raw[nl + 1:]
+        if hashlib.sha256(payload).hexdigest() != checksum:
+            return None
+        try:
+            doc = msgpack.unpackb(payload, raw=False, strict_map_key=False)
+        except Exception:  # noqa: BLE001 — corrupt payload == torn manifest
+            return None
+        if not isinstance(doc, dict) or doc.get("seq") != seq:
+            return None
+        return doc
+
+    def commit(self, state: dict) -> int:
+        """Merge ``state`` into the newest manifest and write the
+        result as a new one (see ``_merge_state`` for the monotone
+        merge law), then prune to ``keep_last`` manifests and
+        garbage-collect unreferenced blobs.  Returns the new sequence
+        number."""
+        with self._lock:
+            seqs = self.manifest_seqs()
+            base: dict = {}
+            for seq in reversed(seqs):
+                doc = self._read_manifest(seq)
+                if doc is not None:
+                    base = doc["state"]
+                    break
+            merged = _merge_state(base, state)
+            new_seq = (seqs[-1] + 1) if seqs else 1
+            payload = msgpack.packb({"seq": new_seq, "state": merged},
+                                    use_bin_type=True)
+            checksum = hashlib.sha256(payload).hexdigest().encode("ascii")
+            _atomic_write(self._manifest_path(new_seq),
+                          checksum + b"\n" + payload)
+            self.commits += 1
+            # everything the new manifest references is now
+            # manifest-protected; ahead-of-commit blobs from OTHER
+            # threads stay in self._protected until their commit lands
+            refs: set[str] = set()
+            _collect_refs(merged, refs)
+            self._protected -= refs
+            self._prune_locked(new_seq)
+            return new_seq
+
+    def _prune_locked(self, newest: int) -> None:
+        keep = [s for s in self.manifest_seqs() if s <= newest]
+        drop, keep = keep[:-self.keep_last], keep[-self.keep_last:]
+        for seq in drop:
+            try:
+                os.remove(self._manifest_path(seq))
+            except OSError:
+                pass
+        referenced: set[str] = set(self._protected)
+        for seq in keep:
+            doc = self._read_manifest(seq)
+            if doc is not None:
+                _collect_refs(doc["state"], referenced)
+        live = {ref[len(_BLOB_PREFIX):] for ref in referenced}
+        try:
+            on_disk = os.listdir(self.blob_dir)
+        except OSError:
+            return
+        for name in on_disk:
+            if name.endswith(".tmp") or name not in live:
+                try:
+                    os.remove(os.path.join(self.blob_dir, name))
+                except OSError:
+                    pass
+
+    def latest(self) -> tuple[int, dict] | None:
+        """The newest GOOD snapshot: (seq, state), skipping manifests
+        that fail their checksum or reference missing/corrupt blobs —
+        a crash mid-commit (or mid-prune) falls back to the previous
+        complete one.  None when the store holds no usable snapshot."""
+        for seq in reversed(self.manifest_seqs()):
+            doc = self._read_manifest(seq)
+            if doc is None:
+                continue
+            state = doc["state"]
+            refs: set[str] = set()
+            _collect_refs(state, refs)
+            try:
+                ok = all(
+                    _BLOB_PREFIX + hashlib.sha256(
+                        self.get_blob(ref)).hexdigest() == ref
+                    for ref in refs)
+            except DurableStoreError:
+                ok = False
+            if ok:
+                return seq, state
+        return None
+
+
+# -- session-frame codec -----------------------------------------------------
+
+def pack_session_frame(client_id: str, carry, nbytes: int,
+                       version: int) -> dict:
+    """One session as the SAME msgpack-able frame the transport ships
+    on migration (``restore`` op shape), so a checkpointed carry is
+    bitwise the one a live migration would have moved."""
+    from repro.serving.transport import _pack_carry
+
+    return {"client": client_id, "carry": _pack_carry(carry),
+            "nbytes": nbytes, "version": version}
+
+
+def unpack_session_frame(frame: dict):
+    """(client_id, carry, nbytes, version) from a packed frame."""
+    from repro.serving.transport import _unpack_carry
+
+    return (frame["client"], _unpack_carry(frame["carry"]),
+            frame["nbytes"], frame["version"])
+
+
+def pack_frames_blob(frames: list[dict]) -> bytes:
+    """All of one snapshot's session frames as a single blob payload
+    (content-addressing dedups identical snapshots wholesale)."""
+    return msgpack.packb({"sessions": frames}, use_bin_type=True)
+
+
+def unpack_frames_blob(data: bytes) -> list[dict]:
+    return msgpack.unpackb(data, raw=False,
+                           strict_map_key=False)["sessions"]
+
+
+# -- restore ----------------------------------------------------------------
+
+def restore_registry(store: DurableStore, registry,
+                     device_put: bool = False) -> dict | None:
+    """Re-install the store's newest good snapshot into ``registry``:
+    model weights at their saved versions (monotone — a registry that
+    already moved past a saved version keeps its newer one), then
+    ensemble specs (members restore first, so spec validation sees
+    them; stale spec versions are skipped).  Returns a summary with the
+    checkpointed ``session_frames`` for the caller to re-home, or None
+    when the store holds no usable snapshot."""
+    found = store.latest()
+    if found is None:
+        return None
+    seq, state = found
+    models: dict[str, int] = {}
+    for key, entry in sorted((state.get("models") or {}).items()):
+        registry.load_bytes(store.get_blob(entry["ref"]), key=key,
+                            device_put=device_put)
+        models[key] = registry.version(key)
+    ensembles: dict[str, int] = {}
+    for name, entry in sorted((state.get("ensembles") or {}).items()):
+        registry.install_ensemble(name, entry["spec"],
+                                  int(entry["version"]))
+        ensembles[name] = registry.ensemble_version(name)
+    frames: list[dict] = []
+    sessions = state.get("sessions") or {}
+    if sessions.get("ref"):
+        frames = unpack_frames_blob(store.get_blob(sessions["ref"]))
+    return {"seq": seq, "models": models, "ensembles": ensembles,
+            "session_frames": frames}
+
+
+# -- the async checkpoint daemon --------------------------------------------
+
+class CheckpointDaemon:
+    """Interval snapshots of a serving engine into a ``DurableStore``,
+    off the hot path.  ``source`` implements
+    ``checkpoint_state(store, weight_refs) -> dict | None`` (the
+    process mesh does); ``weight_refs`` is this daemon's
+    ``{key: (version, blob_ref)}`` memo so unchanged weight versions
+    are never re-serialized.  Snapshot failures are counted and
+    retried next interval — the daemon never raises into the engine
+    and never blocks a flush (the mesh's snapshot frames are
+    non-destructive reads)."""
+
+    def __init__(self, store: DurableStore, source,
+                 interval_s: float = 5.0, events=None):
+        if interval_s <= 0:
+            raise ValueError("interval_s must be > 0")
+        self.store = store
+        self.source = source
+        self.interval_s = interval_s
+        self.events = events             # repro.obs.EventLog | None
+        self.commits = 0
+        self.errors = 0
+        self.last_seq: int | None = None
+        self._weight_refs: dict[str, tuple[int, str]] = {}
+        self._thread: threading.Thread | None = None
+        self._stop = threading.Event()
+
+    def checkpoint_now(self) -> int | None:
+        """One synchronous snapshot + commit; returns the manifest
+        sequence number (None when the source had nothing to save)."""
+        state = self.source.checkpoint_state(self.store,
+                                             self._weight_refs)
+        if state is None:
+            return None
+        seq = self.store.commit(state)
+        self.commits += 1
+        self.last_seq = seq
+        if self.events is not None:
+            self.events.log("checkpoint_commit", seq=seq)
+        return seq
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.interval_s):
+            try:
+                self.checkpoint_now()
+            except Exception as e:  # noqa: BLE001 — the daemon survives
+                self.errors += 1
+                if self.events is not None:
+                    self.events.log(
+                        "checkpoint_error",
+                        error=f"{type(e).__name__}: {e}")
+
+    def start(self) -> "CheckpointDaemon":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="checkpoint-daemon", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, final_checkpoint: bool = False) -> None:
+        """Stop the interval loop; ``final_checkpoint=True`` takes one
+        last synchronous snapshot (clean-shutdown durability)."""
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
+        if final_checkpoint:
+            try:
+                self.checkpoint_now()
+            except Exception:  # noqa: BLE001 — best effort on the way out
+                self.errors += 1
+
+    def __enter__(self) -> "CheckpointDaemon":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

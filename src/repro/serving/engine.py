@@ -288,6 +288,16 @@ class EngineShard:
             runners = list(self._runners.values())
         return sum(r.spill(client_ids) for r in runners)
 
+    def snapshot_sessions(self, client_ids=None) -> list:
+        """Non-destructive snapshot of every live session on this
+        shard — the durable-checkpoint path.  Lane-resident carries
+        spill to the cache first (bitwise; the slot lock serializes
+        this against the flush thread, so no quiesce and no stalled
+        flush), then the cache is READ, not drained.  Returns
+        ``(client_id, carry, nbytes, version)`` tuples."""
+        self.spill_sessions(client_ids)
+        return self.sessions.snapshot(client_ids)
+
     def session_clients(self) -> list[str]:
         """Every client with live session state on this shard: spill
         tier (cache) plus lane-resident sessions."""

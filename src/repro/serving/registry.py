@@ -53,7 +53,7 @@ def _rnn_cfg_from_meta(m: dict) -> RNNConfig:
 class ModelRegistry:
     """Thread-safe name -> forecaster map used by the serving engine."""
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter, durable=None):
         self._lock = threading.Lock()
         self._clock = clock
         self._entries: dict[str, RegistryEntry] = {}
@@ -66,6 +66,48 @@ class ModelRegistry:
         self._ensembles: dict[str, EnsembleSpec] = {}
         self._ensemble_versions: dict[str, int] = {}
         self._ensemble_subscribers: list = []
+        # durable backing (repro.serving.durable.DurableStore | None):
+        # every publish lands on disk BEFORE subscribers fire — i.e.
+        # before the mesh pushes it and records the workers' version-
+        # vector acks — so a restored registry can never be older than
+        # the last acknowledged publish
+        self._durable = durable
+        self.durable_commits = 0
+
+    def attach_durable(self, store) -> None:
+        """Back this registry with a ``DurableStore``: every future
+        publish (register/swap/load) commits its weights + version to
+        the store before acknowledgement. Models already hosted are
+        committed immediately, so attaching to a warm registry persists
+        its current state too."""
+        with self._lock:
+            self._durable = store
+        for key in self.keys():
+            self._durable_publish(key)
+        for name in list(self._ensembles):
+            self._durable_publish_ensemble(name)
+
+    def _durable_publish(self, key: str) -> None:
+        if self._durable is None:
+            return
+        entry = self.get_entry(key)
+        ref = self._durable.put_blob(self.save_bytes(key))
+        self._durable.commit(
+            {"models": {key: {"version": entry.version, "ref": ref}}})
+        self.durable_commits += 1
+
+    def _durable_publish_ensemble(self, name: str) -> None:
+        if self._durable is None:
+            return
+        with self._lock:
+            spec = self._ensembles.get(name)
+            version = self._ensemble_versions.get(name, 0)
+        if spec is None:
+            return
+        self._durable.commit(
+            {"ensembles": {name: {"version": version,
+                                  "spec": spec.to_wire()}}})
+        self.durable_commits += 1
 
     # -- publish notifications ---------------------------------------------
     def subscribe(self, callback) -> None:
@@ -120,6 +162,7 @@ class ModelRegistry:
         key already exists). Returns the forecaster."""
         with self._lock:
             v = self._publish_locked(key, forecaster, version)
+        self._durable_publish(key)
         self._notify(key, v)
         return forecaster
 
@@ -133,6 +176,7 @@ class ModelRegistry:
                                f"hosted: {sorted(self._entries)}")
             v = self._publish_locked(key, forecaster, version)
             self.swap_count += 1
+        self._durable_publish(key)
         self._notify(key, v)
         return v
 
@@ -243,6 +287,7 @@ class ModelRegistry:
             v = self._ensemble_versions.get(name, 0) + 1
             self._ensembles[name] = spec
             self._ensemble_versions[name] = v
+        self._durable_publish_ensemble(name)
         self._notify_ensembles(name, spec, v)
         return spec
 
@@ -262,6 +307,7 @@ class ModelRegistry:
             v = self._ensemble_versions[name] + 1
             self._ensembles[name] = spec
             self._ensemble_versions[name] = v
+        self._durable_publish_ensemble(name)
         self._notify_ensembles(name, spec, v)
         return v
 
@@ -376,6 +422,7 @@ class ModelRegistry:
                         and saved <= cur.version:
                     saved = None     # key moved on: fall back to a bump
                 v = self._publish_locked(key, fc, saved)
+            self._durable_publish(key)
             self._notify(key, v)
         return fc
 

@@ -232,6 +232,27 @@ class SessionCache:
                 out.append((cid, s.carry, s.nbytes, s.version))
             return out
 
+    def snapshot(self, client_ids=None) -> list[tuple[str, Any, int, int]]:
+        """READ ``(client_id, carry, nbytes, version)`` tuples without
+        removing them — the durable-checkpoint path (``export`` is the
+        migration path and drains what it returns). No LRU refresh and
+        no hit/miss accounting: observing the cache for a checkpoint
+        must not perturb its eviction order or its telemetry."""
+        with self._lock:
+            ids = list(self._sessions) if client_ids is None \
+                else [c for c in client_ids if c in self._sessions]
+            return [(cid, self._sessions[cid].carry,
+                     self._sessions[cid].nbytes,
+                     self._sessions[cid].version) for cid in ids]
+
+    def peek_version(self, client_id: str) -> int | None:
+        """The version stamp of a cached session, without touching LRU
+        order or hit/miss counts (None when absent) — the partition
+        re-adoption reconcile compares these against the store."""
+        with self._lock:
+            s = self._sessions.get(client_id)
+            return s.version if s is not None else None
+
     def drop(self, client_id: str) -> bool:
         with self._lock:
             s = self._sessions.pop(client_id, None)

@@ -64,6 +64,9 @@ class ShardSwarm:
             "auto" picks "device" iff more than one device is visible.
         telemetries: optional ``{shard_id: Telemetry}`` map; a pull into
             shard i records one swap on ``telemetries[i]``.
+        durable: optional ``repro.serving.durable.DurableStore``; when
+            given, the primary commits every publish to it before the
+            replicas (or any subscriber) are notified.
 
     Membership is live: ``add_replica`` seeds a new shard's registry
     from the primary (the joining shard pulls weights before taking
@@ -72,7 +75,7 @@ class ShardSwarm:
 
     def __init__(self, n_shards: int, primary: ModelRegistry | None = None,
                  max_skew: int = 1, transfer: str = "auto",
-                 telemetries=None):
+                 telemetries=None, durable=None):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
         if max_skew < 0:
@@ -86,6 +89,10 @@ class ShardSwarm:
             transfer = "device" if len(jax.local_devices()) > 1 \
                 else "reference"
         self.primary = primary if primary is not None else ModelRegistry()
+        if durable is not None:
+            # publishes through this swarm land in the store before
+            # replicas (or anyone else) see the new version
+            self.primary.attach_durable(durable)
         self.replicas: dict[int, ModelRegistry] = {
             sid: ModelRegistry() for sid in range(n_shards)}
         self.max_skew = max_skew

@@ -83,6 +83,12 @@ class Telemetry:
         self.cache_evictions = 0
         self.swaps = 0             # weight hot-swaps observed (cumulative)
         self.reprimes = 0          # session carries re-primed after a swap
+        # durable restore: carries re-installed from the checkpoint
+        # store on a cold restart / partition re-adoption, and how many
+        # of them were stamped with a superseded weight version (those
+        # re-prime from history on first touch instead of resuming)
+        self.restored_sessions = 0
+        self.restored_stale = 0
         self.requests_by_version: dict[int, int] = {}
         self.requests_by_client: dict[str, int] = {}
         # per-model attribution: every flush is tagged with its model
@@ -165,6 +171,14 @@ class Telemetry:
     def record_reprime(self, n: int = 1) -> None:
         with self._lock:
             self.reprimes += n
+
+    def record_restore(self, n: int = 1, stale: int = 0) -> None:
+        """``n`` session carries re-installed from the durable store,
+        ``stale`` of which carry a superseded weight version (they fall
+        back to history re-prime on their next step)."""
+        with self._lock:
+            self.restored_sessions += n
+            self.restored_stale += stale
 
     def record_step_batch(self, latencies_s, n_padded: int | None = None,
                           model: str | None = None) -> None:
@@ -288,6 +302,8 @@ class Telemetry:
                 "cache_evictions": self.cache_evictions,
                 "swaps": self.swaps,
                 "reprimes": self.reprimes,
+                "restored_sessions": self.restored_sessions,
+                "restored_stale": self.restored_stale,
                 "staleness_p50_s": stale50,
                 "staleness_p95_s": stale95,
                 "requests_by_version": dict(self.requests_by_version),
@@ -403,6 +419,7 @@ class Telemetry:
         totals = {"requests": 0, "batches": 0, "real_slots": 0,
                   "padded_slots": 0, "cache_hits": 0, "cache_misses": 0,
                   "cache_evictions": 0, "swaps": 0, "reprimes": 0,
+                  "restored_sessions": 0, "restored_stale": 0,
                   "untracked_client_requests": 0, "step_requests": 0,
                   "step_batches": 0, "step_real_slots": 0,
                   "step_padded_slots": 0, "slot_inserts": 0,
@@ -457,6 +474,8 @@ class Telemetry:
             "cache_evictions": totals["cache_evictions"],
             "swaps": totals["swaps"],
             "reprimes": totals["reprimes"],
+            "restored_sessions": totals["restored_sessions"],
+            "restored_stale": totals["restored_stale"],
             "staleness_p50_s": stale50,
             "staleness_p95_s": stale95,
             "requests_by_version": by_version,
@@ -511,6 +530,9 @@ class Telemetry:
             line += (f" | slots {snap['slot_active']}/{snap['slot_lanes']} "
                      f"resident ({snap['slot_inserts']} inserts, "
                      f"{snap['slot_spills']} spills)")
+        if snap.get("restored_sessions"):
+            line += (f" | restored {snap['restored_sessions']} sessions "
+                     f"({snap.get('restored_stale', 0)} stale)")
         if len(snap.get("requests_by_model", {})) > 1:
             per = " ".join(f"{m}:{n}" for m, n in
                            sorted(snap["requests_by_model"].items()))

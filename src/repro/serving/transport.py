@@ -191,11 +191,12 @@ class _ShardState:
     which carries the shard id, batcher config and session budget —
     the worker itself needs no configuration."""
 
-    def __init__(self):
+    def __init__(self, state_dir=None):
         self.registry = None
         self.telemetry = None
         self.cache = None
         self.shard = None
+        self.state_dir = state_dir
         # worker half of cross-process traces: requests whose frames
         # carry a trace id are adopted here, their spans exported back
         # in the result frame (the shard never STARTS traces — the
@@ -227,6 +228,19 @@ class _ShardState:
                                  shard_id=shard_id,
                                  session_cache=self.cache,
                                  donate_carries=False)
+        if self.state_dir:
+            # a cold worker restart on this host comes back with the
+            # store's last good weights before the router re-adopts it;
+            # monotone replica versions make the router's later
+            # force-push a safe no-op for anything already current
+            try:
+                from repro.serving.durable import (DurableStore,
+                                                   restore_registry)
+
+                restore_registry(DurableStore(self.state_dir),
+                                 self.registry, device_put=True)
+            except Exception:  # noqa: BLE001 — serve unprimed over not at all
+                pass
 
 
 def _serve_conn(conn: Connection, state: _ShardState) -> None:
@@ -367,12 +381,26 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
             elif op == "restore":
                 # insert-if-absent: a migrated carry must never clobber
                 # a fresher one a concurrent step already wrote here
-                installed = sum(
-                    cache.put_new(s["client"], _unpack_carry(s["carry"]),
-                                  s["nbytes"], version=s["version"])
-                    for s in msg["sessions"])
+                installed_ids = [
+                    s["client"] for s in msg["sessions"]
+                    if cache.put_new(s["client"],
+                                     _unpack_carry(s["carry"]),
+                                     s["nbytes"], version=s["version"])]
+                if msg.get("durable") and installed_ids:
+                    # checkpoint-sourced (not migration): count it, and
+                    # count separately the carries stamped with a
+                    # version this replica no longer hosts — those
+                    # re-prime from history at their next step
+                    hosted = {registry.version(k)
+                              for k in registry.keys()}
+                    ids = set(installed_ids)
+                    telemetry.record_restore(
+                        len(installed_ids),
+                        stale=sum(1 for s in msg["sessions"]
+                                  if s["client"] in ids
+                                  and s["version"] not in hosted))
                 conn.send({"op": "ok", "id": rid,
-                           "installed": installed})
+                           "installed": len(installed_ids)})
             elif op == "extract":
                 # serialize against queued steps first: a step enqueued
                 # before the membership flip must consume its carry
@@ -386,6 +414,42 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
                        for cid, carry, nbytes, version
                        in cache.export(msg.get("clients"))]
                 conn.send({"op": "ok", "id": rid, "sessions": out})
+            elif op == "snapshot":
+                # durable-checkpoint export: NON-destructive (lanes
+                # spill bitwise, the cache is read, nothing drained)
+                # and no quiesce — a periodic checkpoint rides the slot
+                # lock only, so it never stalls the flush pipeline
+                out = [{"client": cid, "carry": _pack_carry(carry),
+                        "nbytes": nbytes, "version": version}
+                       for cid, carry, nbytes, version
+                       in shard.snapshot_sessions(msg.get("clients"))]
+                conn.send({"op": "ok", "id": rid, "sessions": out})
+            elif op == "reconcile":
+                # partition re-adoption: this worker kept serving state
+                # across the partition (serve_shard --forever).
+                # Sessions that moved on elsewhere — survivor copies
+                # migrating in ("evict") or fresher checkpointed stream
+                # versions ("index") — must beat its stale residents;
+                # every other resident stays and resumes bitwise.
+                evict = list(msg.get("evict") or [])
+                index = msg.get("index") or {}
+                affected = list(dict.fromkeys(evict + list(index)))
+                shard.spill_sessions(affected)   # lanes -> cache, bitwise
+                dropped = sum(1 for cid in evict if cache.drop(cid))
+                kept = 0
+                skip = set(evict)
+                for cid, version in index.items():
+                    if cid in skip:
+                        continue
+                    have = cache.peek_version(cid)
+                    if have is None:
+                        continue
+                    if have < int(version):
+                        dropped += int(cache.drop(cid))
+                    else:
+                        kept += 1
+                conn.send({"op": "ok", "id": rid, "dropped": dropped,
+                           "kept": kept})
             elif op == "stats":
                 samples = telemetry.raw_samples()
                 conn.send({
@@ -453,21 +517,24 @@ def _serve_conn(conn: Connection, state: _ShardState) -> None:
 
 
 def serve_shard(host: str = "0.0.0.0", port: int = 0, *,
-                forever: bool = False, on_bound=None) -> None:
+                forever: bool = False, on_bound=None,
+                state_dir=None) -> None:
     """Run a shard worker in THIS process: bind, accept the router,
     serve until ``bye``/EOF. The standalone entry point behind
     ``python -m repro.launch.shard_worker`` — start it on any host and
     join it to a mesh with ``connect_shard("host:port")`` /
     ``add_shard(addr=...)``. With ``forever=True`` the worker outlives
     its router: serving state (weights, sessions) persists and the next
-    connection resumes it. ``on_bound(port)`` reports the bound port
+    connection resumes it. ``state_dir`` points at a ``DurableStore``
+    root; a cold worker primes its replica registry from it on the
+    first ``hello``. ``on_bound(port)`` reports the bound port
     (``spawn_shard`` pipes it back to the parent)."""
     import jax  # noqa: F401  (initialize this process's backend up front)
 
     srv = socket.create_server((host, port), backlog=1)
     if on_bound is not None:
         on_bound(srv.getsockname()[1])
-    state = _ShardState()
+    state = _ShardState(state_dir)
     try:
         while True:
             sock, _ = srv.accept()
@@ -728,15 +795,38 @@ class RemoteShard:
                         tuple(e["shape"])), e["n"])
         return counts
 
-    def restore(self, sessions: list[dict]) -> int:
+    def restore(self, sessions: list[dict], durable: bool = False) -> int:
         """Install migrated session carries (insert-if-absent, one
-        frame for the whole batch); returns how many were installed."""
-        return self._call({"op": "restore",
-                           "sessions": sessions})["installed"]
+        frame for the whole batch); returns how many were installed.
+        ``durable=True`` marks checkpoint-sourced frames so the worker
+        telemetry counts them (``restored_sessions``/``restored_stale``)
+        instead of treating them as a live migration."""
+        msg = {"op": "restore", "sessions": sessions}
+        if durable:
+            msg["durable"] = True
+        return self._call(msg)["installed"]
 
     def extract(self, clients) -> list[dict]:
         return self._call({"op": "extract",
                            "clients": list(clients)})["sessions"]
+
+    def snapshot_sessions(self, clients=None) -> list[dict]:
+        """Read session frames WITHOUT removing them — the durable
+        checkpoint path (``extract`` is the destructive migration
+        path). No quiesce on the worker, so it never stalls a flush."""
+        msg = {"op": "snapshot"}
+        if clients is not None:
+            msg["clients"] = list(clients)
+        return self._call(msg, timeout=120.0)["sessions"]
+
+    def reconcile(self, evict=(), index=None) -> dict:
+        """Partition re-adoption: evict residents superseded by
+        survivor copies (``evict``) or by fresher checkpointed stream
+        versions (``index``: client -> version). Untouched residents
+        stay and resume bitwise."""
+        reply = self._call({"op": "reconcile", "evict": list(evict),
+                            "index": dict(index or {})})
+        return {"dropped": reply["dropped"], "kept": reply["kept"]}
 
     def drain(self) -> list[dict]:
         """Stop accepting work, finish the queue (every queued request
@@ -868,7 +958,7 @@ class MultiProcessServingEngine:
                  max_sessions: int = 4096, host: str = "127.0.0.1",
                  tracer=None, heartbeat_s: float = 0.5,
                  miss_budget: int = 4, events=None,
-                 supervise: bool = True):
+                 supervise: bool = True, durable=None):
         from repro.serving.registry import ModelRegistry
 
         if n_shards < 1:
@@ -898,6 +988,11 @@ class MultiProcessServingEngine:
         self.crashes = 0             # workers declared dead
         self.respawns = 0            # local workers respawned in place
         self.rehomed_sessions = 0    # carries migrated by joins/repairs
+        # durable-state plane (repro.serving.durable.DurableStore | None)
+        self.durable = None
+        self.restored_sessions = 0   # carries re-installed from the store
+        self.restored_stale = 0      # ...stamped with a no-longer-hosted
+        #                              version; they re-prime from history
         self._rejoin: dict[int, str] = {}   # crashed remote: sid -> addr
         self._supervisor: threading.Thread | None = None
         self._sup_stop = threading.Event()
@@ -917,6 +1012,18 @@ class MultiProcessServingEngine:
         self._warm_plan: dict[str, tuple | None] = {}
         self._attached = False
         self._stopped_versions: dict[int, dict] = {}
+        if durable is not None:
+            self.attach_durable(durable)
+
+    def attach_durable(self, store) -> None:
+        """Back this mesh with a ``DurableStore``: the primary registry
+        commits every publish to it BEFORE acknowledgement (so the
+        version vector never acks state the store could lose), and
+        ``restore_from()`` / partition re-adoption read from it by
+        default. Already-hosted models and ensembles commit now."""
+        self.durable = store
+        if hasattr(self.registry, "attach_durable"):
+            self.registry.attach_durable(store)
 
     @property
     def n_shards(self) -> int:
@@ -1226,6 +1333,97 @@ class MultiProcessServingEngine:
         shard_vs = [v for k, v in vec.items() if k != "primary"]
         return vec["primary"] - min(shard_vs) if shard_vs else 0
 
+    # -- durable state -----------------------------------------------------
+    def checkpoint_state(self, store, weight_refs=None) -> dict:
+        """One durable snapshot of the fleet, for ``DurableStore.commit``:
+        hosted weight versions (re-serialized only when the version
+        moved since the caller's last snapshot — ``weight_refs`` is the
+        caller's ``{key: (version, blob_ref)}`` memo, mutated in
+        place), ensemble specs, and every worker's session carries via
+        the non-destructive ``snapshot`` op. Run off the hot path by a
+        ``CheckpointDaemon``; a crashed worker is skipped (its carries
+        stay whatever the previous snapshot holds — the supervisor is
+        already repairing it)."""
+        weight_refs = {} if weight_refs is None else weight_refs
+        with self._lock:
+            versions = {k: self.registry.version(k)
+                        for k in self.registry.keys()}
+            ensembles = {
+                name: {"version": self.registry.ensemble_version(name),
+                       "spec": self.registry.ensemble(name).to_wire()}
+                for name in self._ensemble_names()}
+        models = {}
+        for key, v in sorted(versions.items()):
+            memo = weight_refs.get(key)
+            if memo is None or memo[0] != v or not store.has_blob(memo[1]):
+                memo = (v, store.put_blob(self.registry.save_bytes(key)))
+                weight_refs[key] = memo
+            models[key] = {"version": v, "ref": memo[1]}
+        frames: list[dict] = []
+        for _sid, worker in sorted(self.workers.items()):
+            try:
+                frames.extend(worker.snapshot_sessions())
+            except (ConnectionError, RuntimeError):
+                continue
+        from repro.serving.durable import pack_frames_blob
+
+        return {"models": models, "ensembles": ensembles,
+                "sessions": {"ref": store.put_blob(pack_frames_blob(frames)),
+                             "count": len(frames)}}
+
+    def restore_from(self, store=None) -> dict:
+        """Cold-fleet restart from the durable tier: re-install the
+        last good weight versions and ensemble specs into the primary
+        registry (each load publishes, so workers converge through the
+        normal push pipeline), force-converge every worker, then
+        re-home the checkpointed session carries through the router's
+        ownership hash. Carries stamped with a version that is no
+        longer hosted count as ``restored_stale``: they install anyway
+        and re-prime from history on their next step (the version
+        fence in ``EngineShard._resolve_carry``). Call after
+        ``start()``; returns a summary dict."""
+        from repro.serving.durable import restore_registry
+
+        store = store if store is not None else self.durable
+        if store is None:
+            raise ValueError(
+                "no DurableStore — pass one or attach_durable() first")
+        summary = restore_registry(store, self.registry)
+        if summary is None:
+            return {"seq": None, "models": {}, "ensembles": {},
+                    "restored_sessions": 0, "restored_stale": 0}
+        frames = summary.pop("session_frames")
+        with self._lock:
+            for key in self.registry.keys():
+                self._push_locked(key, force=True)
+            for name in self._ensemble_names():
+                self._push_ensemble_locked(name, force=True)
+            current = {self.registry.version(k)
+                       for k in self.registry.keys()}
+        stale = sum(1 for f in frames if f["version"] not in current)
+        by_owner: dict[int, list] = {}
+        with self._route_lock:
+            for f in frames:
+                sid = self.router.shard_for(str(f["client"]))
+                by_owner.setdefault(sid, []).append(f)
+        resumed = 0
+        for sid, batch in sorted(by_owner.items()):
+            worker = self.workers.get(sid)
+            if worker is None:
+                continue
+            try:
+                resumed += worker.restore(batch, durable=True)
+            except (ConnectionError, RuntimeError):
+                continue
+        self.restored_sessions += resumed
+        self.restored_stale += stale
+        if self.events is not None:
+            self.events.log("mesh_restore", seq=summary["seq"],
+                            resumed=resumed, stale=stale)
+        summary["restored_sessions"] = resumed
+        summary["restored_stale"] = stale
+        return summary
+
     # -- client API --------------------------------------------------------
     def shard_for(self, client_id: str) -> int:
         return self.router.shard_for(str(client_id))
@@ -1339,20 +1537,70 @@ class MultiProcessServingEngine:
         # intake): restores are insert-if-absent, so a fresher
         # carry written by a concurrent step always wins
         moved = 0
+        incoming: list[dict] = []
         for old_sid, old_worker in list(self.workers.items()):
             if old_sid == sid:
                 continue
             try:
                 owned = [c for c in old_worker.stats()["clients"]
                          if self.router.shard_for(c) == sid]
-                sessions = old_worker.extract(owned) if owned else []
+                incoming.extend(old_worker.extract(owned) if owned else [])
             except (ConnectionError, RuntimeError):
                 continue     # that worker is dying too — its own repair
                 # will re-home whatever it held
-            if sessions:
-                moved += worker.restore(sessions)
+        rejoin_frames: list[dict] = []
+        if sid in self._rejoin and self.durable is not None:
+            # partition re-adoption: the --forever worker kept its
+            # residents; reconcile them against the store BEFORE the
+            # survivor migration lands (evictions first, then the
+            # insert-if-absent restores below settle precedence:
+            # survivor copy > surviving resident > checkpointed frame)
+            try:
+                rejoin_frames = self._reconcile_rejoin(sid, worker,
+                                                       incoming)
+            except (ConnectionError, RuntimeError):
+                rejoin_frames = []
+        if incoming:
+            moved += worker.restore(incoming)
+        if rejoin_frames:
+            with self._lock:
+                current = {self.registry.version(k)
+                           for k in self.registry.keys()}
+            self.restored_sessions += worker.restore(rejoin_frames,
+                                                     durable=True)
+            self.restored_stale += sum(
+                1 for f in rejoin_frames if f["version"] not in current)
         self.rehomed_sessions += moved
         return moved
+
+    def _reconcile_rejoin(self, sid: int, worker: RemoteShard,
+                          incoming: list[dict]) -> list[dict]:
+        """A ``--forever`` worker re-adopted after a partition
+        (``awaiting_rejoin``) kept its lane/cache-resident carries.
+        Reconcile them against the durable store instead of discarding
+        them: survivor copies (``incoming`` — they served the client
+        THROUGH the partition) and fresher checkpointed stream versions
+        evict the worker's stale residents; every other resident stays
+        put and resumes bitwise. Returns the checkpointed frames this
+        shard owns, for insert-if-absent re-install after the survivor
+        migration (so survivors keep precedence)."""
+        from repro.serving.durable import unpack_frames_blob
+
+        frames: list[dict] = []
+        found = self.durable.latest()
+        if found is not None:
+            sessions = found[1].get("sessions") or {}
+            if sessions.get("ref"):
+                frames = unpack_frames_blob(
+                    self.durable.get_blob(sessions["ref"]))
+        with self._route_lock:
+            owned = [f for f in frames
+                     if self.router.shard_for(str(f["client"])) == sid]
+        evict = [s["client"] for s in incoming]
+        worker.reconcile(evict=evict,
+                         index={f["client"]: f["version"] for f in owned})
+        skip = set(evict)
+        return [f for f in owned if f["client"] not in skip]
 
     def add_shard(self, shard_id: int | None = None,
                   addr: str | tuple | None = None) -> int:
@@ -1512,4 +1760,6 @@ class MultiProcessServingEngine:
             "crashes": self.crashes,
             "respawns": self.respawns,
             "rehomed_sessions": self.rehomed_sessions,
+            "restored_sessions": self.restored_sessions,
+            "restored_stale": self.restored_stale,
         }

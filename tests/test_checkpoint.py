@@ -5,7 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointCorruptError, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.io import load_checkpoint_bytes
 
 
 def test_roundtrip(tmp_path):
@@ -41,3 +43,43 @@ def test_flat_load(tmp_path):
     save_checkpoint(path, {"a": {"b": jnp.ones((2,))}})
     flat, meta = load_checkpoint(path)
     assert "a/b" in flat and meta is None
+
+
+def test_truncated_checkpoint_raises_clean_error(tmp_path):
+    """A torn write (here: truncation, the common power-cut shape) must
+    surface as CheckpointCorruptError naming the file — never a numpy
+    zip internal the caller can't act on, and never silent garbage."""
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": jnp.arange(64.0)},
+                    metadata={"round": 1})
+    data = open(path, "rb").read()
+    for cut in (len(data) // 2, 10, 0):
+        with open(path, "wb") as f:
+            f.write(data[:cut])
+        with pytest.raises(CheckpointCorruptError, match="c.npz"):
+            load_checkpoint(path)
+        with pytest.raises(CheckpointCorruptError):
+            load_checkpoint_bytes(data[:cut])
+
+
+def test_interrupted_save_never_tears_the_checkpoint(tmp_path,
+                                                     monkeypatch):
+    """Crash mid-save (simulated: os.replace never runs) leaves the
+    previous checkpoint intact and loadable — the tmp file may be torn,
+    the published path never is."""
+    import repro.checkpoint.io as io_mod
+
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, {"w": jnp.zeros((4,))}, metadata={"round": 1})
+
+    def _boom(*a, **k):
+        raise OSError("simulated crash before rename")
+
+    monkeypatch.setattr(io_mod.os, "replace", _boom)
+    with pytest.raises(OSError):
+        save_checkpoint(path, {"w": jnp.ones((4,))},
+                        metadata={"round": 2})
+    monkeypatch.undo()
+    loaded, meta = load_checkpoint(path, like={"w": np.zeros((4,))})
+    assert meta == {"round": 1}          # the OLD checkpoint, whole
+    np.testing.assert_array_equal(np.asarray(loaded["w"]), np.zeros(4))

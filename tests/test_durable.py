@@ -1,0 +1,140 @@
+"""DurableStore invariants (ISSUE 10): content addressing + dedup,
+torn-write detection for blobs AND manifests, keep-last-K retention
+with blob garbage collection, the monotone version-merge law, and the
+session-frame codec's bitwise round trip. Pure host-side filesystem
+tests — no jax, no processes — so this file is cheap.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.serving.durable import (DurableStore, DurableStoreError,
+                                   pack_frames_blob, pack_session_frame,
+                                   unpack_frames_blob,
+                                   unpack_session_frame)
+
+
+def _store(tmp_path, **kw):
+    return DurableStore(str(tmp_path / "state"), **kw)
+
+
+def test_blob_content_addressing_and_dedup(tmp_path):
+    store = _store(tmp_path)
+    ref = store.put_blob(b"payload-a")
+    assert ref.startswith("sha256:") and len(ref) == len("sha256:") + 64
+    assert store.get_blob(ref) == b"payload-a"
+    assert store.put_blob(b"payload-a") == ref      # same content, same ref
+    assert store.blobs_written == 1 and store.blobs_deduped == 1
+    assert store.has_blob(ref)
+    assert not store.has_blob("sha256:" + "0" * 64)
+    assert not store.has_blob("not-a-ref")
+
+
+def test_corrupt_blob_refuses_to_load(tmp_path):
+    store = _store(tmp_path)
+    ref = store.put_blob(b"x" * 1024)
+    path = os.path.join(store.blob_dir, ref.split(":", 1)[1])
+    data = bytearray(open(path, "rb").read())
+    data[100] ^= 0xFF                               # one flipped bit-rot byte
+    open(path, "wb").write(bytes(data))
+    with pytest.raises(DurableStoreError, match="checksum"):
+        store.get_blob(ref)
+
+
+def test_commit_and_latest_round_trip(tmp_path):
+    store = _store(tmp_path)
+    ref = store.put_blob(b"weights-v1")
+    seq = store.commit({"models": {"m": {"version": 1, "ref": ref}}})
+    assert seq == 1
+    got_seq, state = store.latest()
+    assert got_seq == 1
+    assert state["models"]["m"] == {"version": 1, "ref": ref}
+
+
+def test_torn_manifest_falls_back_to_previous_good(tmp_path):
+    """A crash mid-commit leaves a torn newest manifest; latest() must
+    skip it (checksum) and serve the previous complete snapshot."""
+    store = _store(tmp_path)
+    r1 = store.put_blob(b"v1")
+    store.commit({"models": {"m": {"version": 1, "ref": r1}}})
+    r2 = store.put_blob(b"v2")
+    s2 = store.commit({"models": {"m": {"version": 2, "ref": r2}}})
+    path = store._manifest_path(s2)
+    raw = open(path, "rb").read()
+    for torn in (raw[: len(raw) // 2], b"garbage", b""):
+        open(path, "wb").write(torn)
+        seq, state = store.latest()
+        assert seq == s2 - 1
+        assert state["models"]["m"]["version"] == 1
+    # a manifest referencing a corrupt/missing blob is just as dead
+    open(path, "wb").write(raw)                     # manifest healthy again
+    os.remove(os.path.join(store.blob_dir, r2.split(":", 1)[1]))
+    seq, state = store.latest()
+    assert state["models"]["m"]["version"] == 1
+
+
+def test_retention_keeps_last_k_and_gcs_blobs(tmp_path):
+    store = _store(tmp_path, keep_last=2)
+    refs = []
+    for v in range(1, 6):
+        ref = store.put_blob(f"weights-v{v}".encode())
+        refs.append(ref)
+        store.commit({"models": {"m": {"version": v, "ref": ref}}})
+    assert store.manifest_seqs() == [4, 5]          # keep-last-2
+    # the kept manifests reference the v4 and v5 blobs; everything
+    # older was garbage-collected with its manifest
+    assert all(store.has_blob(r) for r in refs[-2:])
+    assert not any(store.has_blob(r) for r in refs[:-2])
+    assert store.latest()[1]["models"]["m"]["version"] == 5
+
+
+def test_uncommitted_blobs_survive_concurrent_commits(tmp_path):
+    """A blob written ahead of its commit (the daemon serializes
+    weights, then a publish commit lands first) must not be reaped by
+    that interleaved commit's GC."""
+    store = _store(tmp_path, keep_last=1)
+    early = store.put_blob(b"checkpoint-in-flight")
+    store.commit({"models": {"m": {"version": 1,
+                                   "ref": store.put_blob(b"w1")}}})
+    assert store.has_blob(early)                    # protected until...
+    store.commit({"sessions": {"ref": early, "count": 0}})
+    assert store.has_blob(early)                    # ...now referenced
+    _, state = store.latest()
+    assert state["sessions"]["ref"] == early
+
+
+def test_merge_is_monotone_per_versioned_entry(tmp_path):
+    """The monotone restore law at the store level: a commit carrying
+    an OLDER version of an entry (a late daemon snapshot racing a
+    publish) can never roll the manifest back; newer versions and
+    unrelated keys merge in."""
+    store = _store(tmp_path)
+    r1, r2, r3 = (store.put_blob(d) for d in (b"1", b"2", b"3"))
+    store.commit({"models": {"m": {"version": 2, "ref": r2}}})
+    store.commit({"models": {"m": {"version": 1, "ref": r1},   # stale
+                             "other": {"version": 7, "ref": r3}}})
+    _, state = store.latest()
+    assert state["models"]["m"]["version"] == 2     # not resurrected
+    assert state["models"]["other"]["version"] == 7
+    store.commit({"models": {"m": {"version": 3, "ref": r3}}})
+    assert store.latest()[1]["models"]["m"]["version"] == 3
+
+
+def test_session_frame_codec_round_trips_bitwise(tmp_path):
+    rng = np.random.default_rng(0)
+    carry = ((rng.standard_normal((1, 8)).astype(np.float32),
+              rng.standard_normal((1, 8)).astype(np.float32)),)
+    frame = pack_session_frame("client-7", carry, nbytes=64, version=3)
+    frames = unpack_frames_blob(pack_frames_blob([frame]))
+    cid, got, nbytes, version = unpack_session_frame(frames[0])
+    assert (cid, nbytes, version) == ("client-7", 64, 3)
+    for a, b in zip(carry[0], got[0]):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(b).dtype == np.float32
+
+
+def test_keep_last_validation(tmp_path):
+    with pytest.raises(ValueError):
+        _store(tmp_path, keep_last=0)

@@ -8,6 +8,13 @@ sessions re-primed bitwise against an uninterrupted reference, and the
 publish skew bound holding across the respawn. A crashed REMOTE worker
 (joined by address) is parked for re-join instead of respawned.
 
+ISSUE 10 adds the durable-state acceptance scenarios: SIGKILL the
+ROUTER (whole-fleet power cut) and cold-restart from the
+``DurableStore`` — last acknowledged weight versions recovered, fresh
+sessions bitwise, stale ones re-primed and counted — and a partition
+re-adoption that reconciles a ``--forever`` worker's resident carries
+against the store instead of discarding them.
+
 Worker processes are spawned (own jax backend + compile set), so this
 module costs process startup — bounded by the tiny model config.
 """
@@ -39,14 +46,21 @@ DETECT_BUDGET_S = HEARTBEAT_S * MISS_BUDGET + 1.0
 RECOVER_BUDGET_S = 90.0
 
 
-@pytest.fixture(scope="module")
-def forecaster():
-    fc = LSTMForecaster(cfg=CFG, params=init_rnn(jax.random.PRNGKey(0),
+def _build_fc(seed):
+    """Deterministic forecaster — rebuildable on BOTH sides of a
+    process boundary (the durable-restart test's child router and the
+    asserting parent must agree bitwise on the model)."""
+    fc = LSTMForecaster(cfg=CFG, params=init_rnn(jax.random.PRNGKey(seed),
                                                  CFG))
     rng = np.random.default_rng(0)
     fc.calibrate(rng.standard_normal((64, CFG.window, 3)).astype(np.float32)
                  * 0.02)
     return fc
+
+
+@pytest.fixture(scope="module")
+def forecaster():
+    return _build_fc(0)
 
 
 def _windows(n, t=CFG.window, seed=0):
@@ -273,6 +287,216 @@ def test_crashed_remote_shard_parks_for_rejoin(forecaster):
         finally:
             proc2.terminate()
         proc.join(5.0)
+
+
+def _durable_router_main(conn, state_dir):
+    """Child-process router for the whole-fleet-kill test: serve real
+    traffic with durable checkpointing, report the acked state over the
+    pipe, then spin until SIGKILLed (no clean shutdown — the last
+    durable state is whatever the async daemon committed)."""
+    from repro.serving import CheckpointDaemon, DurableStore
+
+    store = DurableStore(state_dir)
+    reg = ModelRegistry()
+    reg.register("m", _build_fc(0))
+    mesh = MultiProcessServingEngine(reg, BCFG, n_shards=2,
+                                     supervise=False, durable=store)
+    mesh.start()
+    half = CFG.window // 2
+    # stale streams: stepped + checkpointed under v1, then the model
+    # moves on to v2 — their stored carries become version-stale
+    for i in range(3):
+        w = _windows(1, seed=80 + i)[0]
+        for t in range(half):
+            mesh.step("m", f"stale{i}", w[t])
+    daemon = CheckpointDaemon(store, mesh, interval_s=30.0)
+    daemon.checkpoint_now()
+    mesh.swap("m", _build_fc(1))               # v2
+    mesh.propagate("m")                        # force every worker's ack
+    # fresh streams: stepped AND checkpointed under the acked v2
+    for i in range(3):
+        w = _windows(1, seed=90 + i)[0]
+        for t in range(half):
+            mesh.step("m", f"fresh{i}", w[t])
+    daemon.checkpoint_now()
+    conn.send({"router": os.getpid(),
+               "workers": [w.process.pid for w in mesh.workers.values()],
+               "acked": mesh.version_vector("m")})
+    while True:                                # await the axe
+        time.sleep(1.0)
+
+
+def test_router_sigkill_cold_restart_from_durable_store(tmp_path):
+    """THE durable-state acceptance scenario (ISSUE 10): SIGKILL the
+    mesh OWNER (router) mid-service, kill its orphaned workers too — a
+    whole-fleet power cut — then cold-boot a brand-new mesh from the
+    ``DurableStore``. The restored weight versions must match the last
+    acknowledged publish, sessions checkpointed under the live version
+    resume bitwise vs an uninterrupted replay with NO history, and
+    version-stale sessions re-prime from history, visible in the
+    ``restored_stale`` counter."""
+    import multiprocessing as mp
+
+    from repro.serving import DurableStore
+
+    ctx = mp.get_context("spawn")
+    state_dir = str(tmp_path / "state")
+    parent, child = ctx.Pipe()
+    # NOT daemonic: the child router spawns its own worker processes
+    proc = ctx.Process(target=_durable_router_main,
+                       args=(child, state_dir))
+    proc.start()
+    child.close()
+    info = None
+    try:
+        assert parent.poll(300.0), "child router never reached steady state"
+        info = parent.recv()
+        parent.close()
+    finally:
+        os.kill(proc.pid, signal.SIGKILL)
+        proc.join(10.0)
+        for pid in (info or {}).get("workers", ()):   # orphaned workers
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+    acked = info["acked"]
+    assert acked["primary"] == 2
+    assert all(v == 2 for k, v in acked.items() if k != "primary"), acked
+
+    fc2 = _build_fc(1)
+    half = CFG.window // 2
+    with MultiProcessServingEngine(ModelRegistry(), BCFG, n_shards=2,
+                                   supervise=False) as mesh:
+        out = mesh.restore_from(DurableStore(state_dir))
+        # weights: exactly the last ACKNOWLEDGED publish, fleet-wide
+        assert mesh.version("m") == acked["primary"] == 2
+        vec = mesh.version_vector("m")
+        assert all(v == 2 for v in vec.values()), vec
+        # sessions: all 6 re-homed; the 3 v1-stamped ones are stale
+        assert out["restored_sessions"] == 6
+        assert out["restored_stale"] == 3
+        snap = mesh.snapshot()
+        assert snap["restored_sessions"] == 6
+        assert snap["restored_stale"] == 3
+
+        # fresh streams: resume bitwise with NO history — the restored
+        # carry IS the uninterrupted carry
+        for i in range(3):
+            w = _windows(1, seed=90 + i)[0]
+            for t in range(half, CFG.window):
+                y, p = mesh.step("m", f"fresh{i}", w[t])
+            y_r, p_r, _ = fc2.replay(w[None])
+            assert (y, p) == (float(y_r[0]), float(p_r[0])), f"fresh{i}"
+        # stale streams: version fence re-primes from history and the
+        # stream still ends bitwise where an uninterrupted v2 replay does
+        for i in range(3):
+            w = _windows(1, seed=80 + i)[0]
+            for t in range(half, CFG.window):
+                y, p = mesh.step("m", f"stale{i}", w[t], history=w[:t])
+            y_r, p_r, _ = fc2.replay(w[None])
+            assert (y, p) == (float(y_r[0]), float(p_r[0])), f"stale{i}"
+        assert mesh.snapshot()["reprimes"] >= 3
+
+
+def _forever_worker_main(pipe, host):
+    """Standalone ``--forever`` worker: keeps its serving state across
+    router connections (the partition re-adoption scenario)."""
+    from repro.serving.transport import serve_shard
+
+    def _report(port):
+        pipe.send(port)
+        pipe.close()
+
+    serve_shard(host, 0, forever=True, on_bound=_report)
+
+
+def test_partition_rejoin_reconciles_with_durable_store(forecaster,
+                                                        tmp_path):
+    """Partition re-adoption (ISSUE 10): a ``--forever`` worker loses
+    its router (socket severed — the process and its carries survive),
+    the mesh parks it in ``awaiting_rejoin``, the model moves on to v2
+    and some of its clients keep streaming on the survivor. On re-adopt
+    the worker's residents are RECONCILED against the durable store
+    instead of discarded: residents superseded by survivor copies are
+    evicted (the v2 streams resume bitwise with no history — a stale v1
+    resident shadowing them would force a wrong-carry re-prime), and
+    untouched residents stay put."""
+    import multiprocessing as mp
+
+    from repro.serving import CheckpointDaemon, DurableStore
+
+    store = DurableStore(str(tmp_path / "state"))
+    ctx = mp.get_context("spawn")
+    half = CFG.window // 2
+    with _mesh(forecaster, n_shards=1) as mesh:
+        mesh.attach_durable(store)
+        parent, child = ctx.Pipe()
+        proc = ctx.Process(target=_forever_worker_main,
+                           args=(child, "127.0.0.1"), daemon=True)
+        proc.start()
+        child.close()
+        assert parent.poll(60.0)
+        port = parent.recv()
+        parent.close()
+        addr = f"127.0.0.1:{port}"
+        sid = mesh.connect_shard(addr)
+
+        remote_clients = [c for c in (f"p{i}" for i in range(64))
+                          if mesh.shard_for(c) == sid][:3]
+        assert len(remote_clients) == 3
+        wins = {c: _windows(1, seed=50 + i)[0]
+                for i, c in enumerate(remote_clients)}
+        for c, w in wins.items():
+            for t in range(half):
+                mesh.step("m", c, w[t])
+        CheckpointDaemon(store, mesh, interval_s=30.0).checkpoint_now()
+
+        # PARTITION: sever the socket; the worker process loops back to
+        # accept with its state intact, the router parks the shard
+        mesh.workers[sid]._conn.close()
+        _await(lambda: sid in mesh.awaiting_rejoin,
+               DETECT_BUDGET_S + 5.0, "partitioned shard parked")
+
+        # the world moves on without the partitioned worker: v2 ships,
+        # and two clients keep streaming — on the survivor, which
+        # re-primes them from history under v2
+        fc2 = _build_fc(1)
+        assert mesh.swap("m", fc2) == 2
+        mesh.propagate("m")                    # survivor acks v2
+        moved_on = remote_clients[:2]
+        for c in moved_on:
+            w = wins[c]
+            for t in range(half, half + 2):
+                mesh.step("m", c, w[t], history=w[:t])
+
+        # RE-ADOPT at the same address: reconcile runs against the store
+        assert mesh.add_shard(shard_id=sid, addr=addr) == sid
+        assert sid not in mesh.awaiting_rejoin
+        vec = mesh.version_vector("m")
+        assert vec[sid] == vec["primary"] == 2, vec
+        assert mesh.rehomed_sessions >= 2      # survivor copies moved in
+
+        try:
+            # the moved-on streams finish bitwise with NO history: their
+            # survivor v2 carries won over the worker's stale residents
+            for c in moved_on:
+                w = wins[c]
+                for t in range(half + 2, CFG.window):
+                    y, p = mesh.step("m", c, w[t])
+                y_r, p_r, _ = fc2.replay(w[None])
+                assert (y, p) == (float(y_r[0]), float(p_r[0])), c
+            # the untouched resident kept its carry (v1-stamped): the
+            # version fence re-primes it from history under v2
+            c = remote_clients[2]
+            w = wins[c]
+            for t in range(half, CFG.window):
+                y, p = mesh.step("m", c, w[t], history=w[:t])
+            y_r, p_r, _ = fc2.replay(w[None])
+            assert (y, p) == (float(y_r[0]), float(p_r[0])), c
+        finally:
+            proc.terminate()
+            proc.join(5.0)
 
 
 def test_repair_is_idempotent_and_stop_safe(forecaster):

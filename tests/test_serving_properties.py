@@ -2,8 +2,11 @@
 under arbitrary operation sequences, step-vs-replay carry equivalence
 across arbitrary evict/re-prime points, micro-batcher bucketing laws
 (monotone, power-of-two, >= input), consistent-hash routing laws
-(stable, balanced, minimally disruptive on shard join/leave), and the
-swap-propagation staleness skew bound.
+(stable, balanced, minimally disruptive on shard join/leave), the
+swap-propagation staleness skew bound, and the durable restore laws
+(restore is monotone in acknowledged publishes under arbitrary
+publish/late-checkpoint/crash/restore interleavings; restored session
+frames bitwise equal a spill/reload round trip).
 
 Example counts come from the hypothesis profile (``--hypothesis-profile=ci``
 bounds them for the tier-1 timing gate); the exhaustive variants carry the
@@ -675,3 +678,136 @@ def test_singleton_ensemble_bitwise_equals_member(forecaster, seed,
     for (h_m, c2_m), (h_e, c2_e) in zip(out_m, out_e["m"]):
         assert np.array_equal(np.asarray(h_m), np.asarray(h_e))
         assert np.array_equal(np.asarray(c2_m), np.asarray(c2_e))
+
+# -- durable restore laws --------------------------------------------------
+
+@pytest.fixture(scope="module")
+def published_models():
+    """Distinct parameter sets for successive publishes (v1, v2, ...
+    rotate through them)."""
+    return [LSTMForecaster(cfg=CFG,
+                           params=init_rnn(jax.random.PRNGKey(s), CFG))
+            for s in range(3)]
+
+
+_DURABLE_OPS = st.lists(
+    st.one_of(st.just(("publish",)),
+              st.tuples(st.just("late-checkpoint"), st.integers(0, 15)),
+              st.just(("crash",)),
+              st.just(("restore",))),
+    min_size=1, max_size=10)
+
+
+@given(_DURABLE_OPS, st.integers(1, 3))
+@settings(deadline=None, max_examples=15)
+def test_restore_is_monotone_in_acknowledged_versions(published_models,
+                                                      ops, keep_last):
+    """Arbitrary interleavings of publish, LATE daemon checkpoint (a
+    snapshot serialized any number of publishes ago, committed after
+    them), crash (fresh process, cold-boot restore) and restore must
+    never resurrect a weight version older than the last acknowledged
+    publish: the durable commit precedes the publish ack, and the
+    manifest merge is monotone per versioned entry."""
+    import shutil
+    import tempfile
+
+    from repro.serving.durable import DurableStore, restore_registry
+
+    root = tempfile.mkdtemp(prefix="durable-law-")
+    try:
+        store = DurableStore(root, keep_last=keep_last)
+        registry = ModelRegistry(durable=store)
+        acked = 0
+        history = []        # (version, ref) of every publish: stale fodder
+        for op in ops:
+            if op[0] == "publish":
+                fc = published_models[acked % len(published_models)]
+                if "m" in registry:
+                    registry.swap("m", fc)
+                else:
+                    registry.register("m", fc)
+                acked = registry.version("m")
+                history.append(
+                    (acked, store.put_blob(registry.save_bytes("m"))))
+            elif op[0] == "late-checkpoint":
+                if history:
+                    v, ref = history[op[1] % len(history)]
+                    store.commit({"models": {"m": {"version": v,
+                                                   "ref": ref}}})
+            elif op[0] == "crash":
+                store = DurableStore(root, keep_last=keep_last)
+                registry = ModelRegistry()          # process died; disk kept
+                restore_registry(store, registry)   # the cold-boot recipe
+                registry.attach_durable(store)
+                if acked:
+                    assert registry.version("m") == acked
+            else:
+                cold = ModelRegistry()
+                out = restore_registry(store, cold)
+                if acked:
+                    assert out is not None and "m" in out["models"]
+                    assert cold.version("m") == acked
+                else:
+                    assert out is None or "m" not in out["models"]
+        cold = ModelRegistry()
+        restore_registry(store, cold)
+        if acked:                     # final restore lands on the last ack
+            assert cold.version("m") == acked
+            want = published_models[(acked - 1) % len(published_models)]
+            for a, b in zip(jax.tree_util.tree_leaves(want.params),
+                            jax.tree_util.tree_leaves(cold.get("m").params)):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@given(st.integers(0, 2 ** 16 - 1), st.integers(1, 4),
+       st.integers(1, 6))
+@settings(deadline=None, max_examples=15)
+def test_restored_sessions_equal_spill_reload_roundtrip(forecaster, seed,
+                                                        n_clients, n_ticks):
+    """Checkpointed session frames, round-tripped through the store's
+    blob codec and re-installed into a cold cache, are bitwise what a
+    plain spill/reload of the live cache holds — restore is replay-free
+    for fresh sessions."""
+    import shutil
+    import tempfile
+
+    from repro.serving.durable import (DurableStore, pack_frames_blob,
+                                       pack_session_frame,
+                                       unpack_frames_blob,
+                                       unpack_session_frame)
+
+    rng = np.random.default_rng(seed)
+    runner = RecurrentSessionRunner(forecaster,
+                                    SessionCache(max_sessions=64))
+    for t in range(n_ticks):
+        runner.step_many([
+            (f"c{i}", rng.standard_normal(3).astype(np.float32) * 0.02,
+             None) for i in range(n_clients)])
+    runner.spill()
+    live = runner.cache.snapshot()
+    frames = [pack_session_frame(cid, carry, nbytes, version)
+              for cid, carry, nbytes, version in live]
+    root = tempfile.mkdtemp(prefix="durable-rt-")
+    try:
+        store = DurableStore(root)
+        blob = store.get_blob(store.put_blob(pack_frames_blob(frames)))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    cold = SessionCache(max_sessions=64)
+    for frame in unpack_frames_blob(blob):
+        cid, carry, nbytes, version = unpack_session_frame(frame)
+        assert cold.put_new(cid, carry, nbytes, version=version)
+    restored = {cid: (carry, nbytes, version)
+                for cid, carry, nbytes, version in cold.snapshot()}
+    assert set(restored) == {cid for cid, *_ in live}
+    for cid, carry, nbytes, version in live:
+        got, got_n, got_v = restored[cid]
+        assert (got_n, got_v) == (nbytes, version)
+        a_leaves = jax.tree_util.tree_leaves(carry)
+        b_leaves = jax.tree_util.tree_leaves(got)
+        assert len(a_leaves) == len(b_leaves)
+        for a, b in zip(a_leaves, b_leaves):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+            assert np.asarray(b).dtype == np.asarray(a).dtype
